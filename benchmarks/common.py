@@ -1,0 +1,46 @@
+"""Shared benchmark fixtures: synthetic road networks at benchmark scale,
+timing helpers, CSV emission (one function per paper table; every row prints
+``name,us_per_call,derived``)."""
+from __future__ import annotations
+
+import functools
+import time
+
+import numpy as np
+
+from repro.core.bngraph import build_bngraph
+from repro.graph.generators import pick_objects, road_network
+
+DEFAULT_GRID = 48  # n = 2304 — CPU-container scale; same trends as Table 2
+
+
+def row(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def time_us(fn, *, repeat: int = 3, number: int = 1) -> float:
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        for _ in range(number):
+            fn()
+        best = min(best, (time.perf_counter() - t0) / number)
+    return best * 1e6
+
+
+@functools.lru_cache(maxsize=8)
+def dataset(grid: int = DEFAULT_GRID, mu: float = 0.005, seed: int = 0):
+    g = road_network(grid, grid, seed=seed)
+    mu_eff = max(mu, 30.0 / g.n)  # keep |M| sensible at small n
+    objects = pick_objects(g.n, mu_eff, seed=seed)
+    return g, objects
+
+
+@functools.lru_cache(maxsize=8)
+def bngraph(grid: int = DEFAULT_GRID, seed: int = 0):
+    g, _ = dataset(grid, seed=seed)
+    return build_bngraph(g)
+
+
+def query_vertices(n: int, count: int = 2000, seed: int = 1) -> np.ndarray:
+    return np.random.default_rng(seed).integers(0, n, size=count).astype(np.int64)

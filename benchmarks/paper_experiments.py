@@ -1,0 +1,272 @@
+"""Reproductions of the paper's Exp-1 ... Exp-10 at container scale.
+
+Every function mirrors one figure/table; rows print ``name,us_per_call,derived``.
+Claims validated (paper §7):
+  Exp-1  KNN-Index query is O(k), ~2 orders below TEN / Dijkstra, flat growth
+  Exp-2  KNN-Index query time independent of object density mu
+  Exp-3  progressive output: i-th result in O(i)
+  Exp-4  Cons+ >> Cons >> Dijkstra-Cons / TEN-Cons construction time
+  Exp-5  index size: KNN-Index ~ n*k entries, TEN dominated by H2H labels
+  Exp-6  indexing time/size grow mildly with k
+  Exp-7  scalability in n
+  Exp-8  update (insert/delete) cost — the paper's known weak spot
+  Exp-9  throughput under BUA+QF and RUA+FCFS mixes
+  Exp-10 min-degree order >> degree/id static orders
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import DEFAULT_GRID, bngraph, dataset, query_vertices, row, time_us
+from repro.core.baselines import TENIndexLite
+from repro.core.bngraph import build_bngraph
+from repro.core.construct_jax import build_knn_index_jax
+from repro.core.index import KNNIndex
+from repro.core.reference import (
+    dijkstra_cons,
+    dijkstra_knn,
+    knn_index_cons,
+    knn_index_cons_plus,
+)
+from repro.core.updates import delete_object, insert_object
+from repro.graph.generators import pick_objects, road_network
+
+
+def _build(k: int, grid: int = DEFAULT_GRID, mu: float = 0.005):
+    g, objects = dataset(grid, mu)
+    bn = bngraph(grid)
+    idx = knn_index_cons_plus(bn, objects, k)
+    return g, objects, bn, idx
+
+
+def exp1_query_vs_k() -> None:
+    g, objects, bn, _ = _build(10)
+    is_obj = np.zeros(g.n, bool)
+    is_obj[objects] = True
+    ten = TENIndexLite(g, objects, 100)
+    qs = query_vertices(g.n, 400)
+    for k in (10, 20, 40, 60, 100):
+        idx = knn_index_cons_plus(bn, objects, k)
+        t_knn = time_us(lambda: [idx.query(int(u), k) for u in qs]) / len(qs)
+        t_ten = time_us(lambda: [ten.knn(int(u), k) for u in qs], repeat=1) / len(qs)
+        t_dij = time_us(
+            lambda: [dijkstra_knn(g, is_obj, k, int(u)) for u in qs[:40]], repeat=1
+        ) / 40
+        row(f"exp1.query.k{k}.knn_index", t_knn, f"k={k}")
+        row(f"exp1.query.k{k}.ten_lite", t_ten, f"k={k};x{t_ten / max(t_knn, 1e-9):.0f}")
+        row(f"exp1.query.k{k}.dijkstra", t_dij, f"k={k};x{t_dij / max(t_knn, 1e-9):.0f}")
+
+
+def exp2_query_vs_mu() -> None:
+    k = 20
+    g, _, bn, _ = _build(k)
+    qs = query_vertices(g.n, 400)
+    for mu in (0.05, 0.02, 0.01, 0.005):
+        objects = pick_objects(g.n, mu, seed=0)
+        if len(objects) <= k:
+            continue
+        idx = knn_index_cons_plus(bn, objects, k)
+        is_obj = np.zeros(g.n, bool)
+        is_obj[objects] = True
+        t_knn = time_us(lambda: [idx.query(int(u)) for u in qs]) / len(qs)
+        t_dij = time_us(
+            lambda: [dijkstra_knn(g, is_obj, k, int(u)) for u in qs[:40]], repeat=1
+        ) / 40
+        row(f"exp2.query.mu{mu}.knn_index", t_knn, f"mu={mu}")
+        row(f"exp2.query.mu{mu}.dijkstra", t_dij, f"mu={mu};x{t_dij / max(t_knn, 1e-9):.0f}")
+
+
+def exp3_progressive() -> None:
+    k = 60
+    g, objects, bn, idx = _build(k)
+    qs = query_vertices(g.n, 200)
+    for i in (5, 15, 30, 45, 60):
+        def first_i():
+            for u in qs:
+                out = []
+                for item in idx.query_progressive(int(u)):
+                    out.append(item)
+                    if len(out) >= i:
+                        break
+        t = time_us(first_i) / len(qs)
+        row(f"exp3.progressive.first{i}", t, f"i={i}")
+
+
+def exp4_indexing_time() -> None:
+    k = 20
+    g, objects = dataset()
+    t0 = time.perf_counter()
+    bn = build_bngraph(g)
+    t_bn = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    knn_index_cons_plus(bn, objects, k)
+    t_plus = time.perf_counter() - t0
+    row("exp4.cons.knn_index_cons_plus", (t_bn + t_plus) * 1e6, "alg3(bidirectional)")
+
+    t0 = time.perf_counter()
+    knn_index_cons(bn, objects, k)
+    t_cons = time.perf_counter() - t0
+    row("exp4.cons.knn_index_cons", (t_bn + t_cons) * 1e6,
+        f"alg2(bottom-up);x{(t_bn + t_cons) / (t_bn + t_plus):.1f}")
+
+    t0 = time.perf_counter()
+    build_knn_index_jax(bn, objects, k, use_pallas=False)
+    t_jax = time.perf_counter() - t0
+    row("exp4.cons.jax_level_sync", (t_bn + t_jax) * 1e6, "device sweeps (CPU backend)")
+
+    t0 = time.perf_counter()
+    dijkstra_cons(g, objects, k)
+    t_dij = time.perf_counter() - t0
+    row("exp4.cons.dijkstra_cons", t_dij * 1e6, f"x{t_dij / (t_bn + t_plus):.1f}")
+
+    t0 = time.perf_counter()
+    ten = TENIndexLite(g, objects, k)
+    t_ten_build = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    ten.build_knn_index()
+    t_ten_cons = time.perf_counter() - t0
+    row("exp4.cons.ten_index", t_ten_build * 1e6,
+        f"h2h-dominated;x{t_ten_build / (t_bn + t_plus):.1f}")
+    row("exp4.cons.ten_index_cons", (t_ten_build + t_ten_cons) * 1e6,
+        "KNN-Index built via TEN queries")
+
+
+def exp5_index_size() -> None:
+    k = 20
+    g, objects, bn, idx = _build(k)
+    ten = TENIndexLite(g, objects, k)
+    knn_b = idx.size_bytes()
+    ten_b = ten.size_bytes()
+    row("exp5.size.knn_index_bytes", knn_b, f"n*k*8={g.n}*{k}*8")
+    row("exp5.size.ten_lite_bytes", ten_b, f"x{ten_b / knn_b:.1f};h2h={ten.size_entries()['h2h_entries']}ent")
+
+
+def exp6_vary_k_build() -> None:
+    g, objects = dataset()
+    bn = bngraph()
+    for k in (10, 20, 40, 60, 100):
+        t0 = time.perf_counter()
+        idx = knn_index_cons_plus(bn, objects, k)
+        dt = time.perf_counter() - t0
+        row(f"exp6.build.k{k}", dt * 1e6, f"size={idx.size_bytes()}B")
+
+
+def exp7_scalability() -> None:
+    k = 20
+    for grid in (24, 32, 48, 64):
+        g = road_network(grid, grid, seed=0)
+        objects = pick_objects(g.n, 0.01, seed=0)
+        t0 = time.perf_counter()
+        bn = build_bngraph(g)
+        knn_index_cons_plus(bn, objects, k)
+        dt = time.perf_counter() - t0
+        row(f"exp7.scale.n{g.n}", dt * 1e6, f"n={g.n};m={g.m}")
+
+
+def exp8_updates() -> None:
+    k = 20
+    g, objects, bn, idx = _build(k)
+    rng = np.random.default_rng(0)
+    mset = set(objects.tolist())
+    ins_t, del_t, n_ins, n_del = 0.0, 0.0, 0, 0
+    for _ in range(300):
+        u = int(rng.integers(0, g.n))
+        if u in mset:
+            if len(mset) <= k + 1:
+                continue
+            t0 = time.perf_counter()
+            delete_object(bn, idx, u)
+            del_t += time.perf_counter() - t0
+            n_del += 1
+            mset.discard(u)
+        else:
+            t0 = time.perf_counter()
+            insert_object(bn, idx, u)
+            ins_t += time.perf_counter() - t0
+            n_ins += 1
+            mset.add(u)
+    row("exp8.update.insert", ins_t / max(n_ins, 1) * 1e6, f"n={n_ins}")
+    row("exp8.update.delete", del_t / max(n_del, 1) * 1e6, f"n={n_del}")
+
+
+def exp9_throughput() -> None:
+    """BUA+QF: batched updates arrive, queries first. RUA+FCFS: random mix.
+    Both arrival models replay the IDENTICAL update sequence (deletes cost
+    ~7x inserts, so differing sequences would swamp the arrival effect)."""
+    k = 20
+    g, objects, bn, idx0 = _build(k)
+    rng = np.random.default_rng(0)
+    qs = query_vertices(g.n, 2000)
+    n_updates = 50
+
+    # one fixed update script, derived against a simulated object set
+    sim = set(objects.tolist())
+    script: list[tuple[int, str]] = []
+    while len(script) < n_updates:
+        u = int(rng.integers(0, g.n))
+        if u in sim:
+            if len(sim) <= k + 1:
+                continue
+            script.append((u, "del"))
+            sim.discard(u)
+        else:
+            script.append((u, "ins"))
+            sim.add(u)
+
+    def apply_update(idx, u, op):
+        if op == "del":
+            delete_object(bn, idx, u)
+        else:
+            insert_object(bn, idx, u)
+
+    # BUA + QF: serve all queries, then apply the update batch
+    idx = idx0.copy()
+    t0 = time.perf_counter()
+    for u in qs:
+        idx.query(int(u))
+    for u, op in script:
+        apply_update(idx, u, op)
+    dt = time.perf_counter() - t0
+    row("exp9.throughput.bua_qf", dt / (len(qs) + n_updates) * 1e6,
+        f"{(len(qs) + n_updates) / dt:.0f}ops/s")
+
+    # RUA + FCFS: same script interleaved 1 update per 40 queries
+    idx = idx0.copy()
+    t0 = time.perf_counter()
+    ups = 0
+    for i, u in enumerate(qs):
+        idx.query(int(u))
+        if i % 40 == 39 and ups < n_updates:
+            apply_update(idx, *script[ups])
+            ups += 1
+    dt = time.perf_counter() - t0
+    row("exp9.throughput.rua_fcfs", dt / (len(qs) + ups) * 1e6,
+        f"{(len(qs) + ups) / dt:.0f}ops/s")
+
+
+def exp10_vertex_orders() -> None:
+    k = 20
+    g, objects = dataset(grid=28)  # static orders blow up fast; small grid
+    for order in ("mindeg", "degree", "id"):
+        t0 = time.perf_counter()
+        bn = build_bngraph(g, order=order)
+        knn_index_cons_plus(bn, objects, k)
+        dt = time.perf_counter() - t0
+        row(f"exp10.order.{order}", dt * 1e6, f"rho={bn.rho};tau={bn.tau}")
+
+
+ALL = [
+    exp1_query_vs_k,
+    exp2_query_vs_mu,
+    exp3_progressive,
+    exp4_indexing_time,
+    exp5_index_size,
+    exp6_vary_k_build,
+    exp7_scalability,
+    exp8_updates,
+    exp9_throughput,
+    exp10_vertex_orders,
+]

@@ -1,0 +1,74 @@
+"""§Roofline: read the dry-run artifacts and emit the per-cell roofline table.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun]
+
+Terms (TPU v5e): compute = FLOPs/(197 TF/s), memory = bytes/(819 GB/s),
+collective = coll_bytes/(50 GB/s link). All per-device (the partitioned HLO
+reports per-device shapes). MODEL_FLOPS = 6*N(*_active)*D for LM cells.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.configs.registry import get_arch
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def model_flops_global(arch_id: str, shape: str) -> float | None:
+    """6*N*D (dense) / 6*N_active*D (MoE) for LM train cells; None otherwise."""
+    arch = get_arch(arch_id)
+    if arch.family != "lm" or shape != "train_4k":
+        return None
+    cfg = arch.make_config()
+    n = cfg.active_param_count()
+    d = 256 * 4096
+    return 6.0 * n * d
+
+
+def load_records(d: Path) -> list[dict]:
+    recs = [json.loads(p.read_text()) for p in sorted(d.glob("*.json"))]
+    return sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+
+
+def render(recs: list[dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | compute_s | memory_s | collective_s | bottleneck | "
+        "MODEL/HLO flops | note |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        t = r["roofline_terms_s"]
+        mf = model_flops_global(r["arch"], r["shape"])
+        ratio = ""
+        if mf is not None and r["per_device"]["flops"]:
+            hlo_global = r["per_device"]["flops"] * r["n_chips"]
+            ratio = f"{mf / hlo_global:.2f}"
+        dom = max(t, key=t.get)
+        frac = t[dom] / max(sum(t.values()), 1e-30)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {t['compute_s']:.3e} | "
+            f"{t['memory_s']:.3e} | {t['collective_s']:.3e} | {dom.replace('_s','')} "
+            f"({frac:.0%}) | {ratio} | |"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    recs = load_records(Path(args.dir))
+    table = render(recs)
+    print(table)
+    if args.out:
+        Path(args.out).write_text(table + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only exp1,exp4] [--skip-kernels]
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma list, e.g. exp1,exp4")
+    ap.add_argument("--skip-kernels", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks import kernel_bench, paper_experiments
+
+    fns = list(paper_experiments.ALL)
+    if not args.skip_kernels:
+        fns += kernel_bench.ALL
+    if args.only:
+        wanted = set(args.only.split(","))
+        fns = [
+            f
+            for f in fns
+            if f.__name__.split("_")[0] in wanted or f.__name__ in wanted
+        ]
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for fn in fns:
+        t1 = time.time()
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001
+            print(f"{fn.__name__},NaN,ERROR:{type(e).__name__}:{e}", file=sys.stderr)
+            raise
+        print(f"# {fn.__name__} done in {time.time() - t1:.1f}s", file=sys.stderr)
+    print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Location-based-service scenario (paper Figure 1 / Exp-9): a running kNN
+service over a road network with mixed query + object-update traffic.
+
+    PYTHONPATH=src python examples/knn_road_service.py [--grid 40] [--k 20]
+
+Simulates a Yelp/Uber-style workload: 95% kNN queries ("nearest coffee"),
+5% object updates (stores opening/closing), under the two arrival models the
+paper benchmarks (BUA+QF and RUA+FCFS), printing throughput for each.
+"""
+import argparse
+import time
+
+import numpy as np
+
+from repro.core.bngraph import build_bngraph
+from repro.core.reference import knn_index_cons_plus
+from repro.core.updates import delete_object, insert_object
+from repro.graph.generators import pick_objects, road_network
+
+
+def run_workload(bn, idx, objects, n_ops: int, update_frac: float, k: int,
+                 mode: str, seed: int = 0) -> float:
+    rng = np.random.default_rng(seed)
+    mset = set(objects.tolist())
+    ops_done = 0
+    queries = rng.integers(0, bn.n, size=n_ops)
+    is_update = rng.random(n_ops) < update_frac
+    t0 = time.perf_counter()
+    if mode == "bua_qf":  # queries first, then the update batch
+        order = np.argsort(is_update, kind="stable")
+    else:  # rua_fcfs: arrival order
+        order = np.arange(n_ops)
+    for i in order:
+        if is_update[i]:
+            v = int(queries[i])
+            if v in mset and len(mset) > k + 1:
+                delete_object(bn, idx, v)
+                mset.discard(v)
+            elif v not in mset:
+                insert_object(bn, idx, v)
+                mset.add(v)
+        else:
+            idx.query(int(queries[i]))
+        ops_done += 1
+    return ops_done / (time.perf_counter() - t0)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--grid", type=int, default=40)
+    ap.add_argument("--k", type=int, default=20)
+    ap.add_argument("--mu", type=float, default=0.02)
+    ap.add_argument("--ops", type=int, default=3000)
+    args = ap.parse_args()
+
+    g = road_network(args.grid, args.grid, seed=0)
+    objects = pick_objects(g.n, args.mu, seed=0)
+    print(f"network: n={g.n} m={g.m}; |M|={len(objects)}; k={args.k}")
+    t0 = time.perf_counter()
+    bn = build_bngraph(g)
+    idx = knn_index_cons_plus(bn, objects, args.k)
+    print(f"index built in {time.perf_counter() - t0:.2f}s "
+          f"({idx.size_bytes() / 1024:.0f} KiB)")
+
+    for mode in ("bua_qf", "rua_fcfs"):
+        thr = run_workload(bn, idx.copy(), objects, args.ops, 0.05, args.k, mode)
+        print(f"{mode:10s}: {thr:,.0f} ops/s (95% queries / 5% updates)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Recsys retrieval example: the paper's top-k machinery reused for the
+xdeepfm `retrieval_cand` cell — score one query against a large candidate
+table and take the exact top-k with the streaming Pallas kernel.
+
+    PYTHONPATH=src python examples/retrieval_recsys.py [--candidates 100000]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+from repro.models import recsys as rc
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--candidates", type=int, default=100_000)
+    ap.add_argument("--k", type=int, default=20)
+    args = ap.parse_args()
+
+    cfg = rc.XDeepFMConfig(
+        name="retrieval-demo", n_sparse=8, embed_dim=16,
+        table_rows=args.candidates, cin_layers=(32, 32), mlp_layers=(64,),
+    )
+    params = rc.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    ids = rng.integers(0, cfg.table_rows, (1, cfg.n_sparse, cfg.bag_size)).astype(np.int32)
+    batch = {"sparse_ids": jnp.asarray(ids), "n_candidates": args.candidates}
+
+    t0 = time.perf_counter()
+    oid, od = rc.retrieval_score(params, batch, cfg, k=args.k, use_pallas=False)
+    jax.block_until_ready(od)
+    t_xla = time.perf_counter() - t0
+    print(f"top-{args.k} of {args.candidates:,} candidates in {t_xla * 1e3:.1f}ms (XLA)")
+    print("ids   :", np.asarray(oid)[0, :8])
+    print("scores:", np.round(np.asarray(od)[0, :8], 3))
+
+    # kernel path (interpret mode on CPU; compiled VMEM pipeline on TPU)
+    oid2, od2 = rc.retrieval_score(params, batch, cfg, k=args.k, use_pallas=True)
+    match = bool((np.asarray(oid) == np.asarray(oid2)).all())
+    print(f"pallas kernel agrees with oracle: {match}")
+
+
+if __name__ == "__main__":
+    main()

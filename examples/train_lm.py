@@ -1,0 +1,77 @@
+"""End-to-end LM training driver: train a transformer for a few hundred steps
+on a learnable Markov stream and watch the loss fall toward the chain entropy.
+
+    PYTHONPATH=src python examples/train_lm.py                  # ~15M params, CPU-sized
+    PYTHONPATH=src python examples/train_lm.py --full --steps 300  # ~100M params
+
+Uses the same step builders / optimizer / checkpointing the production
+launcher uses; on a TPU mesh the identical script runs sharded (the step is
+built through make_lm_train with the mesh's sharding rules).
+"""
+import argparse
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.pipeline import MarkovLMStream
+from repro.distributed.sharding import make_rules
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer as tr
+from repro.optim import adamw
+from repro.train import steps as steps_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--full", action="store_true", help="~100M-param config")
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=64)
+    args = ap.parse_args()
+
+    if args.full:
+        cfg = tr.TransformerConfig(
+            name="lm-100m", n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+            d_head=64, d_ff=2048, vocab=8192, param_dtype=jnp.float32,
+            q_chunk=64, kv_chunk=64,
+        )
+    else:
+        cfg = tr.TransformerConfig(
+            name="lm-15m", n_layers=4, d_model=256, n_heads=8, n_kv_heads=4,
+            d_head=32, d_ff=512, vocab=512, param_dtype=jnp.float32,
+            q_chunk=32, kv_chunk=32,
+        )
+    print(f"model {cfg.name}: {cfg.param_count() / 1e6:.1f}M params")
+
+    branching = 4
+    stream = MarkovLMStream(vocab=cfg.vocab, batch=args.batch, seq=args.seq,
+                            branching=branching)
+    print(f"target loss (chain entropy) = ln({branching}) = {math.log(branching):.3f}")
+
+    mesh = make_host_mesh(data=len(jax.devices()))
+    rules = make_rules(mesh)
+    opt_cfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=20, total_steps=args.steps,
+                                weight_decay=0.01)
+    fn, *_ = steps_mod.make_lm_train(cfg, rules, opt_cfg)
+    step_fn = jax.jit(fn, donate_argnums=(0, 1))
+
+    params = tr.init_params(jax.random.PRNGKey(0), cfg)
+    opt_state = adamw.init(params)
+    t0 = time.time()
+    first = None
+    for step in range(args.steps):
+        batch = jax.tree.map(jnp.asarray, stream.batch_at(step))
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        first = first if first is not None else loss
+        if step % 10 == 0 or step == args.steps - 1:
+            print(f"step {step:4d}  loss {loss:.4f}  ({time.time() - t0:.0f}s)")
+    print(f"\nloss: {first:.3f} -> {loss:.3f} "
+          f"(entropy floor {math.log(branching):.3f})")
+    assert loss < first - 0.5, "training should clearly reduce loss"
+
+
+if __name__ == "__main__":
+    main()

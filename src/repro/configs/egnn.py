@@ -1,0 +1,28 @@
+"""egnn [arXiv:2102.09844]. 4 layers, d_hidden=64, E(n)-equivariant."""
+from repro.configs.common import GNN_SHAPE_META, ArchSpec, gnn_shapes
+from repro.models.gnn.egnn import EGNNConfig
+
+
+def make_config(shape: str = "molecule") -> EGNNConfig:
+    meta = GNN_SHAPE_META[shape]
+    return EGNNConfig(
+        name="egnn",
+        n_layers=4,
+        d_hidden=64,
+        d_feat=meta["d_feat"],
+        n_out=1 if meta["task"] == "energy" else meta["n_classes"],
+        task=meta["task"],
+    )
+
+
+def make_smoke() -> EGNNConfig:
+    return EGNNConfig(name="egnn-smoke", n_layers=2, d_hidden=16, d_feat=8, n_out=1)
+
+
+ARCH = ArchSpec(
+    arch_id="egnn",
+    family="gnn",
+    make_config=make_config,
+    make_smoke=make_smoke,
+    shapes=gnn_shapes(),
+)

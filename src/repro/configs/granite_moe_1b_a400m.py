@@ -1,0 +1,52 @@
+"""granite-moe-1b-a400m [hf:ibm-granite/granite-3.0-1b-a400m-base].
+
+24L d_model=1024 16H (GQA kv=8) d_ff=512/expert vocab=49155, MoE 32 experts
+top-8.
+"""
+import jax.numpy as jnp
+
+from repro.configs.common import ArchSpec, lm_shapes
+from repro.models.transformer import TransformerConfig
+
+
+def make_config() -> TransformerConfig:
+    return TransformerConfig(
+        name="granite-moe-1b-a400m",
+        n_layers=24,
+        d_model=1024,
+        n_heads=16,
+        n_kv_heads=8,
+        d_head=64,
+        d_ff=512,
+        vocab=49155,
+        n_experts=32,
+        moe_top_k=8,
+        param_dtype=jnp.bfloat16,
+    )
+
+
+def make_smoke() -> TransformerConfig:
+    return TransformerConfig(
+        name="granite-moe-smoke",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_head=16,
+        d_ff=32,
+        vocab=128,
+        n_experts=4,
+        moe_top_k=2,
+        param_dtype=jnp.float32,
+        q_chunk=16,
+        kv_chunk=16,
+    )
+
+
+ARCH = ArchSpec(
+    arch_id="granite-moe-1b-a400m",
+    family="lm",
+    make_config=make_config,
+    make_smoke=make_smoke,
+    shapes=lm_shapes(full_attention=True),
+)

@@ -1,0 +1,45 @@
+"""internlm2-20b [arXiv:2403.17297]. 48L d_model=6144 48H (GQA kv=8)
+d_ff=16384 vocab=92544."""
+import jax.numpy as jnp
+
+from repro.configs.common import ArchSpec, lm_shapes
+from repro.models.transformer import TransformerConfig
+
+
+def make_config() -> TransformerConfig:
+    return TransformerConfig(
+        name="internlm2-20b",
+        n_layers=48,
+        d_model=6144,
+        n_heads=48,
+        n_kv_heads=8,
+        d_head=128,
+        d_ff=16384,
+        vocab=92544,
+        param_dtype=jnp.bfloat16,
+    )
+
+
+def make_smoke() -> TransformerConfig:
+    return TransformerConfig(
+        name="internlm2-smoke",
+        n_layers=2,
+        d_model=64,
+        n_heads=8,
+        n_kv_heads=4,
+        d_head=8,
+        d_ff=128,
+        vocab=128,
+        param_dtype=jnp.float32,
+        q_chunk=16,
+        kv_chunk=16,
+    )
+
+
+ARCH = ArchSpec(
+    arch_id="internlm2-20b",
+    family="lm",
+    make_config=make_config,
+    make_smoke=make_smoke,
+    shapes=lm_shapes(full_attention=True),
+)

@@ -1,0 +1,73 @@
+"""The paper's own architecture: KNN-Index over a USA-scale road network.
+
+Two production cells (in addition to the 40 assigned cells):
+  build_sweep : one level-synchronous construction step at full scale
+                (n = 2^24 vertices ~ USA's 23.9M, k = 20 = the paper's
+                default, level batch 131072, tau = 32 > every Table-2 tau)
+  serve_batch : 2^20 concurrent kNN queries against the sharded index
+"""
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.configs.common import SDS, ArchSpec, ShapeCell
+
+
+@dataclasses.dataclass(frozen=True)
+class KNNIndexConfig:
+    name: str
+    n_vertices: int = 1 << 24
+    k: int = 20
+    level_batch: int = 131072
+    tau: int = 32
+    query_batch: int = 1 << 20
+
+
+def make_config() -> KNNIndexConfig:
+    return KNNIndexConfig(name="knn-index-usa")
+
+
+def make_smoke() -> KNNIndexConfig:
+    return KNNIndexConfig(
+        name="knn-index-smoke", n_vertices=512, k=5, level_batch=64, tau=4, query_batch=32
+    )
+
+
+def _rows(n: int) -> int:
+    """Index rows incl. the dummy pad row, padded to a 512-device multiple."""
+    return ((n + 1 + 511) // 512) * 512
+
+
+def _build_specs(cfg: KNNIndexConfig):
+    s, t, k = cfg.level_batch, cfg.tau, cfg.k
+    rows = _rows(cfg.n_vertices)
+    return {
+        "verts": SDS((s,), jnp.int32),
+        "nbr": SDS((s, t), jnp.int32),
+        "w": SDS((s, t), jnp.float32),
+        "extra_ids": SDS((s, k), jnp.int32),
+        "extra_d": SDS((s, k), jnp.float32),
+        "vk_ids": SDS((rows, k), jnp.int32),
+        "vk_d": SDS((rows, k), jnp.float32),
+    }
+
+
+def _serve_specs(cfg: KNNIndexConfig):
+    rows = _rows(cfg.n_vertices)
+    return {
+        "vk_ids": SDS((rows, cfg.k), jnp.int32),
+        "vk_d": SDS((rows, cfg.k), jnp.float32),
+        "queries": SDS((cfg.query_batch,), jnp.int32),
+    }
+
+
+ARCH = ArchSpec(
+    arch_id="knn-index",
+    family="knn",
+    make_config=make_config,
+    make_smoke=make_smoke,
+    shapes={
+        "build_sweep": ShapeCell("knn_build", _build_specs),
+        "serve_batch": ShapeCell("knn_serve", _serve_specs),
+    },
+)

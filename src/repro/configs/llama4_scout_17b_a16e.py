@@ -1,0 +1,52 @@
+"""llama4-scout-17b-a16e [hf:meta-llama/Llama-4-Scout-17B-16E; unverified].
+
+48L d_model=5120 40H (GQA kv=8) d_ff=8192/expert vocab=202048, MoE 16 experts
+top-1, early fusion (modality frontend stubbed per assignment: text tokens).
+"""
+import jax.numpy as jnp
+
+from repro.configs.common import ArchSpec, lm_shapes
+from repro.models.transformer import TransformerConfig
+
+
+def make_config() -> TransformerConfig:
+    return TransformerConfig(
+        name="llama4-scout-17b-a16e",
+        n_layers=48,
+        d_model=5120,
+        n_heads=40,
+        n_kv_heads=8,
+        d_head=128,
+        d_ff=8192,
+        vocab=202048,
+        n_experts=16,
+        moe_top_k=1,
+        param_dtype=jnp.bfloat16,
+    )
+
+
+def make_smoke() -> TransformerConfig:
+    return TransformerConfig(
+        name="llama4-scout-smoke",
+        n_layers=2,
+        d_model=64,
+        n_heads=8,
+        n_kv_heads=2,
+        d_head=8,
+        d_ff=64,
+        vocab=256,
+        n_experts=4,
+        moe_top_k=1,
+        param_dtype=jnp.float32,
+        q_chunk=16,
+        kv_chunk=16,
+    )
+
+
+ARCH = ArchSpec(
+    arch_id="llama4-scout-17b-a16e",
+    family="lm",
+    make_config=make_config,
+    make_smoke=make_smoke,
+    shapes=lm_shapes(full_attention=True),
+)

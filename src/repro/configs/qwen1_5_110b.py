@@ -1,0 +1,47 @@
+"""qwen1.5-110b [hf:Qwen/Qwen1.5 family]. 80L d_model=8192 64H (GQA kv=8)
+d_ff=49152 vocab=152064, QKV bias."""
+import jax.numpy as jnp
+
+from repro.configs.common import ArchSpec, lm_shapes
+from repro.models.transformer import TransformerConfig
+
+
+def make_config() -> TransformerConfig:
+    return TransformerConfig(
+        name="qwen1.5-110b",
+        n_layers=80,
+        d_model=8192,
+        n_heads=64,
+        n_kv_heads=8,
+        d_head=128,
+        d_ff=49152,
+        vocab=152064,
+        qkv_bias=True,
+        param_dtype=jnp.bfloat16,
+    )
+
+
+def make_smoke() -> TransformerConfig:
+    return TransformerConfig(
+        name="qwen1.5-110b-smoke",
+        n_layers=2,
+        d_model=64,
+        n_heads=8,
+        n_kv_heads=2,
+        d_head=8,
+        d_ff=128,
+        vocab=128,
+        qkv_bias=True,
+        param_dtype=jnp.float32,
+        q_chunk=16,
+        kv_chunk=16,
+    )
+
+
+ARCH = ArchSpec(
+    arch_id="qwen1.5-110b",
+    family="lm",
+    make_config=make_config,
+    make_smoke=make_smoke,
+    shapes=lm_shapes(full_attention=True),
+)

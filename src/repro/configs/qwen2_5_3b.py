@@ -1,0 +1,47 @@
+"""qwen2.5-3b [hf:Qwen/Qwen2.5 family]. 36L d_model=2048 16H (GQA kv=2)
+d_ff=11008 vocab=151936, QKV bias."""
+import jax.numpy as jnp
+
+from repro.configs.common import ArchSpec, lm_shapes
+from repro.models.transformer import TransformerConfig
+
+
+def make_config() -> TransformerConfig:
+    return TransformerConfig(
+        name="qwen2.5-3b",
+        n_layers=36,
+        d_model=2048,
+        n_heads=16,
+        n_kv_heads=2,
+        d_head=128,
+        d_ff=11008,
+        vocab=151936,
+        qkv_bias=True,
+        param_dtype=jnp.bfloat16,
+    )
+
+
+def make_smoke() -> TransformerConfig:
+    return TransformerConfig(
+        name="qwen2.5-smoke",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_head=16,
+        d_ff=96,
+        vocab=128,
+        qkv_bias=True,
+        param_dtype=jnp.float32,
+        q_chunk=16,
+        kv_chunk=16,
+    )
+
+
+ARCH = ArchSpec(
+    arch_id="qwen2.5-3b",
+    family="lm",
+    make_config=make_config,
+    make_smoke=make_smoke,
+    shapes=lm_shapes(full_attention=True),
+)

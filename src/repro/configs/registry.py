@@ -1,0 +1,57 @@
+"""Architecture registry: --arch <id> resolution for launcher/dry-run/tests."""
+from __future__ import annotations
+
+from repro.configs import (
+    egnn,
+    gcn_cora,
+    granite_moe_1b_a400m,
+    internlm2_20b,
+    knn_index,
+    llama4_scout_17b_a16e,
+    mace,
+    nequip,
+    qwen1_5_110b,
+    qwen2_5_3b,
+    xdeepfm,
+)
+from repro.configs.common import ArchSpec
+
+_ARCHS: dict[str, ArchSpec] = {
+    a.arch_id: a
+    for a in [
+        granite_moe_1b_a400m.ARCH,
+        llama4_scout_17b_a16e.ARCH,
+        qwen2_5_3b.ARCH,
+        internlm2_20b.ARCH,
+        qwen1_5_110b.ARCH,
+        egnn.ARCH,
+        gcn_cora.ARCH,
+        nequip.ARCH,
+        mace.ARCH,
+        xdeepfm.ARCH,
+        knn_index.ARCH,
+    ]
+}
+
+ASSIGNED = [a for a in _ARCHS if a != "knn-index"]
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    if arch_id not in _ARCHS:
+        raise KeyError(f"unknown arch {arch_id!r}; available: {sorted(_ARCHS)}")
+    return _ARCHS[arch_id]
+
+
+def all_archs() -> list[ArchSpec]:
+    return list(_ARCHS.values())
+
+
+def all_cells(include_skipped: bool = False):
+    """Every (arch, shape) cell; skipped cells carry their skip reason."""
+    out = []
+    for a in _ARCHS.values():
+        for shape, cell in a.shapes.items():
+            if cell.skip and not include_skipped:
+                continue
+            out.append((a, shape, cell))
+    return out

@@ -1,0 +1,40 @@
+"""xdeepfm [arXiv:1803.05170]. 39 sparse fields, embed_dim=10,
+CIN 200-200-200, MLP 400-400. Tables: 10^6 rows per field (row-sharded)."""
+from repro.configs.common import ArchSpec, recsys_shapes
+from repro.models.recsys import XDeepFMConfig
+
+_BAG = 3
+
+
+def make_config() -> XDeepFMConfig:
+    return XDeepFMConfig(
+        name="xdeepfm",
+        n_sparse=39,
+        embed_dim=10,
+        table_rows=1_000_000,
+        cin_layers=(200, 200, 200),
+        mlp_layers=(400, 400),
+        multi_hot_fields=4,
+        bag_size=_BAG,
+    )
+
+
+def make_smoke() -> XDeepFMConfig:
+    return XDeepFMConfig(
+        name="xdeepfm-smoke",
+        n_sparse=6,
+        embed_dim=4,
+        table_rows=64,
+        cin_layers=(8, 8),
+        mlp_layers=(16,),
+        bag_size=_BAG,
+    )
+
+
+ARCH = ArchSpec(
+    arch_id="xdeepfm",
+    family="recsys",
+    make_config=make_config,
+    make_smoke=make_smoke,
+    shapes=recsys_shapes(39, _BAG),
+)

@@ -1,0 +1,181 @@
+"""Level-synchronous TPU construction of the KNN-Index (Algorithm 3, batched).
+
+The paper's bidirectional construction processes vertices one at a time in
+rank order. The only true dependency is through BNS^< (bottom-up sweep) or
+BNS^> (top-down sweep), so vertices sharing a DAG level are independent and
+are processed as one fully-vectorised device step:
+
+    gather neighbor rows -> shift by edge weight -> dedup top-k merge -> scatter
+
+The merge is the `topk_merge` Pallas kernel (k rounds of VPU min-selection
+over a VMEM candidate tile). Levels are padded to bucketed shapes (powers of
+two) so the whole build compiles to a few dozen XLA programs regardless of n.
+
+Value-equivalence with the sequential reference is exact (tested): a level
+only ever reads rows written by strictly earlier levels — the same partial
+order the paper's total rank refines.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bngraph import BNGraph
+from repro.core.index import KNNIndex
+from repro.kernels import ops
+
+_INF = np.float32(np.inf)
+
+
+def _next_pow2(x: int, lo: int = 8) -> int:
+    return max(lo, 1 << (max(1, x) - 1).bit_length())
+
+
+@dataclasses.dataclass(frozen=True)
+class LevelBatch:
+    verts: np.ndarray    # (S,) int32, padded with n (dummy row id)
+    nbr: np.ndarray      # (S, T) int32, padded with -1
+    w: np.ndarray        # (S, T) float32, padded with +inf
+    size: int            # true number of vertices in this level
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepPlan:
+    n: int
+    levels: list[LevelBatch]
+    occupancy: float  # true cells / padded cells (padding-waste metric)
+
+
+def prepare_sweep(bn: BNGraph, direction: str) -> SweepPlan:
+    """Host-side schedule extraction: bucket-padded per-level batches."""
+    if direction == "up":
+        level_of, ids_tab, w_tab = bn.level_up, bn.lo_ids, bn.lo_w
+    elif direction == "down":
+        level_of, ids_tab, w_tab = bn.level_down, bn.hi_ids, bn.hi_w
+    else:
+        raise ValueError(direction)
+    n = bn.n
+    nlev = int(level_of.max()) + 1 if n else 0
+    deg = (ids_tab >= 0).sum(axis=1)
+    levels: list[LevelBatch] = []
+    true_cells = 0
+    pad_cells = 0
+    order = np.argsort(level_of, kind="stable")
+    bounds = np.searchsorted(level_of[order], np.arange(nlev + 1))
+    for lv in range(nlev):
+        vs = order[bounds[lv] : bounds[lv + 1]].astype(np.int32)
+        if vs.size == 0:
+            continue
+        t_true = int(deg[vs].max()) if vs.size else 0
+        s_pad = _next_pow2(len(vs))
+        t_pad = _next_pow2(t_true, lo=1) if t_true else 1
+        verts = np.full(s_pad, n, dtype=np.int32)
+        verts[: len(vs)] = vs
+        nbr = np.full((s_pad, t_pad), -1, dtype=np.int32)
+        w = np.full((s_pad, t_pad), _INF, dtype=np.float32)
+        nbr[: len(vs), :t_true] = ids_tab[vs][:, :t_true]
+        w[: len(vs), :t_true] = w_tab[vs][:, :t_true].astype(np.float32)
+        w[nbr < 0] = _INF
+        levels.append(LevelBatch(verts=verts, nbr=nbr, w=w, size=len(vs)))
+        true_cells += int(deg[vs].sum())
+        pad_cells += s_pad * t_pad
+    occ = true_cells / max(1, pad_cells)
+    return SweepPlan(n=n, levels=levels, occupancy=occ)
+
+
+def _sweep_step(verts, nbr, w, extra_ids, extra_d, vk_ids, vk_d, *, k: int, use_pallas: bool):
+    """One level: gather -> shift -> dedup-top-k merge -> scatter."""
+    s, t = nbr.shape
+    valid = nbr >= 0
+    nbr_c = jnp.where(valid, nbr, vk_ids.shape[0] - 1)  # dummy row
+    g_ids = vk_ids[nbr_c]                       # (S, T, k)
+    g_d = w[..., None] + vk_d[nbr_c]            # (S, T, k)
+    g_ids = jnp.where(valid[..., None], g_ids, -1)
+    cand_ids = jnp.concatenate([g_ids.reshape(s, t * k), extra_ids], axis=1)
+    cand_d = jnp.concatenate([g_d.reshape(s, t * k), extra_d], axis=1)
+    m_ids, m_d = ops.topk_merge(cand_ids, cand_d, k, use_pallas=use_pallas)
+    vk_ids = vk_ids.at[verts].set(m_ids)
+    vk_d = vk_d.at[verts].set(m_d)
+    return vk_ids, vk_d
+
+
+_sweep_step_jit = jax.jit(
+    _sweep_step,
+    static_argnames=("k", "use_pallas"),
+    donate_argnums=(5, 6),
+)
+
+
+def run_sweep(
+    plan: SweepPlan,
+    extra_ids_full: np.ndarray,  # (n, E) per-vertex extra candidates
+    extra_d_full: np.ndarray,    # (n, E)
+    init_ids: np.ndarray | None,
+    init_d: np.ndarray | None,
+    k: int,
+    *,
+    use_pallas: bool = True,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Run one direction of the construction. Returns (n, k) id/dist arrays.
+
+    extra_*_full supply the non-neighbor candidate terms of Lemmas 5.12/5.21:
+    bottom-up E=1 (the vertex itself when it is an object); top-down E=k (the
+    vertex's own V_k^< row).
+    """
+    n = plan.n
+    if init_ids is None:
+        vk_ids = jnp.full((n + 1, k), -1, jnp.int32)
+        vk_d = jnp.full((n + 1, k), jnp.inf, jnp.float32)
+    else:
+        vk_ids = jnp.concatenate([jnp.asarray(init_ids, jnp.int32), jnp.full((1, k), -1, jnp.int32)])
+        vk_d = jnp.concatenate([jnp.asarray(init_d, jnp.float32), jnp.full((1, k), jnp.inf, jnp.float32)])
+    e = extra_ids_full.shape[1]
+    ex_ids_pad = np.concatenate([extra_ids_full, np.full((1, e), -1, np.int32)])
+    ex_d_pad = np.concatenate([extra_d_full, np.full((1, e), _INF, np.float32)])
+    for lb in plan.levels:
+        extra_ids = jnp.asarray(ex_ids_pad[lb.verts])
+        extra_d = jnp.asarray(ex_d_pad[lb.verts])
+        vk_ids, vk_d = _sweep_step_jit(
+            jnp.asarray(lb.verts),
+            jnp.asarray(lb.nbr),
+            jnp.asarray(lb.w),
+            extra_ids,
+            extra_d,
+            vk_ids,
+            vk_d,
+            k=k,
+            use_pallas=use_pallas,
+        )
+    return np.asarray(vk_ids[:n]), np.asarray(vk_d[:n])
+
+
+def build_knn_index_jax(
+    bn: BNGraph, objects: np.ndarray, k: int, *, use_pallas: bool = True
+) -> KNNIndex:
+    """Algorithm 3, level-batched on device: V_k^< sweep up, V_k sweep down."""
+    n = bn.n
+    is_obj = np.zeros(n, dtype=bool)
+    is_obj[objects] = True
+
+    # ---- bottom-up: V_k^< (Lemma 5.12) ----
+    plan_up = prepare_sweep(bn, "up")
+    own_ids = np.where(is_obj, np.arange(n, dtype=np.int32), -1)[:, None]
+    own_d = np.where(is_obj, np.float32(0), _INF)[:, None].astype(np.float32)
+    vkl_ids, vkl_d = run_sweep(plan_up, own_ids, own_d, None, None, k, use_pallas=use_pallas)
+
+    # ---- top-down: V_k (Lemma 5.21) ----
+    plan_down = prepare_sweep(bn, "down")
+    vk_ids, vk_d = run_sweep(
+        plan_down, vkl_ids, vkl_d, None, None, k, use_pallas=use_pallas
+    )
+    dists = np.where(vk_ids >= 0, vk_d.astype(np.float64), np.inf)
+    return KNNIndex(ids=np.array(vk_ids), dists=np.array(dists), k=k)
+
+
+def batched_query(vk_ids: jax.Array, vk_d: jax.Array, queries: jax.Array):
+    """Device-side batched kNN query: pure row gather (Theorem 4.3, O(k))."""
+    return vk_ids[queries], vk_d[queries]

@@ -1,0 +1,78 @@
+"""KNN-Index structure (Definition 4.1) and query processing (§4.1).
+
+The index is exactly what the paper stores: for every vertex v, the top-k
+nearest candidate objects in increasing distance order. Query = O(k) scan
+(Theorem 4.3, optimal); progressive output of the i-th result in O(i)
+(Theorem 4.4); size O(n*k) (Theorem 4.5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import numpy as np
+
+PAD_ID = -1
+PAD_DIST = np.inf
+
+
+@dataclasses.dataclass
+class KNNIndex:
+    """ids[v, i] = i-th nearest object of v; dists[v, i] = its distance."""
+
+    ids: np.ndarray    # (n, k) int32, PAD_ID padded
+    dists: np.ndarray  # (n, k) float64, PAD_DIST padded
+    k: int
+
+    @property
+    def n(self) -> int:
+        return int(self.ids.shape[0])
+
+    def query(self, u: int, k: int | None = None) -> list[tuple[int, float]]:
+        """Answer a kNN query by scanning the u-th row — O(k), Theorem 4.3."""
+        kk = self.k if k is None else min(k, self.k)
+        row_ids = self.ids[u, :kk]
+        row_d = self.dists[u, :kk]
+        sel = row_ids != PAD_ID
+        return list(zip(row_ids[sel].tolist(), row_d[sel].tolist()))
+
+    def query_progressive(self, u: int, k: int | None = None) -> Iterator[tuple[int, float]]:
+        """Progressive query processing: yields the i-th result in O(1) more
+        work after the (i-1)-th (Theorem 4.4, incremental polynomial)."""
+        kk = self.k if k is None else min(k, self.k)
+        for i in range(kk):
+            v = int(self.ids[u, i])
+            if v == PAD_ID:
+                return
+            yield v, float(self.dists[u, i])
+
+    def size_bytes(self, id_bytes: int = 4, dist_bytes: int = 4) -> int:
+        """Index size as the paper counts it (Exp-5/6): n*k (id+dist) entries."""
+        return self.n * self.k * (id_bytes + dist_bytes)
+
+    def copy(self) -> "KNNIndex":
+        return KNNIndex(ids=self.ids.copy(), dists=self.dists.copy(), k=self.k)
+
+
+def index_from_lists(n: int, k: int, rows: list[list[tuple[int, float]]]) -> KNNIndex:
+    ids = np.full((n, k), PAD_ID, dtype=np.int32)
+    dists = np.full((n, k), PAD_DIST, dtype=np.float64)
+    for v, row in enumerate(rows):
+        for i, (obj, d) in enumerate(row[:k]):
+            ids[v, i] = obj
+            dists[v, i] = d
+    return KNNIndex(ids=ids, dists=dists, k=k)
+
+
+def indices_equivalent(a: KNNIndex, b: KNNIndex, *, atol: float = 1e-9) -> bool:
+    """Equality up to ties: the distance rows must match exactly; ids may
+    differ only where distances tie."""
+    if a.n != b.n or a.k != b.k:
+        return False
+    if not np.allclose(
+        np.where(np.isinf(a.dists), -1.0, a.dists),
+        np.where(np.isinf(b.dists), -1.0, b.dists),
+        atol=atol,
+    ):
+        return False
+    return True

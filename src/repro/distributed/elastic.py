@@ -1,0 +1,65 @@
+"""Elastic fault tolerance: failure detection -> re-mesh -> reshard -> resume.
+
+On real fleets the runtime learns about lost hosts from the coordinator; here
+`surviving_mesh` rebuilds the largest power-of-two mesh from whatever devices
+remain, and resume is checkpoint-restore under the new mesh's shardings (see
+checkpoint/manager.restore(shardings=...)). The deterministic, step-indexed
+data pipeline (data/pipeline.py) makes the resumed run bit-identical modulo
+the re-tiling.
+
+Recovery contract (1000+-node posture):
+  1. heartbeat loss on host H -> controller broadcasts epoch bump
+  2. all hosts abort in-flight step (steps are idempotent: params/opt are
+     only committed at step end)
+  3. controller builds surviving mesh (drop H's slice; shrink the data axis —
+     the model axis is left intact so TP groups stay whole)
+  4. every host restores the latest checkpoint under the new shardings
+  5. training resumes at checkpoint step; lost optimizer progress is bounded
+     by the checkpoint cadence
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+from jax.sharding import Mesh
+
+
+def surviving_mesh(devices: Sequence, model_axis: int, *, pod_axis: int = 1) -> Mesh:
+    """Largest (pod, data, model)-factorable mesh from surviving devices.
+
+    Keeps `model_axis` fixed (TP groups must stay whole: expert/head shards
+    are not re-partitionable without re-sharding params, which restore does
+    anyway, but keeping TP fixed keeps the restored layout identical) and
+    shrinks data parallelism to the largest fit.
+    """
+    n = len(devices)
+    if n < model_axis:
+        raise ValueError(f"cannot keep model axis {model_axis} with {n} devices")
+    data_axis = n // model_axis
+    # largest power of two <= data_axis keeps collective groups balanced
+    data_axis = 1 << (data_axis.bit_length() - 1)
+    use = devices[: pod_axis * data_axis * model_axis]
+    import numpy as np
+
+    arr = np.array(use).reshape(pod_axis, data_axis, model_axis) if pod_axis > 1 else np.array(
+        use
+    ).reshape(data_axis, model_axis)
+    names = ("pod", "data", "model") if pod_axis > 1 else ("data", "model")
+    return Mesh(arr, names)
+
+
+def simulate_failures(devices: Sequence, lost: int) -> list:
+    """Drop `lost` devices (the tail host's slice) — test harness hook."""
+    return list(devices[: len(devices) - lost])
+
+
+def global_batch_for(mesh: Mesh, per_device_batch: int) -> int:
+    """Elastic batch scaling: keep per-device batch fixed, let the global
+    batch track the surviving data-parallel width (linear-scaling rule)."""
+    data = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.shape:
+            data *= mesh.shape[ax]
+    return per_device_batch * data

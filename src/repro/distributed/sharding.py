@@ -1,0 +1,78 @@
+"""Sharding rules: logical parallelism axes -> concrete mesh axes.
+
+One ShardingRules instance describes how a family shards on a given mesh:
+  fsdp : axis (tuple) over which parameters/optimizer state are fully sharded
+         (ZeRO-3 style) — ('pod','data') on the multi-pod mesh.
+  tp   : tensor-parallel axis ('model') for head/ffn/expert/vocab sharding.
+  batch: axes carrying the global batch.
+
+Model code receives a rules object and calls rules.constrain(...) at block
+boundaries; param_specs(cfg, rules) builds the parameter PartitionSpec tree.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    mesh: Mesh
+    fsdp: tuple[str, ...] | str | None
+    tp: str | None
+    batch: tuple[str, ...] | str | None
+
+    @property
+    def tp_size(self) -> int:
+        if self.tp is None:
+            return 1
+        return int(self.mesh.shape[self.tp])
+
+    @property
+    def fsdp_size(self) -> int:
+        if self.fsdp is None:
+            return 1
+        axes = (self.fsdp,) if isinstance(self.fsdp, str) else self.fsdp
+        return int(math.prod(self.mesh.shape[a] for a in axes))
+
+    @property
+    def batch_size_divisor(self) -> int:
+        if self.batch is None:
+            return 1
+        axes = (self.batch,) if isinstance(self.batch, str) else self.batch
+        return int(math.prod(self.mesh.shape[a] for a in axes))
+
+    def heads_axis(self, n_heads: int):
+        return self.tp if (self.tp and n_heads % self.tp_size == 0) else None
+
+    def ax(self, axis, dim: int):
+        """axis if it evenly divides dim, else None (explicit in_shardings
+        require divisibility; constraints inside jit do not)."""
+        if axis is None:
+            return None
+        axes = (axis,) if isinstance(axis, str) else tuple(axis)
+        size = int(math.prod(self.mesh.shape[a] for a in axes))
+        return axis if dim % size == 0 else None
+
+    def constrain(self, x: jax.Array, spec: P) -> jax.Array:
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+    def sharding(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+
+def make_rules(mesh: Mesh) -> ShardingRules:
+    """Default rules for a (pod?, data, model) mesh."""
+    names = mesh.axis_names
+    batch = tuple(a for a in ("pod", "data") if a in names) or None
+    tp = "model" if "model" in names else None
+    return ShardingRules(mesh=mesh, fsdp=batch, tp=tp, batch=batch)
+
+
+def divisible_fsdp_axis(rules: ShardingRules, dim: int):
+    """fsdp axes only when they divide dim (used for odd embedding rows)."""
+    return rules.fsdp if dim % max(1, rules.fsdp_size) == 0 else None

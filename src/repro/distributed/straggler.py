@@ -1,0 +1,51 @@
+"""Straggler mitigation for synchronous SPMD training.
+
+At 1000+ nodes the step time is the max over hosts; two mitigations ship:
+
+1. Deterministic step-skip barrier: hosts exchange a 1-bit "on pace" flag via
+   a tiny psum; when more than `quorum` hosts are behind the deadline the
+   fleet deterministically skips to the next step boundary (the step-indexed
+   data pipeline makes every host skip identically — no coordinator needed).
+
+2. Backup-shard execution for the KNN-Index build sweeps: each level batch is
+   padded to bucketed shapes, so a slow host's shard can be re-executed by
+   its data-parallel neighbor from the same immutable level inputs (work is
+   pure + idempotent); the scatter of duplicate rows is last-writer-wins with
+   identical values.
+
+The flag exchange is the only runtime cost: one f32 all-reduce per step,
+amortised to noise. This module provides the in-step primitives; the policy
+loop lives in launch/train.py.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def pace_flag(step_start: float, deadline_s: float) -> jnp.ndarray:
+    """1.0 if this host hit its deadline, else 0.0 (host-side measurement)."""
+    return jnp.asarray(1.0 if (time.monotonic() - step_start) <= deadline_s else 0.0)
+
+
+def quorum_ok(flags_mean: jax.Array, quorum: float = 0.95) -> bool:
+    """Fleet proceeds when >= quorum of hosts are on pace."""
+    return bool(flags_mean >= quorum)
+
+
+class StepTimer:
+    """EWMA of step wall time; deadline = mean * tolerance."""
+
+    def __init__(self, tolerance: float = 1.5, alpha: float = 0.1):
+        self.mean: float | None = None
+        self.tolerance = tolerance
+        self.alpha = alpha
+
+    def update(self, dt: float) -> None:
+        self.mean = dt if self.mean is None else (1 - self.alpha) * self.mean + self.alpha * dt
+
+    @property
+    def deadline(self) -> float:
+        return float("inf") if self.mean is None else self.mean * self.tolerance

@@ -1,0 +1,117 @@
+"""CSR graph substrate for road networks.
+
+Undirected weighted graphs stored in CSR form. All the paper's structures
+(BN-Graph, KNN-Index) are built on top of this representation; the JAX layers
+consume the padded-dense views derived from it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """Undirected weighted graph in CSR form (each edge stored twice)."""
+
+    n: int
+    indptr: np.ndarray  # (n+1,) int64
+    indices: np.ndarray  # (2m,) int32 neighbor ids
+    weights: np.ndarray  # (2m,) float64 edge weights
+
+    @property
+    def m(self) -> int:
+        return int(self.indices.shape[0] // 2)
+
+    def neighbors(self, v: int) -> tuple[np.ndarray, np.ndarray]:
+        s, e = self.indptr[v], self.indptr[v + 1]
+        return self.indices[s:e], self.weights[s:e]
+
+    def degree(self, v: int) -> int:
+        return int(self.indptr[v + 1] - self.indptr[v])
+
+    def degrees(self) -> np.ndarray:
+        return np.diff(self.indptr)
+
+    def edge_list(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(u, v, w) with u < v, each undirected edge once."""
+        src = np.repeat(np.arange(self.n, dtype=np.int32), np.diff(self.indptr))
+        mask = src < self.indices
+        return src[mask], self.indices[mask], self.weights[mask]
+
+    def adjacency_dicts(self) -> list[dict[int, float]]:
+        """Mutable dict-of-dicts adjacency (used by the elimination passes)."""
+        adj: list[dict[int, float]] = [dict() for _ in range(self.n)]
+        for v in range(self.n):
+            s, e = self.indptr[v], self.indptr[v + 1]
+            for u, w in zip(self.indices[s:e].tolist(), self.weights[s:e].tolist()):
+                old = adj[v].get(u)
+                if old is None or w < old:
+                    adj[v][u] = w
+        return adj
+
+    def to_dense_padded(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Padded (n, dmax) neighbor/weight tables; pad id = -1, pad w = +inf."""
+        deg = self.degrees()
+        dmax = int(deg.max()) if self.n else 0
+        nbr = np.full((self.n, dmax), -1, dtype=np.int32)
+        wts = np.full((self.n, dmax), np.inf, dtype=np.float64)
+        for v in range(self.n):
+            s, e = self.indptr[v], self.indptr[v + 1]
+            nbr[v, : e - s] = self.indices[s:e]
+            wts[v, : e - s] = self.weights[s:e]
+        return nbr, wts, deg
+
+
+def from_edges(n: int, edges: Iterable[tuple[int, int, float]]) -> Graph:
+    """Build a Graph from an iterable of (u, v, w); parallel edges keep min w."""
+    best: dict[tuple[int, int], float] = {}
+    for u, v, w in edges:
+        if u == v:
+            continue
+        key = (u, v) if u < v else (v, u)
+        old = best.get(key)
+        if old is None or w < old:
+            best[key] = float(w)
+    us = np.empty(2 * len(best), dtype=np.int32)
+    vs = np.empty(2 * len(best), dtype=np.int32)
+    ws = np.empty(2 * len(best), dtype=np.float64)
+    for i, ((u, v), w) in enumerate(best.items()):
+        us[2 * i], vs[2 * i], ws[2 * i] = u, v, w
+        us[2 * i + 1], vs[2 * i + 1], ws[2 * i + 1] = v, u, w
+    order = np.lexsort((vs, us))
+    us, vs, ws = us[order], vs[order], ws[order]
+    indptr = np.zeros(n + 1, dtype=np.int64)
+    np.add.at(indptr, us + 1, 1)
+    indptr = np.cumsum(indptr)
+    return Graph(n=n, indptr=indptr, indices=vs, weights=ws)
+
+
+def from_adjacency_dicts(adj: Sequence[dict[int, float]]) -> Graph:
+    n = len(adj)
+    edges = []
+    for u, nbrs in enumerate(adj):
+        for v, w in nbrs.items():
+            if u < v:
+                edges.append((u, v, w))
+    return from_edges(n, edges)
+
+
+def is_connected(g: Graph) -> bool:
+    if g.n == 0:
+        return True
+    seen = np.zeros(g.n, dtype=bool)
+    stack = [0]
+    seen[0] = True
+    count = 1
+    while stack:
+        v = stack.pop()
+        nbrs, _ = g.neighbors(v)
+        for u in nbrs:
+            if not seen[u]:
+                seen[u] = True
+                count += 1
+                stack.append(int(u))
+    return count == g.n

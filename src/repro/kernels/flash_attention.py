@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: flash attention forward (GQA-aware).
+
+The roofline analysis (EXPERIMENTS.md §Perf) shows the pure-jnp chunked
+attention is memory-bound: the (q_chunk, kv_chunk) probability blocks
+materialise in HBM between fusions — S^2-proportional traffic. This kernel
+keeps the running (m, l, acc) statistics in VMEM scratch across the
+sequential kv-block grid dimension, so probabilities never leave VMEM: HBM
+traffic drops to O(S*D) reads of Q/K/V plus one O(S*D) write of the output.
+
+Grid: (B*H, S/block_q, T/block_k) with the kv dimension innermost
+(sequential); KV heads are mapped through the BlockSpec index function, so
+GQA never materialises repeated KV.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, block_q: int, block_k: int, nk: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)  # (bq, d)
+    k = k_ref[0].astype(jnp.float32)  # (bk, d)
+    v = v_ref[0]                      # (bk, d)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (bq, bk)
+    if causal:
+        qi = pl.program_id(1) * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        ki = j * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(qi >= ki, s, -jnp.inf)
+
+    m_prev, l_prev, acc_prev = m_scr[...], l_scr[...], acc_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    finite = jnp.isfinite(m_new)
+    p = jnp.where(finite[:, None], jnp.exp(s - m_new[:, None]), 0.0)
+    corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_new), 0.0)
+    l_new = l_prev * corr + p.sum(axis=-1)
+    acc_new = acc_prev * corr[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc_new
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_new / jnp.maximum(l_new, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,  # (B, T, Hkv, D)
+    v: jax.Array,  # (B, T, Hkv, D)
+    *,
+    causal: bool = True,
+    block_q: int = 256,
+    block_k: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    b, s_len, h, d = q.shape
+    t = k.shape[1]
+    hkv = k.shape[2]
+    rep = h // hkv
+    bq = min(block_q, s_len)
+    bk = min(block_k, t)
+    assert s_len % bq == 0 and t % bk == 0, (s_len, bq, t, bk)
+    nq, nk = s_len // bq, t // bk
+
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s_len, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * hkv, t, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * hkv, t, d)
+
+    def kv_index(bh, i, j):
+        return (bh // h) * hkv + (bh % h) // rep, j, 0
+
+    kernel = functools.partial(
+        _flash_kernel, scale=d**-0.5, causal=causal, block_q=bq, block_k=bk, nk=nk
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, bk, d), kv_index),
+            pl.BlockSpec((1, bk, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, i, j: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s_len, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s_len, d).transpose(0, 2, 1, 3)

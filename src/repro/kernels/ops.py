@@ -1,0 +1,123 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+Each wrapper pads inputs to the kernel's tiling constraints, picks
+interpret-mode automatically off-TPU (the container target is TPU v5e; CPU
+runs validate the kernel bodies), and falls back to the jnp reference when a
+shape is too small to be worth tiling.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.minplus import minplus_matmul_pallas
+from repro.kernels.retrieval_topk import retrieval_topk_pallas
+from repro.kernels.topk_merge import topk_merge_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.devices()[0].platform == "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int, value) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_b", "use_pallas", "interpret"))
+def topk_merge(
+    cand_ids: jax.Array,
+    cand_d: jax.Array,
+    k: int,
+    *,
+    block_b: int = 128,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Top-k distinct-(id) merge. cand_ids: (B, C) int32 (-1 invalid)."""
+    if not use_pallas:
+        return ref.topk_merge_ref(cand_ids, cand_d, k)
+    b = cand_ids.shape[0]
+    ids = _pad_to(_pad_to(cand_ids, 1, 128, -1), 0, block_b, -1)
+    d = _pad_to(_pad_to(cand_d, 1, 128, jnp.inf), 0, block_b, jnp.inf)
+    itp = (not _on_tpu()) if interpret is None else interpret
+    oid, od = topk_merge_pallas(ids, d, k, block_b=block_b, interpret=itp)
+    return oid[:b], od[:b]
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k", "use_pallas", "interpret"))
+def minplus_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Tropical (min,+) matmul C = A (+,min) B."""
+    if not use_pallas:
+        return ref.minplus_matmul_ref(a, b)
+    m, kdim = a.shape
+    _, n = b.shape
+    ap = _pad_to(_pad_to(a, 0, block_m, jnp.inf), 1, block_k, jnp.inf)
+    bp = _pad_to(_pad_to(b, 0, block_k, jnp.inf), 1, block_n, jnp.inf)
+    itp = (not _on_tpu()) if interpret is None else interpret
+    out = minplus_matmul_pallas(
+        ap, bp, block_m=block_m, block_n=block_n, block_k=block_k, interpret=itp
+    )
+    return out[:m, :n]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "use_pallas", "interpret")
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    block_q: int = 256,
+    block_k: int = 256,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused attention; q (B,S,H,D), kv (B,T,Hkv,D) -> (B,S,H,D)."""
+    if not use_pallas:
+        return ref.flash_attention_ref(q, k, v, causal=causal)
+    itp = (not _on_tpu()) if interpret is None else interpret
+    return flash_attention_pallas(
+        q, k, v, causal=causal, block_q=block_q, block_k=block_k, interpret=itp
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_b", "block_n", "use_pallas", "interpret"))
+def retrieval_topk(
+    scores: jax.Array,
+    k: int,
+    *,
+    block_b: int = 8,
+    block_n: int = 4096,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Streaming top-k (largest) over (B, N) score rows."""
+    if not use_pallas:
+        return ref.retrieval_topk_ref(scores, k)
+    b, n = scores.shape
+    bn = min(block_n, max(128, n))
+    sp = _pad_to(_pad_to(scores, 0, block_b, -jnp.inf), 1, bn, -jnp.inf)
+    itp = (not _on_tpu()) if interpret is None else interpret
+    oid, od = retrieval_topk_pallas(sp, k, block_b=block_b, block_n=bn, interpret=itp)
+    return oid[:b], od[:b]

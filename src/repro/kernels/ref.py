@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_merge_ref(cand_ids: jax.Array, cand_d: jax.Array, k: int):
+    """k smallest-distance distinct ids per row; ties broken by smaller id."""
+    d = jnp.where(cand_ids < 0, jnp.inf, cand_d.astype(jnp.float32))
+
+    def row(ids_r, d_r):
+        order = jnp.lexsort((d_r, ids_r))  # by id, then dist
+        sid, sd = ids_r[order], d_r[order]
+        first = jnp.concatenate([jnp.ones((1,), bool), sid[1:] != sid[:-1]])
+        sd = jnp.where(first, sd, jnp.inf)  # dedup: keep min dist per id
+        order2 = jnp.lexsort((sid, sd))  # by dist, then id
+        top_ids = sid[order2[:k]]
+        top_d = sd[order2[:k]]
+        return jnp.where(jnp.isfinite(top_d), top_ids, -1), top_d
+
+    out_ids, out_d = jax.vmap(row)(cand_ids, d)
+    return out_ids, out_d.astype(cand_d.dtype)
+
+
+def minplus_matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    out = jnp.min(af[:, :, None] + bf[None, :, :], axis=1)
+    return out.astype(a.dtype)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool):
+    """Dense softmax attention with GQA head repetition (fp32 math)."""
+    b, s, h, d = q.shape
+    hkv = k.shape[2]
+    if hkv != h:
+        rep = h // hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    sc = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32), k.astype(jnp.float32))
+    sc = sc / d**0.5
+    if causal:
+        mask = jnp.tril(jnp.ones((s, k.shape[1]), bool))
+        sc = jnp.where(mask, sc, -jnp.inf)
+    w = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def retrieval_topk_ref(scores: jax.Array, k: int):
+    """k largest scores per row with their indices; ties -> smaller index."""
+    s = scores.astype(jnp.float32)
+
+    def row(s_r):
+        idx = jnp.arange(s_r.shape[0], dtype=jnp.int32)
+        order = jnp.lexsort((idx, -s_r))
+        return idx[order[:k]], s_r[order[:k]]
+
+    oid, od = jax.vmap(row)(s)
+    return oid, od.astype(scores.dtype)

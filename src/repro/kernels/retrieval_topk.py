@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: streaming top-k over very wide score rows.
+
+Used for (a) the xdeepfm `retrieval_cand` cell — score 10^6 candidates against
+a query and keep the k best — and (b) batched KNN-Index-style nearest-object
+queries over dense distance rows. The score row never fits VMEM, so the grid
+streams (B_BLK, N_BLK) tiles from HBM and maintains the running top-k in the
+revisited output block (sequential innermost grid dimension), merging each
+tile with k rounds of vectorised max-selection. One pass over HBM => the op is
+memory-bandwidth-bound, which is its roofline.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_INT_MAX = jnp.iinfo(jnp.int32).max
+
+
+def _retrieval_topk_kernel(s_ref, oid_ref, od_ref, *, k: int, block_n: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        od_ref[...] = jnp.full_like(od_ref, -jnp.inf)
+        oid_ref[...] = jnp.full_like(oid_ref, -1)
+
+    s = s_ref[...].astype(jnp.float32)  # (bb, bn)
+    gid = j * block_n + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    cd = jnp.concatenate([od_ref[...].astype(jnp.float32), s], axis=1)
+    cid = jnp.concatenate([oid_ref[...], gid], axis=1)
+    cd = jnp.where(cid < 0, -jnp.inf, cd)
+
+    def body(i, carry):
+        out_ids, out_d, rem = carry
+        dmax = jnp.max(rem, axis=1)
+        idmax = jnp.min(jnp.where(rem == dmax[:, None], cid, _INT_MAX), axis=1)
+        valid = jnp.isfinite(dmax)
+        sel_id = jnp.where(valid, idmax, -1)
+        out_ids = jax.lax.dynamic_update_slice(out_ids, sel_id[:, None], (0, i))
+        out_d = jax.lax.dynamic_update_slice(out_d, dmax[:, None], (0, i))
+        rem = jnp.where(cid == idmax[:, None], -jnp.inf, rem)
+        return out_ids, out_d, rem
+
+    b = s.shape[0]
+    init = (
+        jnp.full((b, k), -1, jnp.int32),
+        jnp.full((b, k), -jnp.inf, jnp.float32),
+        cd,
+    )
+    out_ids, out_d, _ = jax.lax.fori_loop(0, k, body, init)
+    oid_ref[...] = out_ids
+    od_ref[...] = out_d.astype(od_ref.dtype)
+
+
+def retrieval_topk_pallas(
+    scores: jax.Array,  # (B, N) float; larger = better
+    k: int,
+    *,
+    block_b: int = 8,
+    block_n: int = 4096,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    b, n = scores.shape
+    assert b % block_b == 0 and n % block_n == 0
+    grid = (b // block_b, n // block_n)  # N innermost: sequential accumulation
+    kernel = functools.partial(_retrieval_topk_kernel, k=k, block_n=block_n)
+    oid, od = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_b, block_n), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((block_b, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_b, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), jnp.int32),
+            jax.ShapeDtypeStruct((b, k), scores.dtype),
+        ],
+        interpret=interpret,
+    )(scores)
+    return oid, od

@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: deduplicating top-k merge of candidate (id, dist) sets.
+
+This is the numeric hot spot of the paper's construction (Lemmas 5.12/5.21):
+for every vertex in a level, merge the C = tau*k candidate pairs gathered from
+its bridge neighbors' lists and emit the k closest *distinct* objects.
+
+TPU adaptation: a GPU implementation would bitonic-sort the candidates; the
+TPU VPU has no efficient in-register sort, so we run k rounds of a vectorised
+min-reduction over a VMEM-resident candidate tile, masking out every candidate
+that shares the selected id (which performs the dedup for free). O(k*C) VPU
+work, branch-free, one HBM read of the candidates and one HBM write of the
+result per tile.
+
+Grid: one dimension over vertex blocks. Block shapes: candidates (B_BLK, C) in
+VMEM, outputs (B_BLK, k). C is padded to a multiple of 128 (lane width) by the
+ops.py wrapper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_INT_MAX = jnp.iinfo(jnp.int32).max
+
+
+def _topk_merge_kernel(ids_ref, d_ref, oid_ref, od_ref, *, k: int):
+    ids = ids_ref[...]
+    d = d_ref[...].astype(jnp.float32)
+    d = jnp.where(ids < 0, jnp.inf, d)  # padding / invalid candidates
+
+    def body(i, carry):
+        out_ids, out_d, cd = carry
+        dmin = jnp.min(cd, axis=1)
+        # tie-break: smallest id among distance ties
+        idmin = jnp.min(jnp.where(cd == dmin[:, None], ids, _INT_MAX), axis=1)
+        valid = jnp.isfinite(dmin)
+        sel_id = jnp.where(valid, idmin, -1)
+        sel_d = jnp.where(valid, dmin, jnp.inf)
+        out_ids = jax.lax.dynamic_update_slice(out_ids, sel_id[:, None], (0, i))
+        out_d = jax.lax.dynamic_update_slice(out_d, sel_d[:, None], (0, i))
+        # mask every candidate carrying the selected id -> dedup
+        cd = jnp.where(ids == idmin[:, None], jnp.inf, cd)
+        return out_ids, out_d, cd
+
+    b = ids.shape[0]
+    init = (
+        jnp.full((b, k), -1, jnp.int32),
+        jnp.full((b, k), jnp.inf, jnp.float32),
+        d,
+    )
+    out_ids, out_d, _ = jax.lax.fori_loop(0, k, body, init)
+    oid_ref[...] = out_ids
+    od_ref[...] = out_d.astype(od_ref.dtype)
+
+
+def topk_merge_pallas(
+    cand_ids: jax.Array,  # (B, C) int32, -1 = invalid
+    cand_d: jax.Array,    # (B, C) float
+    k: int,
+    *,
+    block_b: int = 128,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """k nearest distinct-(id) candidates per row; rows padded to block_b."""
+    b, c = cand_ids.shape
+    assert b % block_b == 0, f"B={b} must be padded to a multiple of {block_b}"
+    grid = (b // block_b,)
+    kernel = functools.partial(_topk_merge_kernel, k=k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, c), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, c), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), jnp.int32),
+            jax.ShapeDtypeStruct((b, k), cand_d.dtype),
+        ],
+        interpret=interpret,
+    )(cand_ids, cand_d)

@@ -1,0 +1,285 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Must be run as a module:  PYTHONPATH=src python -m repro.launch.dryrun --all
+The XLA device-count override below MUST precede every other import.
+"""
+import os
+
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (_flags + " --xla_force_host_platform_device_count=512").strip()
+
+# ruff: noqa: E402
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.common import SDS, ArchSpec, ShapeCell
+from repro.configs.registry import all_cells, get_arch
+from repro.distributed.sharding import make_rules
+from repro.launch.hlo_analysis import collective_stats, memory_stats, summarize_cost
+from repro.launch.hlo_cost import analyze as hlo_analyze
+from repro.launch.mesh import make_production_mesh
+from repro.train import steps
+
+# TPU v5e hardware constants (roofline denominators)
+PEAK_FLOPS = 197e12       # bf16 FLOP/s per chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link
+
+
+def _shardings(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def build_cell(arch: ArchSpec, shape_name: str, cell: ShapeCell, rules,
+               variant: dict | None = None):
+    """Returns (fn, in_specs, out_specs, abstract_args, donate_argnums).
+
+    `variant` carries §Perf hillclimb knobs:
+      lm:  attn_probs_bf16=1, remat_policy=dots
+      gnn: node_shard=all, gnn_bf16=1
+      knn: knn_donate=1, knn_bf16=1, knn_vk_sharded=1
+    """
+    import dataclasses as _dc
+
+    import jax.numpy as jnp
+
+    variant = variant or {}
+    if arch.family == "gnn":
+        cfg = arch.make_config(shape_name)
+        if variant.get("gnn_bf16"):
+            cfg = _dc.replace(cfg, param_dtype=jnp.bfloat16)
+    else:
+        cfg = arch.make_config()
+        if arch.family == "lm":
+            over = {}
+            if variant.get("attn_probs_bf16"):
+                over["attn_probs_bf16"] = True
+            if variant.get("remat_policy"):
+                over["remat_policy"] = variant["remat_policy"]
+            if variant.get("q_chunk"):
+                over["q_chunk"] = int(variant["q_chunk"])
+            if variant.get("kv_chunk"):
+                over["kv_chunk"] = int(variant["kv_chunk"])
+            if variant.get("capacity_factor"):
+                over["capacity_factor"] = float(variant["capacity_factor"])
+            if over:
+                cfg = _dc.replace(cfg, **over)
+    specs = cell.specs(cfg)
+
+    if arch.family == "lm":
+        if cell.kind == "train":
+            fn, ins, outs, (params_abs, opt_abs) = steps.make_lm_train(cfg, rules)
+            batch = {"tokens": specs["tokens"], "labels": specs["labels"]}
+            return fn, ins, outs, (params_abs, opt_abs, batch)
+        if cell.kind == "prefill":
+            fn, ins, outs, (params_abs,) = steps.make_lm_prefill(cfg, rules, specs["max_len"])
+            return fn, ins, outs, (params_abs, specs["tokens"])
+        if cell.kind == "decode":
+            drules = rules
+            if variant.get("serve_fsdp") == "none":
+                drules = _dc.replace(rules, fsdp=None)  # replicate over data at serve
+            fn, ins, outs, (params_abs, cache_abs) = steps.make_lm_decode(
+                cfg, drules, specs["cache_batch"], specs["cache_len"],
+                cache_layout=variant.get("cache_layout", "auto"),
+            )
+            return fn, ins, outs, (params_abs, cache_abs, specs["tokens"])
+
+    if arch.family == "gnn":
+        batch = {k: v for k, v in specs.items()}
+        fn, ins, outs, (params_abs, opt_abs) = steps.make_gnn_train(
+            arch.arch_id, cfg, rules, batch,
+            node_shard=variant.get("node_shard", "batch"),
+        )
+        return fn, ins, outs, (params_abs, opt_abs, batch)
+
+    if arch.family == "recsys":
+        if cell.kind == "train":
+            fn, ins, outs, (params_abs, opt_abs) = steps.make_recsys_train(cfg, rules)
+            batch = {"sparse_ids": specs["sparse_ids"], "labels": specs["labels"]}
+            return fn, ins, outs, (params_abs, opt_abs, batch)
+        if cell.kind == "forward":
+            fn, ins, outs, (params_abs,) = steps.make_recsys_forward(cfg, rules)
+            batch = {"sparse_ids": specs["sparse_ids"], "labels": specs["labels"]}
+            return fn, ins, outs, (params_abs, batch)
+        if cell.kind == "retrieval":
+            fn, ins, outs, (params_abs,) = steps.make_recsys_retrieval(
+                cfg, rules, specs["n_candidates"]
+            )
+            return fn, ins, outs, (params_abs, {"sparse_ids": specs["sparse_ids"]})
+
+    if arch.family == "knn":
+        if variant.get("knn_bf16"):
+            specs = {
+                k: SDS(v.shape, jnp.bfloat16) if v.dtype == jnp.float32 else v
+                for k, v in specs.items()
+            }
+        if cell.kind == "knn_build":
+            contig = bool(variant.get("knn_contig"))
+            fn, ins, outs, _ = steps.make_knn_build(cfg, rules, contiguous=contig)
+            if variant.get("knn_vk_sharded"):
+                flat = tuple(rules.mesh.axis_names)
+                ins = ins[:5] + (P(flat, None), P(flat, None))
+                outs = (P(flat, None), P(flat, None))
+            args = tuple(specs[k] for k in ("verts", "nbr", "w", "extra_ids", "extra_d", "vk_ids", "vk_d"))
+            if contig:
+                args = (SDS((), jnp.int32),) + args[1:]
+            return fn, ins, outs, args
+        if cell.kind == "knn_serve":
+            fn, ins, outs, _ = steps.make_knn_serve(cfg, rules)
+            args = tuple(specs[k] for k in ("vk_ids", "vk_d", "queries"))
+            return fn, ins, outs, args
+
+    raise ValueError(f"unhandled cell {arch.arch_id}/{shape_name} kind={cell.kind}")
+
+
+def run_cell(arch: ArchSpec, shape_name: str, cell: ShapeCell, *, multi_pod: bool,
+             out_dir: Path, variant: dict | None = None, tag: str = "") -> dict:
+    variant = variant or {}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    rules = make_rules(mesh)
+    fn, in_specs, out_specs, abstract_args = build_cell(
+        arch, shape_name, cell, rules, variant
+    )
+
+    donate = ()
+    if arch.family == "knn" and cell.kind == "knn_build" and variant.get("knn_donate"):
+        donate = (5, 6)
+    if arch.family == "lm" and cell.kind == "decode" and variant.get("decode_donate"):
+        donate = (1,)  # serving loops donate the KV cache
+    jitted = jax.jit(
+        fn,
+        in_shardings=_shardings(mesh, in_specs),
+        out_shardings=_shardings(mesh, out_specs) if out_specs is not None else None,
+        donate_argnums=donate,
+    )
+    t0 = time.time()
+    with mesh:
+        lowered = jitted.lower(*abstract_args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    hlo_text = compiled.as_text()
+    cost = summarize_cost(compiled.cost_analysis())
+    mem = memory_stats(compiled)
+    coll_raw = collective_stats(hlo_text)
+    # loop-corrected structural model (cost_analysis counts while bodies once)
+    struct = hlo_analyze(hlo_text)
+
+    flops_dev = struct["flops"]
+    bytes_dev = struct["traffic_bytes"]
+    coll_dev = struct["total_collective_bytes"]
+    terms = {
+        "compute_s": flops_dev / PEAK_FLOPS,
+        "memory_s": bytes_dev / HBM_BW,
+        "collective_s": coll_dev / ICI_BW,
+    }
+    bottleneck = max(terms, key=terms.get)
+    rec = {
+        "arch": arch.arch_id,
+        "shape": shape_name,
+        "kind": cell.kind,
+        "variant": variant,
+        "tag": tag,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "per_device": {
+            "flops": flops_dev,
+            "hbm_bytes": bytes_dev,
+            "collective_bytes": coll_dev,
+        },
+        "collectives": {
+            "bytes_per_device": struct["collective_bytes"],
+            "counts": struct["collective_counts"],
+            "total_bytes_per_device": coll_dev,
+        },
+        "loops": struct["loops"],
+        "raw_cost_analysis": {
+            "flops": cost.get("flops", 0.0),
+            "bytes_accessed": cost.get("bytes_accessed", 0.0),
+            "collective_bytes_unrolled": coll_raw["total_bytes_per_device"],
+        },
+        "memory": mem,
+        "roofline_terms_s": terms,
+        "bottleneck": bottleneck,
+    }
+    out_dir.mkdir(parents=True, exist_ok=True)
+    fname = f"{arch.arch_id}__{shape_name}__{rec['mesh']}"
+    if tag:
+        fname += f"__{tag}"
+    (out_dir / f"{fname.replace('/', '_')}.json").write_text(json.dumps(rec, indent=2))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--include-skipped", action="store_true")
+    ap.add_argument("--variant", default="", help="k=v,... §Perf hillclimb knobs")
+    ap.add_argument("--tag", default="", help="artifact suffix for variant runs")
+    args = ap.parse_args()
+    variant = dict(kv.split("=", 1) for kv in args.variant.split(",") if kv)
+
+    out_dir = Path(args.out)
+    cells = []
+    if args.all:
+        cells = all_cells(include_skipped=args.include_skipped)
+    else:
+        arch = get_arch(args.arch)
+        for shape, cell in arch.shapes.items():
+            if args.shape and shape != args.shape:
+                continue
+            if cell.skip and not args.include_skipped and args.shape != shape:
+                continue
+            cells.append((arch, shape, cell))
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    failures = 0
+    for arch, shape, cell in cells:
+        if cell.skip and not args.include_skipped:
+            print(f"SKIP  {arch.arch_id:<24} {shape:<14} ({cell.skip})")
+            continue
+        for mp in meshes:
+            tag = f"{arch.arch_id}/{shape} mesh={'2x16x16' if mp else '16x16'}"
+            if args.tag:
+                tag += f" [{args.tag}]"
+            try:
+                rec = run_cell(arch, shape, cell, multi_pod=mp, out_dir=out_dir,
+                               variant=variant, tag=args.tag)
+                t = rec["roofline_terms_s"]
+                print(
+                    f"OK    {tag:<52} compile={rec['compile_s']:>7.1f}s "
+                    f"compute={t['compute_s']:.3e}s memory={t['memory_s']:.3e}s "
+                    f"coll={t['collective_s']:.3e}s -> {rec['bottleneck']}"
+                )
+            except Exception as e:  # noqa: BLE001
+                failures += 1
+                print(f"FAIL  {tag}: {type(e).__name__}: {e}")
+                traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} cell(s) failed")
+
+
+if __name__ == "__main__":
+    main()

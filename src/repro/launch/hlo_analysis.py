@@ -1,0 +1,97 @@
+"""Post-SPMD HLO analysis: collective byte accounting for the roofline.
+
+cost_analysis() gives FLOPs/bytes but not collective traffic; we parse the
+partitioned HLO text and sum the result-shape bytes of every collective op.
+Shapes in the partitioned module are per-device shards, so totals here are
+per-device collective bytes (multiply by chip count for fleet-global).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|[\w\[\],{}\s]+?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\("
+)
+
+
+def _shape_bytes(shape_text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Per-device collective bytes and op counts, keyed by collective kind."""
+    bytes_by = defaultdict(int)
+    count_by = defaultdict(int)
+    for m in _OP_RE.finditer(hlo_text):
+        shape_text, op, suffix = m.group(1), m.group(2), m.group(3)
+        if suffix == "-done":
+            continue  # async start/done pairs: count the start only
+        b = _shape_bytes(shape_text)
+        bytes_by[op] += b
+        count_by[op] += 1
+    return {
+        "bytes_per_device": dict(bytes_by),
+        "counts": dict(count_by),
+        "total_bytes_per_device": int(sum(bytes_by.values())),
+    }
+
+
+def summarize_cost(cost: dict | list | None) -> dict:
+    """Normalise compiled.cost_analysis() output across jax versions."""
+    if cost is None:
+        return {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    out = {}
+    for key in ("flops", "bytes accessed", "optimal_seconds", "utilization operand"):
+        if key in cost:
+            out[key.replace(" ", "_")] = float(cost[key])
+    for k, v in cost.items():
+        if k.startswith("bytes accessed"):
+            out.setdefault("bytes_accessed_total", 0.0)
+    return out
+
+
+def memory_stats(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    out = {}
+    for field in (
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "alias_size_in_bytes",
+        "generated_code_size_in_bytes", "peak_memory_in_bytes",
+    ):
+        v = getattr(ma, field, None)
+        if v is not None:
+            out[field] = int(v)
+    return out

@@ -1,0 +1,266 @@
+"""Structural HLO cost model with while-loop trip-count correction.
+
+XLA's compiled.cost_analysis() counts each while-loop body ONCE — a 64x
+undercount for a 64-iteration scan (verified in tests) — and the same bias
+hits collective bytes parsed naively from the HLO text. This module parses
+the post-SPMD HLO into its computation graph, reads loop trip counts from
+the `known_trip_count` backend config (fallback: the loop-condition compare
+constant), and propagates multipliers down the call graph, yielding
+loop-corrected per-device:
+
+  flops             dot-op FLOPs (2 * prod(out_dims) * prod(contract_dims));
+                    matmuls dominate every model family here
+  traffic_bytes     memory traffic: operand + output bytes of materialising
+                    instructions (fusion-boundary granularity)
+  collective_bytes  per-collective-kind result bytes
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\((.*?)\)\s*->")
+_PARAM_RE = re.compile(r"([\w\.\-]+):\s*(\([^)]*\)|\w+\[[\d,]*\])")
+_INSTR_RE = re.compile(
+    r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\([^)]*\)|[\w\[\],{}]+)\s+([a-z][\w\-]*)\((.*)$"
+)
+_CALL_RE = re.compile(r"(?:body|to_apply|calls)=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*"?n"?[^0-9]*(\d+)')
+_CONST_RE = re.compile(r"%([\w\.\-]+)\s*=\s*s(?:32|64)\[\]\s*constant\((\d+)\)")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+
+_FREE_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast", "after-all",
+    "partition-id", "replica-id", "iota", "domain", "opt-barrier",
+}
+
+# ops whose own operand/result tuples are not data movement (loop carries stay
+# in place; the body's inserted copies are counted where they occur)
+_CONTROL_OPS = {"while", "conditional", "call"}
+
+
+def _elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _type_bytes(text: str) -> int:
+    return sum(
+        _elems(dims) * _DTYPE_BYTES[dt]
+        for dt, dims in _SHAPE_RE.findall(text)
+        if dt in _DTYPE_BYTES
+    )
+
+
+@dataclass
+class _Instr:
+    name: str
+    out_type: str
+    op: str
+    rest: str
+
+
+@dataclass
+class _Comp:
+    name: str
+    instrs: list = field(default_factory=list)
+    shapes: dict = field(default_factory=dict)  # symbol -> type text
+    consts: dict = field(default_factory=dict)
+
+
+def _split(text: str) -> tuple[dict[str, _Comp], str | None]:
+    comps: dict[str, _Comp] = {}
+    cur: _Comp | None = None
+    entry = None
+    for raw in text.splitlines():
+        line = raw.strip()
+        if not line:
+            continue
+        if "->" in line and line.endswith("{"):
+            m = _COMP_HDR_RE.match(line)
+            if m:
+                cur = _Comp(m.group(1))
+                comps[cur.name] = cur
+                for pname, ptype in _PARAM_RE.findall(m.group(2)):
+                    cur.shapes[pname] = ptype
+                if line.startswith("ENTRY"):
+                    entry = cur.name
+                continue
+        if line == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        mi = _INSTR_RE.match(line)
+        if not mi:
+            continue
+        name, out_type, op, rest = mi.groups()
+        cur.shapes[name] = out_type
+        cur.instrs.append(_Instr(name, out_type, op, rest))
+        mc = _CONST_RE.match(line.lstrip("ROOT ").strip())
+        if mc:
+            cur.consts[mc.group(1)] = int(mc.group(2))
+    return comps, entry
+
+
+def _trip_count(line_rest: str, comps: dict[str, _Comp]) -> int:
+    mt = _TRIP_RE.search(line_rest)
+    if mt:
+        return max(1, int(mt.group(1)))
+    mc = _COND_RE.search(line_rest)
+    if mc and mc.group(1) in comps:
+        consts = comps[mc.group(1)].consts
+        if consts:
+            return max(1, max(consts.values()))
+    return 1
+
+
+_REDUCE_OPS = {"reduce", "reduce-window", "scatter", "select-and-scatter", "sort"}
+_SLICE_OPS = {"dynamic-slice", "gather", "slice", "dynamic-update-slice"}
+
+
+def _fusion_flags(rest: str, comps: dict[str, _Comp]) -> str:
+    """'slice' if the fused computation only windows its operands (no full
+    reduction), else 'full'."""
+    for callee in _CALL_RE.findall(rest):
+        c = comps.get(callee)
+        if c is None:
+            continue
+        ops = {i.op for i in c.instrs}
+        if ops & _REDUCE_OPS:
+            return "full"
+        if ops & _SLICE_OPS:
+            return "slice"
+    return "full"
+
+
+def analyze(hlo_text: str) -> dict:
+    comps, entry = _split(hlo_text)
+    if entry is None:
+        return {"flops": 0.0, "traffic_bytes": 0.0, "collective_bytes": {},
+                "collective_counts": {}, "total_collective_bytes": 0.0, "loops": {}}
+
+    memo: dict[str, tuple] = {}
+    visiting: set[str] = set()
+    loops: dict[str, int] = {}
+
+    def walk(name: str) -> tuple[float, float, dict, dict]:
+        if name in memo:
+            return memo[name]
+        if name in visiting or name not in comps:
+            return 0.0, 0.0, {}, {}
+        visiting.add(name)
+        c = comps[name]
+        flops = 0.0
+        traffic = 0.0
+        coll: dict[str, float] = defaultdict(float)
+        coll_n: dict[str, int] = defaultdict(int)
+        for ins in c.instrs:
+            if ins.op in _FREE_OPS:
+                continue
+            rest = ins.rest.split(", metadata=")[0]
+            arg_text = rest.split(")", 1)[0]
+            operand_names = _OPERAND_RE.findall(arg_text)
+            out_b = _type_bytes(ins.out_type)
+            in_b = sum(_type_bytes(c.shapes.get(o, "")) for o in operand_names)
+            # slice-streaming ops read only output-sized windows of their
+            # operands (KV-cache updates, scan weight slicing); charging the
+            # full operand per loop iteration would overcount by the trip count
+            if ins.op in ("dynamic-slice", "gather", "slice"):
+                in_b = min(in_b, 2 * out_b)
+            elif ins.op == "dynamic-update-slice" and len(operand_names) >= 2:
+                upd = _type_bytes(c.shapes.get(operand_names[1], ""))
+                if upd:  # in-place DUS: read + write the updated window only
+                    in_b, out_b = 2 * upd, upd
+            elif ins.op == "fusion":
+                flags = _fusion_flags(rest, comps)
+                if flags == "slice":
+                    in_b = min(in_b, 2 * out_b)
+            if ins.op in _CONTROL_OPS:
+                in_b = out_b = 0
+            traffic += out_b + in_b
+            # dot flops
+            if ins.op in ("dot", "dot-general") or ins.op.startswith("dot"):
+                md = _CDIMS_RE.search(rest)
+                if md and operand_names:
+                    lhs_type = c.shapes.get(operand_names[0], "")
+                    ms = _SHAPE_RE.search(lhs_type)
+                    if ms:
+                        lhs_dims = [int(d) for d in ms.group(2).split(",") if d]
+                        contract = 1
+                        for i in (int(x) for x in md.group(1).split(",") if x):
+                            if i < len(lhs_dims):
+                                contract *= lhs_dims[i]
+                        out_elems = sum(
+                            _elems(d) for _, d in _SHAPE_RE.findall(ins.out_type)
+                        )
+                        flops += 2.0 * out_elems * contract
+            # collectives
+            base = ins.op.removesuffix("-start").removesuffix("-done")
+            if base in _COLLECTIVES and not ins.op.endswith("-done"):
+                coll[base] += out_b
+                coll_n[base] += 1
+            # calls
+            if ins.op == "while":
+                body = _CALL_RE.search(rest)
+                trips = _trip_count(rest, comps)
+                if body:
+                    if trips > 1:
+                        loops[body.group(1)] = trips
+                    sf, st, scb, scn = walk(body.group(1))
+                    flops += sf * trips
+                    traffic += st * trips
+                    for k, v in scb.items():
+                        coll[k] += v * trips
+                    for k, v in scn.items():
+                        coll_n[k] += v * trips
+            elif ins.op == "fusion":
+                # traffic at fusion boundary is already counted; fused dots
+                # still need flops credit
+                for callee in _CALL_RE.findall(rest):
+                    sf, _, scb, scn = walk(callee)
+                    flops += sf
+                    for k, v in scb.items():
+                        coll[k] += v
+                    for k, v in scn.items():
+                        coll_n[k] += v
+            elif ins.op in ("call", "conditional", "custom-call", "map",
+                            "reduce", "reduce-window", "scatter", "sort",
+                            "select-and-scatter", "all-reduce", "all-reduce-start"):
+                for callee in _CALL_RE.findall(rest):
+                    sf, st, scb, scn = walk(callee)
+                    flops += sf
+                    traffic += st if ins.op in ("call", "conditional") else 0.0
+                    for k, v in scb.items():
+                        coll[k] += v
+                    for k, v in scn.items():
+                        coll_n[k] += v
+        visiting.discard(name)
+        memo[name] = (flops, traffic, dict(coll), dict(coll_n))
+        return memo[name]
+
+    f, t, cb, cn = walk(entry)
+    return {
+        "flops": f,
+        "traffic_bytes": t,
+        "collective_bytes": cb,
+        "collective_counts": cn,
+        "total_collective_bytes": float(sum(cb.values())),
+        "loops": loops,
+    }

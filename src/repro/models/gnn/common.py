@@ -1,0 +1,45 @@
+"""Shared GNN substrate: edge-index message passing via segment reductions.
+
+JAX sparse is BCOO-only, so message passing is implemented the TPU-native
+way: gather source-node features by edge index, transform, and scatter-add
+into destination nodes with jax.ops.segment_sum. Under the distributed
+runtime the edge arrays are sharded across devices and the segment_sum
+becomes partial-scatter + all-reduce (see train/gnn_step.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def scatter_sum(messages: jax.Array, dst: jax.Array, n_nodes: int) -> jax.Array:
+    return jax.ops.segment_sum(messages, dst, num_segments=n_nodes)
+
+
+def scatter_mean(messages: jax.Array, dst: jax.Array, n_nodes: int, eps: float = 1e-9):
+    s = scatter_sum(messages, dst, n_nodes)
+    cnt = jax.ops.segment_sum(jnp.ones((messages.shape[0],), messages.dtype), dst, num_segments=n_nodes)
+    return s / jnp.maximum(cnt, eps)[:, None]
+
+
+def degree(dst: jax.Array, n_nodes: int, dtype=jnp.float32) -> jax.Array:
+    return jax.ops.segment_sum(jnp.ones(dst.shape, dtype), dst, num_segments=n_nodes)
+
+
+def mlp_init(rng, dims: list[int], dtype=jnp.float32):
+    ks = jax.random.split(rng, len(dims) - 1)
+    return [
+        {
+            "w": (jax.random.normal(k, (a, b)) / a**0.5).astype(dtype),
+            "b": jnp.zeros((b,), dtype),
+        }
+        for k, a, b in zip(ks, dims[:-1], dims[1:])
+    ]
+
+
+def mlp_apply(layers, x, act=jax.nn.silu, final_act: bool = False):
+    for i, l in enumerate(layers):
+        x = x @ l["w"].astype(x.dtype) + l["b"].astype(x.dtype)
+        if i < len(layers) - 1 or final_act:
+            x = act(x)
+    return x

@@ -1,0 +1,65 @@
+"""GCN (Kipf & Welling, arXiv:1609.02907) — symmetric-normalised mean
+aggregation, the assigned gcn-cora config (2 layers, hidden 16)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn import common
+
+
+@dataclasses.dataclass(frozen=True)
+class GCNConfig:
+    name: str
+    n_layers: int = 2
+    d_hidden: int = 16
+    d_feat: int = 1433          # 0 -> species-embedding input
+    n_classes: int = 7
+    n_species: int = 16
+    task: str = "node_class"    # "node_class" | "energy"
+    param_dtype: object = jnp.float32
+
+
+def init_params(rng, cfg: GCNConfig) -> dict:
+    d0 = cfg.d_feat if cfg.d_feat > 0 else cfg.d_hidden
+    dims = [d0] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.n_classes]
+    ks = jax.random.split(rng, len(dims) + 1)
+    p = {
+        "layers": [
+            {"w": (jax.random.normal(k, (a, b)) / a**0.5).astype(cfg.param_dtype)}
+            for k, a, b in zip(ks, dims[:-1], dims[1:])
+        ]
+    }
+    if cfg.d_feat == 0:
+        p["embed"] = (jax.random.normal(ks[-1], (cfg.n_species, d0)) * 0.5).astype(cfg.param_dtype)
+    return p
+
+
+def forward(params, batch, cfg: GCNConfig) -> jax.Array:
+    """batch: node_feat (n, d_feat) or species (n,); edge_index (2, E)."""
+    x = batch["node_feat"] if cfg.d_feat > 0 else params["embed"][batch["species"]]
+    src, dst = batch["edge_index"]
+    n = x.shape[0]
+    deg = common.degree(dst, n, x.dtype) + 1.0  # +1: self loop normalisation
+    norm = jax.lax.rsqrt(deg)
+    coef = (norm[src] * norm[dst])[:, None]
+    for i, layer in enumerate(params["layers"]):
+        h = x @ layer["w"].astype(x.dtype)
+        msg = h[src] * coef
+        agg = common.scatter_sum(msg, dst, n) + h * (norm**2)[:, None]  # self loop
+        x = jax.nn.relu(agg) if i < len(params["layers"]) - 1 else agg
+    return x
+
+
+def loss_fn(params, batch, cfg: GCNConfig) -> jax.Array:
+    logits = forward(params, batch, cfg)
+    if cfg.task == "energy":
+        n_graphs = batch["graph_targets"].shape[0]
+        energy = jax.ops.segment_sum(logits[:, 0], batch["graph_id"], num_segments=n_graphs)
+        err = energy - batch["graph_targets"]
+        return jnp.mean(err * err)
+    labels = batch["labels"]
+    lg = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.mean(jnp.take_along_axis(lg, labels[:, None], axis=1))

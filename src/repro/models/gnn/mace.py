@@ -1,0 +1,152 @@
+"""MACE (Batatia et al., arXiv:2206.07697): higher-order equivariant message
+passing through the Atomic Cluster Expansion.
+
+Assigned config: 2 layers, 128 channels, l_max=2, correlation order 3,
+8 Bessel RBFs. Each layer builds the A-basis (one tensor-product interaction
+aggregated over edges) and then the B-basis by channel-wise symmetric CG
+powers of A up to order 3 with learnable per-(path, channel) weights — this
+is what lifts the message body order beyond pairwise without extra graph
+passes (the paper's core idea).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn import common, irreps
+
+
+@dataclasses.dataclass(frozen=True)
+class MACEConfig:
+    name: str
+    n_layers: int = 2
+    d_hidden: int = 128
+    l_max: int = 2
+    correlation_order: int = 3
+    n_rbf: int = 8
+    cutoff: float = 5.0
+    n_species: int = 16
+    d_feat: int = 0
+    n_out: int = 1
+    task: str = "energy"
+    param_dtype: object = jnp.float32
+
+
+def _paths(cfg):
+    return irreps.cg_paths(cfg.l_max)
+
+
+def init_params(rng, cfg: MACEConfig) -> dict:
+    c = cfg.d_hidden
+    paths = _paths(cfg)
+    ks = jax.random.split(rng, cfg.n_layers * 6 + 3)
+    layers = []
+    for i in range(cfg.n_layers):
+        kk = ks[6 * i : 6 * i + 6]
+        lin = lambda key, l_set: {
+            str(l): (jax.random.normal(jax.random.fold_in(key, l), (c, c)) / c**0.5).astype(cfg.param_dtype)
+            for l in l_set
+        }
+        ls = range(cfg.l_max + 1)
+        layers.append(
+            {
+                "radial": common.mlp_init(kk[0], [cfg.n_rbf, 64, len(paths) * c], cfg.param_dtype),
+                "lin_pre": lin(kk[1], ls),
+                # per-path per-channel weights for the order-2 / order-3 products
+                "w2": {f"{a}_{b}_{o}": (jax.random.normal(jax.random.fold_in(kk[2], 100 * a + 10 * b + o), (c,)) * 0.3).astype(cfg.param_dtype)
+                        for (a, b, o) in paths},
+                "w3": {f"{a}_{b}_{o}": (jax.random.normal(jax.random.fold_in(kk[3], 100 * a + 10 * b + o), (c,)) * 0.3).astype(cfg.param_dtype)
+                        for (a, b, o) in paths},
+                "lin_msg": lin(kk[4], ls),
+                "lin_res": lin(kk[5], ls),
+            }
+        )
+    if cfg.d_feat > 0:
+        enc = common.mlp_init(ks[-3], [cfg.d_feat, c], cfg.param_dtype)
+    else:
+        enc = (jax.random.normal(ks[-3], (cfg.n_species, c)) * 0.5).astype(cfg.param_dtype)
+    return {
+        "encoder": enc,
+        "layers": layers,
+        "readout": common.mlp_init(ks[-1], [c, c, cfg.n_out], cfg.param_dtype),
+    }
+
+
+def _sym_power(a: dict, w_tab: dict, cfg, base: dict) -> dict:
+    """One channel-wise CG power step: out[l3] = sum_paths w * CG(a[l1] x base[l2])."""
+    out: dict[int, jax.Array] = {}
+    for (l1, l2, l3) in _paths(cfg):
+        if l1 not in a or l2 not in base:
+            continue
+        w = w_tab[f"{l1}_{l2}_{l3}"]
+        c = jnp.asarray(irreps.real_cg(l1, l2, l3), a[l1].dtype)
+        y = jnp.einsum("nka,nkb,abm->nkm", a[l1], base[l2], c) * w[None, :, None].astype(a[l1].dtype)
+        out[l3] = out.get(l3, 0) + y
+    return out
+
+
+def forward(params, batch, cfg: MACEConfig):
+    src, dst = batch["edge_index"]
+    pos = batch["pos"]
+    n = pos.shape[0]
+    c = cfg.d_hidden
+    rel = pos[dst] - pos[src]
+    r = jnp.linalg.norm(rel, axis=-1)
+    rbf = irreps.bessel_rbf(r, cfg.n_rbf, cfg.cutoff)
+    ylm = irreps.sh(rel, cfg.l_max)
+    paths = _paths(cfg)
+
+    if cfg.d_feat > 0:
+        s = common.mlp_apply(
+            params["encoder"], batch["node_feat"].astype(cfg.param_dtype), final_act=True
+        )
+    else:
+        s = params["encoder"][batch["species"]]
+    s = s.astype(cfg.param_dtype)
+    rbf = rbf.astype(cfg.param_dtype)
+    ylm = {l: y.astype(cfg.param_dtype) for l, y in ylm.items()}
+    feats = {0: s[:, :, None]}
+    for l in range(1, cfg.l_max + 1):
+        feats[l] = jnp.zeros((n, c, 2 * l + 1), s.dtype)
+
+    site_energies = 0.0
+    for lp in params["layers"]:
+        h = irreps.linear_mix(feats, {int(l): w for l, w in lp["lin_pre"].items()})
+        radial = common.mlp_apply(lp["radial"], rbf).reshape(-1, len(paths), c)
+        src_feats = {l: x[src] for l, x in h.items()}
+        path_w = {p: radial[:, i, :] for i, p in enumerate(paths)}
+        msgs = irreps.tensor_product(src_feats, ylm, path_w, cfg.l_max)
+        # A-basis: aggregated one-particle basis
+        a_basis = {
+            l: common.scatter_sum(m.reshape(m.shape[0], -1), dst, n).reshape(n, c, 2 * l + 1)
+            for l, m in msgs.items()
+        }
+        # B-basis: symmetric channel-wise powers (correlation order 3)
+        b = {l: a_basis[l] for l in a_basis}
+        prod = a_basis
+        if cfg.correlation_order >= 2:
+            prod = _sym_power(prod, lp["w2"], cfg, a_basis)
+            for l, x in prod.items():
+                b[l] = b.get(l, 0) + x
+        if cfg.correlation_order >= 3:
+            prod = _sym_power(prod, lp["w3"], cfg, a_basis)
+            for l, x in prod.items():
+                b[l] = b.get(l, 0) + x
+        m = irreps.linear_mix(b, {int(l): w for l, w in lp["lin_msg"].items()})
+        res = irreps.linear_mix(feats, {int(l): w for l, w in lp["lin_res"].items()})
+        feats = {l: m.get(l, 0) + res.get(l, 0) for l in feats}
+        site_energies = site_energies + common.mlp_apply(params["readout"], feats[0][:, :, 0])
+    return site_energies
+
+
+def loss_fn(params, batch, cfg: MACEConfig) -> jax.Array:
+    out = forward(params, batch, cfg)
+    if cfg.task == "energy":
+        n_graphs = batch["graph_targets"].shape[0]
+        energy = jax.ops.segment_sum(out[:, 0], batch["graph_id"], num_segments=n_graphs)
+        err = energy - batch["graph_targets"]
+        return jnp.mean(err * err)
+    lg = jax.nn.log_softmax(out.astype(jnp.float32), axis=-1)
+    return -jnp.mean(jnp.take_along_axis(lg, batch["labels"][:, None], axis=1))

@@ -1,0 +1,160 @@
+"""Minimal functional NN substrate (no flax in the container).
+
+Params are nested dicts of jax.Arrays; every init_* has a matching spec_*
+returning a PartitionSpec tree of the same structure. Axis names used in the
+specs are LOGICAL ("batch", "model", "expert", ...) and are resolved to mesh
+axes by repro.distributed.sharding.resolve_specs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def dense_init(rng, d_in: int, d_out: int, *, bias: bool = False, dtype=jnp.float32, scale: float | None = None):
+    std = (scale if scale is not None else 1.0) / (d_in ** 0.5)
+    p = {"w": (jax.random.normal(rng, (d_in, d_out), dtype=jnp.float32) * std).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype=dtype)
+    return p
+
+
+def dense_apply(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def dense_spec(in_axis, out_axis, *, bias: bool = False):
+    s = {"w": P(in_axis, out_axis)}
+    if bias:
+        s["b"] = P(out_axis)
+    return s
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"g": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm_apply(p, x, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * p["g"].astype(jnp.float32)).astype(x.dtype)
+
+
+def rmsnorm_spec():
+    return {"g": P(None)}
+
+
+def rope_freqs(d_head: int, max_pos: int, theta: float = 10000.0) -> jax.Array:
+    inv = 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+    t = jnp.arange(max_pos, dtype=jnp.float32)
+    return jnp.outer(t, inv)  # (max_pos, d_head//2)
+
+
+def apply_rope(x: jax.Array, pos: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: (..., S, H, D); pos: (S,) or broadcastable int positions."""
+    d = x.shape[-1]
+    inv = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    ang = pos.astype(jnp.float32)[..., None] * inv  # (..., S, D/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def chunked_attention(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,  # (B, T, Hkv, D)
+    v: jax.Array,  # (B, T, Hkv, D)
+    *,
+    causal: bool,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    q_offset: int = 0,
+    probs_dtype=None,  # store attention probabilities in this dtype (e.g.
+                       # bf16) — halves the dominant HBM traffic of the block
+) -> jax.Array:
+    """Flash-style online-softmax attention in pure jnp (lax.scan blocked).
+
+    Never materialises the (S, T) score matrix: peak intermediate is
+    (B, H, q_chunk, kv_chunk). GQA is handled with a grouped-head einsum —
+    KV is NEVER repeated/materialised per query head, which both avoids the
+    rep-times K/V traffic and (with a sharded KV cache) the SPMD all-gather a
+    broadcast repeat would force (EXPERIMENTS.md §Perf cell D).
+    """
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    hkv = k.shape[2]
+    rep = h // hkv
+    scale = d ** -0.5
+
+    def _divisor(total: int, want: int) -> int:
+        c = min(want, total)
+        while total % c:
+            c -= 1
+        return c
+
+    qc = _divisor(s, q_chunk)
+    kc = _divisor(t, kv_chunk)
+    nq, nk = s // qc, t // kc
+
+    # q: (nq, b, hkv, rep, qc, d); kv: (nk, b, hkv, kc, d)
+    qb = (
+        q.reshape(b, s, hkv, rep, d).transpose(1, 0, 2, 3, 4)
+        .reshape(nq, qc, b, hkv, rep, d).transpose(0, 2, 3, 4, 1, 5)
+    )
+    kb = k.transpose(1, 0, 2, 3).reshape(nk, kc, b, hkv, d).transpose(0, 2, 3, 1, 4)
+    vb = v.transpose(1, 0, 2, 3).reshape(nk, kc, b, hkv, d).transpose(0, 2, 3, 1, 4)
+
+    def q_step(_, qi):
+        q_blk, qidx = qi  # (b, hkv, rep, qc, d)
+        q_pos = q_offset + qidx * qc + jnp.arange(qc)
+
+        def kv_step(carry, ki):
+            acc, m, l = carry
+            k_blk, v_blk, kidx = ki  # (b, hkv, kc, d)
+            sc = jnp.einsum("bgrqd,bgkd->bgrqk", q_blk, k_blk).astype(jnp.float32) * scale
+            if causal:
+                k_pos = kidx * kc + jnp.arange(kc)
+                mask = q_pos[:, None] >= k_pos[None, :]
+                sc = jnp.where(mask, sc, -jnp.inf)
+            m_new = jnp.maximum(m, sc.max(axis=-1))
+            p = jnp.exp(sc - m_new[..., None])
+            if probs_dtype is not None:
+                p = p.astype(probs_dtype)
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.astype(jnp.float32).sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bgrqk,bgkd->bgrqd", p.astype(v_blk.dtype), v_blk
+            ).astype(jnp.float32)
+            return (acc_new, m_new, l_new), None
+
+        init = (
+            jnp.zeros((b, hkv, rep, qc, d), jnp.float32),
+            jnp.full((b, hkv, rep, qc), -jnp.inf, jnp.float32),
+            jnp.zeros((b, hkv, rep, qc), jnp.float32),
+        )
+        (acc, m, l), _ = jax.lax.scan(
+            kv_step, init, (kb, vb, jnp.arange(nk))
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out.astype(q.dtype)
+
+    _, out = jax.lax.scan(q_step, None, (qb, jnp.arange(nq)))
+    # out: (nq, b, hkv, rep, qc, d) -> (b, s, h, d)
+    return (
+        out.transpose(1, 0, 4, 2, 3, 5).reshape(b, s, h, d)
+    )
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Token-mean CE; stable in fp32. logits (..., V), labels (...) int."""
+    lg = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(lg.max(axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(lg - m), axis=-1)) + m[..., 0]
+    gold = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)

@@ -1,0 +1,367 @@
+"""Decoder-only transformer family: dense + MoE, GQA, QKV-bias, RoPE, KV cache.
+
+Covers the five assigned LM architectures (granite-moe-1b-a400m,
+llama4-scout-17b-a16e, qwen2.5-3b, internlm2-20b, qwen1.5-110b). Layers are
+scan-stacked (params carry a leading L dim) so the 80-layer 110B config lowers
+to a compact HLO; each layer is rematerialised (jax.checkpoint) in training.
+
+MoE uses sort-based token routing (argsort by expert, capacity-bounded groups,
+scatter-add combine) — the dispatch never materialises the (tokens, E, C)
+one-hot tensor, and expert weights shard over the "ep" (= mesh model) axis.
+The router's top-k is the same top-k-selection primitive family as the
+paper's KNN merge kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import nn
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    qkv_bias: bool = False
+    # MoE (n_experts == 0 -> dense FFN)
+    n_experts: int = 0
+    moe_top_k: int = 1
+    capacity_factor: float = 1.25
+    rope_theta: float = 10000.0
+    param_dtype: Any = jnp.bfloat16
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+    # §Perf knobs (see EXPERIMENTS.md): bf16 attention probabilities and the
+    # activation-checkpoint policy for the layer scan
+    attn_probs_bf16: bool = False
+    remat_policy: str = "full"  # "full" (recompute all) | "dots" (save matmuls)
+    moe_ep_constraint: bool = False  # force expert-sharded dispatch buffers
+                                     # (refuted under GSPMD; §Perf cell E)
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    def param_count(self) -> int:
+        d, hd = self.d_model, self.d_head
+        attn = d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd + self.n_heads * hd * d
+        if self.is_moe:
+            ffn = self.n_experts * 3 * d * self.d_ff + d * self.n_experts
+        else:
+            ffn = 3 * d * self.d_ff
+        emb = 2 * self.vocab * d
+        return self.n_layers * (attn + ffn) + emb
+
+    def active_param_count(self) -> int:
+        d, hd = self.d_model, self.d_head
+        attn = d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd + self.n_heads * hd * d
+        ffn = 3 * d * self.d_ff * (self.moe_top_k if self.is_moe else 1)
+        emb = 2 * self.vocab * d
+        return self.n_layers * (attn + ffn) + emb
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(rng: jax.Array, cfg: TransformerConfig) -> dict:
+    dt = cfg.param_dtype
+    d, hd = cfg.d_model, cfg.d_head
+    keys = jax.random.split(rng, 8)
+
+    def layer_init(k):
+        ks = jax.random.split(k, 10)
+        p = {
+            "ln1": nn.rmsnorm_init(d, dt),
+            "wq": nn.dense_init(ks[0], d, cfg.n_heads * hd, bias=cfg.qkv_bias, dtype=dt),
+            "wk": nn.dense_init(ks[1], d, cfg.n_kv_heads * hd, bias=cfg.qkv_bias, dtype=dt),
+            "wv": nn.dense_init(ks[2], d, cfg.n_kv_heads * hd, bias=cfg.qkv_bias, dtype=dt),
+            "wo": nn.dense_init(ks[3], cfg.n_heads * hd, d, dtype=dt),
+            "ln2": nn.rmsnorm_init(d, dt),
+        }
+        if cfg.is_moe:
+            e, f = cfg.n_experts, cfg.d_ff
+            std = 1.0 / math.sqrt(d)
+            p["router"] = {"w": jax.random.normal(ks[4], (d, e), jnp.float32) * std}
+            p["w_gate"] = (jax.random.normal(ks[5], (e, d, f)) * std).astype(dt)
+            p["w_up"] = (jax.random.normal(ks[6], (e, d, f)) * std).astype(dt)
+            p["w_down"] = (jax.random.normal(ks[7], (e, f, d)) * (1.0 / math.sqrt(f))).astype(dt)
+        else:
+            p["w_gate"] = nn.dense_init(ks[5], d, cfg.d_ff, dtype=dt)
+            p["w_up"] = nn.dense_init(ks[6], d, cfg.d_ff, dtype=dt)
+            p["w_down"] = nn.dense_init(ks[7], cfg.d_ff, d, dtype=dt)
+        return p
+
+    layers = jax.vmap(layer_init)(jax.random.split(keys[0], cfg.n_layers))
+    emb_std = 1.0 / math.sqrt(d)
+    return {
+        "embed": (jax.random.normal(keys[1], (cfg.vocab, d)) * emb_std).astype(dt),
+        "layers": layers,
+        "ln_f": nn.rmsnorm_init(d, dt),
+        "unembed": (jax.random.normal(keys[2], (d, cfg.vocab)) * emb_std).astype(dt),
+    }
+
+
+def param_specs(cfg: TransformerConfig, rules) -> dict:
+    """PartitionSpec tree matching init_params. `rules` is a ShardingRules."""
+    d, hd = cfg.d_model, cfg.d_head
+    fsdp, tp = rules.ax(rules.fsdp, d), rules.tp
+    heads_tp = tp if (tp and cfg.n_heads % rules.tp_size == 0) else None
+    kv_tp = tp if (tp and cfg.n_kv_heads % rules.tp_size == 0) else None
+    vocab_tp = rules.ax(tp, cfg.vocab)
+    vocab_fsdp = rules.ax(rules.fsdp, cfg.vocab)
+    L = None  # stacked layer dim is never sharded
+
+    def dense_s(a, b, bias):
+        s = {"w": P(L, a, b)}
+        if bias:
+            s["b"] = P(L, b)
+        return s
+
+    layer = {
+        "ln1": {"g": P(L, None)},
+        "wq": dense_s(fsdp, heads_tp, cfg.qkv_bias),
+        "wk": dense_s(fsdp, kv_tp, cfg.qkv_bias),
+        "wv": dense_s(fsdp, kv_tp, cfg.qkv_bias),
+        "wo": {"w": P(L, heads_tp, fsdp)},
+        "ln2": {"g": P(L, None)},
+    }
+    if cfg.is_moe:
+        ep_ok = rules.tp and cfg.n_experts % rules.tp_size == 0
+        ep = rules.tp if ep_ok else None
+        layer["router"] = {"w": P(L, fsdp, None)}
+        layer["w_gate"] = P(L, ep, fsdp, None)
+        layer["w_up"] = P(L, ep, fsdp, None)
+        layer["w_down"] = P(L, ep, None, fsdp)
+    else:
+        ff_tp = rules.ax(tp, cfg.d_ff)
+        layer["w_gate"] = {"w": P(L, fsdp, ff_tp)}
+        layer["w_up"] = {"w": P(L, fsdp, ff_tp)}
+        layer["w_down"] = {"w": P(L, ff_tp, fsdp)}
+    return {
+        "embed": P(vocab_tp, fsdp),
+        "layers": layer,
+        "ln_f": {"g": P(None)},
+        "unembed": P(fsdp, vocab_tp),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MoE FFN: sort-based capacity routing
+# ---------------------------------------------------------------------------
+
+def _moe_ffn(lp, x2d: jax.Array, cfg: TransformerConfig, rules=None) -> jax.Array:
+    n_tok, d = x2d.shape
+    e, kk = cfg.n_experts, cfg.moe_top_k
+    cap = int(math.ceil(n_tok * kk / e * cfg.capacity_factor))
+    logits = x2d.astype(jnp.float32) @ lp["router"]["w"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, kk)  # (N, K)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = eidx.reshape(-1)
+    flat_gate = gates.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(n_tok, dtype=jnp.int32), kk)
+    order = jnp.argsort(flat_e)
+    se, st, sg = flat_e[order], flat_tok[order], flat_gate[order]
+    starts = jnp.searchsorted(se, jnp.arange(e, dtype=se.dtype))
+    pos = jnp.arange(se.shape[0], dtype=jnp.int32) - starts[se].astype(jnp.int32)
+    keep = pos < cap
+    dest = jnp.where(keep, se.astype(jnp.int32) * cap + pos, e * cap)  # pad slot
+
+    # Optionally force expert-sharded dispatch buffers. Measured (§Perf cell
+    # E): GSPMD's own token-sharded strategy is ~2x cheaper — forcing EP here
+    # inserts resharding both ways — so this stays opt-in/off.
+    use_ep = (
+        cfg.moe_ep_constraint
+        and rules is not None
+        and rules.tp
+        and e % rules.tp_size == 0
+    )
+    grouped = jnp.zeros((e * cap + 1, d), x2d.dtype).at[dest].set(x2d[st])
+    grouped = grouped[:-1].reshape(e, cap, d)
+    if use_ep:
+        grouped = rules.constrain(grouped, P(rules.tp, None, None))
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", grouped, lp["w_gate"].astype(x2d.dtype)))
+    h = h * jnp.einsum("ecd,edf->ecf", grouped, lp["w_up"].astype(x2d.dtype))
+    y = jnp.einsum("ecf,efd->ecd", h, lp["w_down"].astype(x2d.dtype))
+    if use_ep:
+        y = rules.constrain(y, P(rules.tp, None, None))
+    y_flat = jnp.concatenate([y.reshape(e * cap, d), jnp.zeros((1, d), y.dtype)])
+    contrib = y_flat[dest] * (sg * keep).astype(y.dtype)[:, None]
+    return jnp.zeros((n_tok, d), x2d.dtype).at[st].add(contrib)
+
+
+def _dense_ffn(lp, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(nn.dense_apply(lp["w_gate"], x)) * nn.dense_apply(lp["w_up"], x)
+    return nn.dense_apply(lp["w_down"], h)
+
+
+# ---------------------------------------------------------------------------
+# forward / prefill / decode
+# ---------------------------------------------------------------------------
+
+def _attn_proj(lp, x, cfg, pos):
+    b, s, d = x.shape
+    hd = cfg.d_head
+    q = nn.dense_apply(lp["wq"], x).reshape(b, s, cfg.n_heads, hd)
+    k = nn.dense_apply(lp["wk"], x).reshape(b, s, cfg.n_kv_heads, hd)
+    v = nn.dense_apply(lp["wv"], x).reshape(b, s, cfg.n_kv_heads, hd)
+    q = nn.apply_rope(q, pos, cfg.rope_theta)
+    k = nn.apply_rope(k, pos, cfg.rope_theta)
+    return q, k, v
+
+
+def _layer_fwd(lp, x, cfg: TransformerConfig, rules=None):
+    b, s, d = x.shape
+    pos = jnp.arange(s)
+    q, k, v = _attn_proj(lp, nn.rmsnorm_apply(lp["ln1"], x), cfg, pos)
+    if rules is not None:
+        q = rules.constrain(q, P(rules.batch, None, rules.heads_axis(cfg.n_heads), None))
+    o = nn.chunked_attention(
+        q, k, v, causal=True, q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+        probs_dtype=jnp.bfloat16 if cfg.attn_probs_bf16 else None,
+    )
+    x = x + nn.dense_apply(lp["wo"], o.reshape(b, s, cfg.n_heads * cfg.d_head))
+    h = nn.rmsnorm_apply(lp["ln2"], x)
+    if cfg.is_moe:
+        y = _moe_ffn(lp, h.reshape(b * s, d), cfg, rules).reshape(b, s, d)
+    else:
+        if rules is not None:
+            h = rules.constrain(h, P(rules.batch, None, None))
+        y = _dense_ffn(lp, h)
+    return x + y
+
+
+def forward(params: dict, tokens: jax.Array, cfg: TransformerConfig, rules=None) -> jax.Array:
+    """tokens (B, S) -> logits (B, S, V). Layers scanned + rematerialised."""
+    x = params["embed"].astype(cfg.param_dtype)[tokens]
+    if rules is not None:
+        x = rules.constrain(x, P(rules.batch, None, None))
+
+    def body(carry, lp):
+        return _layer_fwd(lp, carry, cfg, rules), None
+
+    if cfg.remat_policy == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        body = jax.checkpoint(body, policy=policy)
+    else:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = nn.rmsnorm_apply(params["ln_f"], x)
+    logits = x @ params["unembed"].astype(x.dtype)
+    if rules is not None:
+        logits = rules.constrain(logits, P(rules.batch, None, rules.tp))
+    return logits
+
+
+def loss_fn(params, batch, cfg: TransformerConfig, rules=None) -> jax.Array:
+    logits = forward(params, batch["tokens"], cfg, rules)
+    return nn.cross_entropy(logits, batch["labels"])
+
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int, dtype=None) -> dict:
+    dt = dtype or cfg.param_dtype
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.d_head)
+    return {
+        "k": jnp.zeros(shape, dt),
+        "v": jnp.zeros(shape, dt),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_specs(cfg: TransformerConfig, rules, layout: str = "auto",
+                batch_size: int | None = None) -> dict:
+    """KV-cache sharding. layout:
+      auto : heads over tp when divisible, else sequence over tp
+      d    : head_dim over tp (score psum instead of seq resharding — the
+             §Perf decode variant for kv_heads < tp_size)
+    batch_size (if given) drops the batch axes when they don't divide it
+    (e.g. the long_500k single-request cell)."""
+    bax = rules.batch if batch_size is None else rules.ax(rules.batch, batch_size)
+    kv_tp = rules.tp if (rules.tp and cfg.n_kv_heads % rules.tp_size == 0) else None
+    if layout == "d" and cfg.d_head % max(1, rules.tp_size) == 0:
+        spec = P(None, bax, None, None, rules.tp)
+    else:
+        seq_ax = rules.tp if kv_tp is None else None  # shard seq when heads can't be
+        spec = P(None, bax, seq_ax, kv_tp, None)
+    return {"k": spec, "v": spec, "len": P()}
+
+
+def prefill(params, tokens: jax.Array, cfg: TransformerConfig, max_len: int, rules=None):
+    """Run the prompt through the model, returning (last_logits, cache)."""
+    b, s = tokens.shape
+    x = params["embed"].astype(cfg.param_dtype)[tokens]
+    pos = jnp.arange(s)
+
+    def body(x, lp):
+        q, k, v = _attn_proj(lp, nn.rmsnorm_apply(lp["ln1"], x), cfg, pos)
+        o = nn.chunked_attention(q, k, v, causal=True, q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+        x = x + nn.dense_apply(lp["wo"], o.reshape(b, s, cfg.n_heads * cfg.d_head))
+        h = nn.rmsnorm_apply(lp["ln2"], x)
+        if cfg.is_moe:
+            y = _moe_ffn(lp, h.reshape(b * s, -1), cfg, rules).reshape(x.shape)
+        else:
+            y = _dense_ffn(lp, h)
+        kc = jnp.zeros((b, max_len, cfg.n_kv_heads, cfg.d_head), k.dtype)
+        vc = jnp.zeros_like(kc)
+        kc = jax.lax.dynamic_update_slice(kc, k, (0, 0, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v, (0, 0, 0, 0))
+        return x + y, (kc, vc)
+
+    x, (kcache, vcache) = jax.lax.scan(body, x, params["layers"])
+    x = nn.rmsnorm_apply(params["ln_f"], x[:, -1:])
+    logits = (x @ params["unembed"].astype(x.dtype))[:, 0]
+    cache = {"k": kcache, "v": vcache, "len": jnp.asarray(s, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(params, cache: dict, tokens: jax.Array, cfg: TransformerConfig, rules=None):
+    """One autoregressive step. tokens (B,) -> logits (B, V), updated cache."""
+    b = tokens.shape[0]
+    t = cache["k"].shape[2]
+    cur = cache["len"]
+    x = params["embed"].astype(cfg.param_dtype)[tokens][:, None, :]  # (B,1,d)
+    pos = cur[None]
+
+    def body(x, inputs):
+        lp, kc, vc = inputs
+        q, k, v = _attn_proj(lp, nn.rmsnorm_apply(lp["ln1"], x), cfg, pos)
+        kc = jax.lax.dynamic_update_slice(kc, k, (0, cur, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v, (0, cur, 0, 0))
+        # full-length masked attention against the cache. GQA via grouped
+        # einsum — never repeat/materialise KV per query head (a broadcast
+        # repeat forces SPMD to all-gather the sharded cache; §Perf cell D).
+        rep = cfg.n_heads // cfg.n_kv_heads
+        qg = q.reshape(b, 1, cfg.n_kv_heads, rep, cfg.d_head)
+        sc = jnp.einsum("bqgrd,btgd->bgrqt", qg, kc).astype(jnp.float32)
+        sc = sc * cfg.d_head**-0.5
+        mask = (jnp.arange(t) <= cur)[None, None, None, None, :]
+        sc = jnp.where(mask, sc, -jnp.inf)
+        w = jax.nn.softmax(sc, axis=-1).astype(vc.dtype)
+        o = jnp.einsum("bgrqt,btgd->bqgrd", w, vc)
+        x = x + nn.dense_apply(lp["wo"], o.reshape(b, 1, cfg.n_heads * cfg.d_head))
+        h = nn.rmsnorm_apply(lp["ln2"], x)
+        if cfg.is_moe:
+            y = _moe_ffn(lp, h.reshape(b, -1), cfg, rules).reshape(x.shape)
+        else:
+            y = _dense_ffn(lp, h)
+        return x + y, (kc, vc)
+
+    x, (kcache, vcache) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    x = nn.rmsnorm_apply(params["ln_f"], x)
+    logits = (x @ params["unembed"].astype(x.dtype))[:, 0]
+    new_cache = {"k": kcache, "v": vcache, "len": cur + 1}
+    return logits, new_cache

@@ -1,0 +1,238 @@
+"""Step builders: per-family train/serve steps with sharding trees attached.
+
+Each make_* returns (fn, in_specs, out_specs_or_None, abstract_args) where
+in_specs are PartitionSpec trees matching fn's positional args — everything
+the launcher and the multi-pod dry-run need to jit, lower and compile.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.common import SDS
+from repro.distributed.sharding import ShardingRules
+from repro.models import recsys as rec
+from repro.models import transformer as tr
+from repro.models.gnn import egnn as egnn_mod
+from repro.models.gnn import gcn as gcn_mod
+from repro.models.gnn import mace as mace_mod
+from repro.models.gnn import nequip as nequip_mod
+from repro.optim import adamw
+
+GNN_MODULES = {
+    "gcn-cora": gcn_mod,
+    "egnn": egnn_mod,
+    "nequip": nequip_mod,
+    "mace": mace_mod,
+}
+
+
+def _abstract(tree):
+    return jax.tree.map(lambda x: SDS(x.shape, x.dtype), tree)
+
+
+def _replicated_like(tree):
+    return jax.tree.map(lambda _: P(), tree)
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+
+def lm_param_state(cfg: tr.TransformerConfig, rules: ShardingRules):
+    pspecs = tr.param_specs(cfg, rules)
+    params_abs = jax.eval_shape(functools.partial(tr.init_params, cfg=cfg), jax.random.PRNGKey(0))
+    opt_abs = jax.eval_shape(adamw.init, params_abs)
+    ospecs = adamw.state_specs(pspecs)
+    return params_abs, pspecs, opt_abs, ospecs
+
+
+def make_lm_train(cfg: tr.TransformerConfig, rules: ShardingRules, opt_cfg=adamw.AdamWConfig()):
+    params_abs, pspecs, opt_abs, ospecs = lm_param_state(cfg, rules)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(tr.loss_fn)(params, batch, cfg, rules)
+        params, opt_state, gnorm = adamw.update(grads, opt_state, params, opt_cfg)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    bspec = {"tokens": P(rules.batch, None), "labels": P(rules.batch, None)}
+    in_specs = (pspecs, ospecs, bspec)
+    out_specs = (pspecs, ospecs, {"loss": P(), "grad_norm": P()})
+    return train_step, in_specs, out_specs, (params_abs, opt_abs)
+
+
+def make_lm_prefill(cfg: tr.TransformerConfig, rules: ShardingRules, max_len: int):
+    params_abs, pspecs, _, _ = lm_param_state(cfg, rules)
+
+    def prefill_step(params, tokens):
+        return tr.prefill(params, tokens, cfg, max_len, rules)
+
+    cspecs = tr.cache_specs(cfg, rules)
+    in_specs = (pspecs, P(rules.batch, None))
+    out_specs = (P(rules.batch, rules.ax(rules.tp, cfg.vocab)), cspecs)
+    return prefill_step, in_specs, out_specs, (params_abs,)
+
+
+def make_lm_decode(cfg: tr.TransformerConfig, rules: ShardingRules, cache_batch: int,
+                   cache_len: int, *, cache_layout: str = "auto"):
+    params_abs, pspecs, _, _ = lm_param_state(cfg, rules)
+    cache_abs = jax.eval_shape(
+        functools.partial(tr.init_cache, cfg, cache_batch, cache_len)
+    )
+
+    def decode(params, cache, tokens):
+        return tr.decode_step(params, cache, tokens, cfg, rules)
+
+    cspecs = tr.cache_specs(cfg, rules, cache_layout, batch_size=cache_batch)
+    bax = rules.ax(rules.batch, cache_batch)
+    in_specs = (pspecs, cspecs, P(bax))
+    out_specs = (P(bax, rules.ax(rules.tp, cfg.vocab)), cspecs)
+    return decode, in_specs, out_specs, (params_abs, cache_abs)
+
+
+# ---------------------------------------------------------------------------
+# GNN family — edge arrays sharded over every mesh axis, nodes over batch axes
+# ---------------------------------------------------------------------------
+
+def gnn_batch_specs(rules: ShardingRules, batch_abs: dict, node_shard: str = "batch") -> dict:
+    """node_shard: 'batch' = nodes over the data axes (default);
+    'all' = nodes over every mesh axis (aggregation becomes reduce-scatter
+    instead of all-reduce — the §Perf hillclimb variant)."""
+    all_axes = tuple(rules.mesh.axis_names)
+    node_axes = all_axes if node_shard == "all" else rules.batch
+    specs = {}
+    for name, arr in batch_abs.items():
+        if name == "edge_index":
+            specs[name] = P(None, all_axes)
+        elif name in ("node_feat", "pos", "species", "labels", "graph_id"):
+            specs[name] = P(node_axes, *([None] * (len(arr.shape) - 1)))
+        else:
+            specs[name] = P(*([None] * len(arr.shape)))
+    return specs
+
+
+def make_gnn_train(arch_id: str, cfg, rules: ShardingRules, batch_abs: dict,
+                   opt_cfg=adamw.AdamWConfig(), *, node_shard: str = "batch"):
+    mod = GNN_MODULES[arch_id]
+    params_abs = jax.eval_shape(functools.partial(mod.init_params, cfg=cfg), jax.random.PRNGKey(0))
+    pspecs = _replicated_like(params_abs)  # GNN params are small -> replicated
+    opt_abs = jax.eval_shape(adamw.init, params_abs)
+    ospecs = adamw.state_specs(pspecs)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(mod.loss_fn)(params, batch, cfg)
+        params, opt_state, gnorm = adamw.update(grads, opt_state, params, opt_cfg)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    bspec = gnn_batch_specs(rules, batch_abs, node_shard)
+    in_specs = (pspecs, ospecs, bspec)
+    out_specs = (pspecs, ospecs, {"loss": P(), "grad_norm": P()})
+    return train_step, in_specs, out_specs, (params_abs, opt_abs)
+
+
+# ---------------------------------------------------------------------------
+# recsys family
+# ---------------------------------------------------------------------------
+
+def recsys_param_state(cfg, rules: ShardingRules):
+    pspecs = rec.param_specs(cfg, rules)
+    params_abs = jax.eval_shape(functools.partial(rec.init_params, cfg=cfg), jax.random.PRNGKey(0))
+    opt_abs = jax.eval_shape(adamw.init, params_abs)
+    ospecs = adamw.state_specs(pspecs)
+    return params_abs, pspecs, opt_abs, ospecs
+
+
+def make_recsys_train(cfg, rules: ShardingRules, opt_cfg=adamw.AdamWConfig()):
+    params_abs, pspecs, opt_abs, ospecs = recsys_param_state(cfg, rules)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(rec.loss_fn)(params, batch, cfg)
+        params, opt_state, gnorm = adamw.update(grads, opt_state, params, opt_cfg)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    bspec = {"sparse_ids": P(rules.batch, None, None), "labels": P(rules.batch)}
+    in_specs = (pspecs, ospecs, bspec)
+    out_specs = (pspecs, ospecs, {"loss": P(), "grad_norm": P()})
+    return train_step, in_specs, out_specs, (params_abs, opt_abs)
+
+
+def make_recsys_forward(cfg, rules: ShardingRules):
+    params_abs, pspecs, _, _ = recsys_param_state(cfg, rules)
+
+    def fwd(params, batch):
+        return rec.forward(params, batch, cfg)
+
+    bspec = {"sparse_ids": P(rules.batch, None, None), "labels": P(rules.batch)}
+    return fwd, (pspecs, bspec), P(rules.batch), (params_abs,)
+
+
+def make_recsys_retrieval(cfg, rules: ShardingRules, n_candidates: int, k: int = 100):
+    params_abs, pspecs, _, _ = recsys_param_state(cfg, rules)
+
+    def retrieve(params, batch):
+        # dry-run path: the jnp reference form (the Pallas kernel is the
+        # device hot path; XLA lowers this identically for roofline terms)
+        return rec.retrieval_score(params, dict(batch, n_candidates=n_candidates), cfg,
+                                   k=k, use_pallas=False)
+
+    bspec = {"sparse_ids": P(None, None, None)}
+    return retrieve, (pspecs, bspec), None, (params_abs,)
+
+
+# ---------------------------------------------------------------------------
+# KNN-Index (the paper) — distributed build sweep + sharded serving
+# ---------------------------------------------------------------------------
+
+def make_knn_build(cfg, rules: ShardingRules, use_pallas: bool = False,
+                   *, contiguous: bool = False):
+    """contiguous=True is the §Perf variant: vertices are renumbered by
+    (level, position) on the host, so each level's results land in one
+    dynamic-update-slice instead of a scatter — in-place with donation."""
+    from repro.core.construct_jax import _sweep_step
+
+    if contiguous:
+        def step(level_start, nbr, w, extra_ids, extra_d, vk_ids, vk_d):
+            s, t = nbr.shape
+            valid = nbr >= 0
+            nbr_c = jnp.where(valid, nbr, vk_ids.shape[0] - 1)
+            g_ids = vk_ids[nbr_c]
+            g_d = w[..., None] + vk_d[nbr_c]
+            g_ids = jnp.where(valid[..., None], g_ids, -1)
+            cand_ids = jnp.concatenate([g_ids.reshape(s, t * cfg.k), extra_ids], axis=1)
+            cand_d = jnp.concatenate([g_d.reshape(s, t * cfg.k), extra_d], axis=1)
+            from repro.kernels import ops as kops
+
+            m_ids, m_d = kops.topk_merge(cand_ids, cand_d, cfg.k, use_pallas=use_pallas)
+            vk_ids = jax.lax.dynamic_update_slice(vk_ids, m_ids, (level_start, 0))
+            vk_d = jax.lax.dynamic_update_slice(vk_d, m_d, (level_start, 0))
+            return vk_ids, vk_d
+
+        flat = tuple(rules.mesh.axis_names)
+        in_specs = (P(), P(flat, None), P(flat, None), P(flat, None), P(flat, None),
+                    P(None, None), P(None, None))
+        out_specs = (P(None, None), P(None, None))
+        return step, in_specs, out_specs, None
+
+    def step(verts, nbr, w, extra_ids, extra_d, vk_ids, vk_d):
+        return _sweep_step(verts, nbr, w, extra_ids, extra_d, vk_ids, vk_d,
+                           k=cfg.k, use_pallas=use_pallas)
+
+    flat = tuple(rules.mesh.axis_names)
+    in_specs = (P(flat), P(flat, None), P(flat, None), P(flat, None), P(flat, None),
+                P(None, None), P(None, None))
+    out_specs = (P(None, None), P(None, None))
+    return step, in_specs, out_specs, None
+
+
+def make_knn_serve(cfg, rules: ShardingRules):
+    def serve(vk_ids, vk_d, queries):
+        return vk_ids[queries], vk_d[queries]
+
+    flat = tuple(rules.mesh.axis_names)
+    in_specs = (P(flat, None), P(flat, None), P(None))
+    out_specs = (P(None, None), P(None, None))
+    return serve, in_specs, out_specs, None

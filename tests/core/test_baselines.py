@@ -1,0 +1,36 @@
+"""TEN-Index-lite baseline: correct kNN + H2H-dominated size profile."""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.baselines import TENIndexLite
+from repro.core.index import indices_equivalent
+from repro.core.reference import dijkstra_cons
+from repro.graph.generators import pick_objects, random_connected_graph, road_network
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    st.tuples(
+        st.integers(min_value=6, max_value=40),
+        st.integers(min_value=0, max_value=40),
+        st.integers(min_value=0, max_value=10_000),
+        st.integers(min_value=1, max_value=5),
+    )
+)
+def test_ten_lite_matches_oracle(p):
+    n, extra, seed, k = p
+    g = random_connected_graph(n, extra_edges=extra, seed=seed)
+    objects = pick_objects(n, 0.6, seed=seed)
+    ten = TENIndexLite(g, objects, k)
+    oracle = dijkstra_cons(g, objects, k)
+    assert indices_equivalent(oracle, ten.build_knn_index())
+
+
+def test_h2h_dominates_size():
+    """The paper's motivation: H2H labels dwarf the kNN part of TEN-Index."""
+    g = road_network(16, 16, seed=1)
+    objects = pick_objects(g.n, 0.1, seed=1)
+    ten = TENIndexLite(g, objects, 10)
+    s = ten.size_entries()
+    assert s["h2h_entries"] > 3 * s["ktnn_entries"]

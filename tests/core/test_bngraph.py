@@ -1,0 +1,83 @@
+"""Property tests for Algorithm 1 (BN-Graph) — Definition 5.3 invariants."""
+import heapq
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.bngraph import build_bngraph
+from repro.graph.generators import random_connected_graph
+
+
+def dijkstra_all(g, u):
+    dist = np.full(g.n, np.inf)
+    dist[u] = 0.0
+    h = [(0.0, u)]
+    while h:
+        d, v = heapq.heappop(h)
+        if d > dist[v]:
+            continue
+        nbrs, ws = g.neighbors(v)
+        for nb, w in zip(nbrs.tolist(), ws.tolist()):
+            if d + w < dist[nb]:
+                dist[nb] = d + w
+                heapq.heappush(h, (d + w, nb))
+    return dist
+
+
+graph_params = st.tuples(
+    st.integers(min_value=4, max_value=40),   # n
+    st.integers(min_value=0, max_value=60),   # extra edges
+    st.integers(min_value=0, max_value=10_000),  # seed
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(graph_params)
+def test_bngraph_invariants(params):
+    n, extra, seed = params
+    g = random_connected_graph(n, extra_edges=extra, seed=seed)
+    bn = build_bngraph(g)
+    # condition (1): same vertex set
+    assert bn.n == g.n
+    exact = {u: dijkstra_all(g, u) for u in range(g.n)}
+    # condition (2): every G' edge weight equals the true distance in G
+    for v in range(g.n):
+        for u, w in bn.bns(v):
+            assert np.isclose(w, exact[v][u]), (v, u, w, exact[v][u])
+    # condition (3) via G' Dijkstra: distances preserved
+    adj = bn.adjacency()
+    for u in range(0, g.n, max(1, g.n // 5)):
+        dist = np.full(g.n, np.inf)
+        dist[u] = 0.0
+        h = [(0.0, u)]
+        while h:
+            d, v = heapq.heappop(h)
+            if d > dist[v]:
+                continue
+            for nb, w in adj[v].items():
+                if d + w < dist[nb]:
+                    dist[nb] = d + w
+                    heapq.heappush(h, (d + w, nb))
+        assert np.allclose(dist, exact[u]), u
+
+
+@settings(max_examples=10, deadline=None)
+@given(graph_params)
+def test_level_schedule_respects_dependencies(params):
+    n, extra, seed = params
+    g = random_connected_graph(n, extra_edges=extra, seed=seed)
+    bn = build_bngraph(g)
+    for v in range(g.n):
+        for u, _ in bn.bns_lower(v):
+            assert bn.level_up[u] < bn.level_up[v]
+        for u, _ in bn.bns_higher(v):
+            assert bn.level_down[u] < bn.level_down[v]
+
+
+def test_orders_all_build():
+    g = random_connected_graph(30, extra_edges=20, seed=3)
+    for order in ("mindeg", "degree", "id"):
+        bn = build_bngraph(g, order=order)
+        assert bn.n == g.n

@@ -1,0 +1,59 @@
+"""Algorithm 2 / Algorithm 3 / JAX level-sync construction vs Dijkstra oracle."""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.bngraph import build_bngraph
+from repro.core.construct_jax import build_knn_index_jax, prepare_sweep
+from repro.core.index import indices_equivalent
+from repro.core.reference import dijkstra_cons, knn_index_cons, knn_index_cons_plus
+from repro.graph.generators import pick_objects, random_connected_graph, road_network
+
+params = st.tuples(
+    st.integers(min_value=5, max_value=45),
+    st.integers(min_value=0, max_value=60),
+    st.integers(min_value=0, max_value=10_000),
+    st.floats(min_value=0.2, max_value=1.0),
+    st.integers(min_value=1, max_value=8),
+)
+
+
+@settings(max_examples=20, deadline=None)
+@given(params)
+def test_alg2_alg3_match_oracle(p):
+    n, extra, seed, mu, k = p
+    g = random_connected_graph(n, extra_edges=extra, seed=seed)
+    objects = pick_objects(n, mu, seed=seed)
+    bn = build_bngraph(g)
+    oracle = dijkstra_cons(g, objects, k)
+    assert indices_equivalent(oracle, knn_index_cons(bn, objects, k))
+    assert indices_equivalent(oracle, knn_index_cons_plus(bn, objects, k))
+
+
+@settings(max_examples=8, deadline=None)
+@given(params)
+def test_jax_construction_matches_reference(p):
+    n, extra, seed, mu, k = p
+    g = random_connected_graph(n, extra_edges=extra, seed=seed)
+    objects = pick_objects(n, mu, seed=seed)
+    bn = build_bngraph(g)
+    ref = knn_index_cons_plus(bn, objects, k)
+    jx = build_knn_index_jax(bn, objects, k, use_pallas=False)
+    assert indices_equivalent(ref, jx)
+
+
+def test_jax_construction_pallas_road():
+    g = road_network(14, 14, seed=5)
+    objects = pick_objects(g.n, 0.2, seed=5)
+    bn = build_bngraph(g)
+    ref = knn_index_cons_plus(bn, objects, 6)
+    jx = build_knn_index_jax(bn, objects, 6, use_pallas=True)
+    assert indices_equivalent(ref, jx)
+
+
+def test_sweep_plan_occupancy_reported():
+    g = road_network(12, 12, seed=1)
+    bn = build_bngraph(g)
+    plan = prepare_sweep(bn, "up")
+    assert 0 < plan.occupancy <= 1
+    assert sum(lb.size for lb in plan.levels) == g.n

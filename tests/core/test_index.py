@@ -1,0 +1,31 @@
+"""KNN-Index structure: O(k) query, progressive output, bounded size."""
+import numpy as np
+
+from repro.core.bngraph import build_bngraph
+from repro.core.index import index_from_lists
+from repro.core.reference import dijkstra_knn, knn_index_cons_plus
+from repro.graph.generators import pick_objects, road_network
+
+
+def test_query_and_progressive():
+    g = road_network(12, 12, seed=0)
+    objects = pick_objects(g.n, 0.2, seed=0)
+    k = 8
+    bn = build_bngraph(g)
+    idx = knn_index_cons_plus(bn, objects, k)
+    is_obj = np.zeros(g.n, bool)
+    is_obj[objects] = True
+    for u in range(0, g.n, 17):
+        full = idx.query(u)
+        oracle = dijkstra_knn(g, is_obj, k, u)
+        assert [d for _, d in full] == [d for _, d in oracle]
+        # progressive output yields the same prefix at every i (Theorem 4.4)
+        prog = list(idx.query_progressive(u))
+        assert prog == full
+        # smaller-k queries answered from the same index (Section 4.2 remark)
+        assert idx.query(u, 3) == full[:3]
+
+
+def test_size_bound_is_exactly_nk():
+    idx = index_from_lists(100, 7, [[(0, 1.0)]] * 100)
+    assert idx.size_bytes() == 100 * 7 * 8  # Theorem 4.5: O(n*k)

@@ -1,0 +1,56 @@
+"""Algorithms 4/5 (object insert/delete) vs rebuild-from-scratch."""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.bngraph import build_bngraph
+from repro.core.index import indices_equivalent
+from repro.core.reference import knn_index_cons_plus
+from repro.core.updates import delete_object, insert_object
+from repro.graph.generators import pick_objects, random_connected_graph, road_network
+
+params = st.tuples(
+    st.integers(min_value=8, max_value=40),
+    st.integers(min_value=0, max_value=40),
+    st.integers(min_value=0, max_value=10_000),
+    st.integers(min_value=1, max_value=5),
+    st.integers(min_value=1, max_value=12),  # number of updates
+)
+
+
+@settings(max_examples=15, deadline=None)
+@given(params)
+def test_mixed_updates_match_rebuild(p):
+    n, extra, seed, k, n_updates = p
+    rng = np.random.default_rng(seed)
+    g = random_connected_graph(n, extra_edges=extra, seed=seed)
+    objects = set(pick_objects(n, 0.5, seed=seed).tolist())
+    if len(objects) <= k + n_updates:  # keep |M| > k through deletions
+        objects |= set(range(min(n, k + n_updates + 2)))
+    bn = build_bngraph(g)
+    idx = knn_index_cons_plus(bn, np.array(sorted(objects)), k)
+    for _ in range(n_updates):
+        u = int(rng.integers(0, n))
+        if u in objects:
+            if len(objects) <= k + 1:
+                continue
+            delete_object(bn, idx, u)
+            objects.discard(u)
+        else:
+            insert_object(bn, idx, u)
+            objects.add(u)
+    fresh = knn_index_cons_plus(bn, np.array(sorted(objects)), k)
+    assert indices_equivalent(fresh, idx)
+
+
+def test_insert_then_delete_roundtrip():
+    g = road_network(10, 10, seed=2)
+    objects = pick_objects(g.n, 0.3, seed=2)
+    bn = build_bngraph(g)
+    idx = knn_index_cons_plus(bn, objects, 4)
+    before = idx.copy()
+    outside = [v for v in range(g.n) if v not in set(objects.tolist())][0]
+    insert_object(bn, idx, outside)
+    delete_object(bn, idx, outside)
+    assert indices_equivalent(before, idx)
+    assert np.array_equal(before.ids, idx.ids)

@@ -1,0 +1,37 @@
+"""BN-Graph tropical certificate (core/verify.py + the minplus kernel)."""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.bngraph import build_bngraph
+from repro.core.verify import certificate, relaxation_stable
+from repro.graph.generators import random_connected_graph
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.tuples(st.integers(5, 35), st.integers(0, 40), st.integers(0, 1000)))
+def test_bngraph_passes_certificate(p):
+    n, extra, seed = p
+    g = random_connected_graph(n, extra_edges=extra, seed=seed)
+    bn = build_bngraph(g)
+    cert = certificate(bn, use_pallas=False)
+    assert cert["ok"], cert
+
+
+def test_certificate_catches_corruption():
+    g = random_connected_graph(20, extra_edges=15, seed=3)
+    bn = build_bngraph(g)
+    assert relaxation_stable(bn, use_pallas=False)
+    # corrupt one edge weight upward -> a shorter two-hop path now exists
+    for v in range(bn.n):
+        sel = bn.lo_ids[v] >= 0
+        if sel.sum() >= 2:
+            bn.lo_w[v][np.argmax(sel)] += 100.0
+            break
+    assert not relaxation_stable(bn, use_pallas=False)
+
+
+def test_certificate_with_pallas_kernel():
+    g = random_connected_graph(24, extra_edges=12, seed=7)
+    bn = build_bngraph(g)
+    assert relaxation_stable(bn, use_pallas=True)

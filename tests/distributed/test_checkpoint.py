@@ -1,0 +1,52 @@
+"""Checkpoint manager: atomic commit, resume, pruning."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import manager as ckpt
+
+
+def _tree():
+    return {
+        "a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "nested": {"b": jnp.ones((5,), jnp.bfloat16), "c": jnp.asarray(3, jnp.int32)},
+    }
+
+
+def test_save_restore_roundtrip(tmp_path):
+    t = _tree()
+    ckpt.save(tmp_path, 7, t)
+    restored, step = ckpt.restore(tmp_path, t)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
+def test_latest_and_prune(tmp_path):
+    t = _tree()
+    for s in (1, 2, 3, 4):
+        ckpt.save(tmp_path, s, t)
+    assert ckpt.latest_step(tmp_path) == 4
+    ckpt.prune(tmp_path, keep=2)
+    assert ckpt.latest_step(tmp_path) == 4
+    assert sorted(p.name for p in tmp_path.iterdir()) == ["step_00000003", "step_00000004"]
+
+
+def test_incomplete_tmp_dir_ignored(tmp_path):
+    t = _tree()
+    ckpt.save(tmp_path, 5, t)
+    # simulate a crash mid-save: tmp dir without manifest
+    os.makedirs(tmp_path / "step_00000009.tmp")
+    assert ckpt.latest_step(tmp_path) == 5
+    restored, step = ckpt.restore(tmp_path, t)
+    assert step == 5
+
+
+def test_dtype_restored_via_like(tmp_path):
+    t = _tree()
+    ckpt.save(tmp_path, 1, t)
+    restored, _ = ckpt.restore(tmp_path, t)
+    assert restored["nested"]["b"].dtype == jnp.bfloat16

@@ -1,0 +1,30 @@
+"""Single-process units for the fault-tolerance/straggler/compression pieces."""
+import numpy as np
+
+from repro.distributed.compression import dequantize_int8, quantize_int8
+from repro.distributed.straggler import StepTimer, quorum_ok
+
+
+def test_quantize_roundtrip_error_bounded():
+    rng = np.random.default_rng(0)
+    import jax.numpy as jnp
+
+    x = jnp.asarray(rng.standard_normal((64, 64)), jnp.float32)
+    q, scale = quantize_int8(x)
+    back = dequantize_int8(q, scale)
+    max_err = float(np.abs(np.asarray(back) - np.asarray(x)).max())
+    assert max_err <= float(scale) * 0.5 + 1e-6  # half-ULP of the int8 grid
+
+
+def test_step_timer_deadline():
+    t = StepTimer(tolerance=2.0, alpha=0.5)
+    assert t.deadline == float("inf")
+    t.update(1.0)
+    t.update(1.0)
+    assert abs(t.mean - 1.0) < 1e-9
+    assert abs(t.deadline - 2.0) < 1e-9
+
+
+def test_quorum():
+    assert quorum_ok(0.97, quorum=0.95)
+    assert not quorum_ok(0.90, quorum=0.95)

@@ -1,0 +1,50 @@
+"""Graph substrate: CSR invariants, generators, k-hop sampler."""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.graph.csr import from_edges, is_connected
+from repro.graph.generators import pick_objects, random_connected_graph, road_network
+from repro.graph.sampler import pad_subgraph, sample_khop
+
+
+def test_from_edges_symmetry_and_min_parallel():
+    g = from_edges(4, [(0, 1, 3.0), (1, 0, 2.0), (1, 2, 5.0), (2, 3, 1.0)])
+    nbrs, ws = g.neighbors(0)
+    assert list(nbrs) == [1] and list(ws) == [2.0]  # parallel edge keeps min
+    nbrs1, _ = g.neighbors(1)
+    assert 0 in nbrs1 and 2 in nbrs1
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 60), st.integers(0, 80), st.integers(0, 1000))
+def test_random_graph_connected(n, extra, seed):
+    g = random_connected_graph(n, extra_edges=extra, seed=seed)
+    assert is_connected(g)
+    # CSR degree bookkeeping consistent
+    assert g.indptr[-1] == len(g.indices)
+
+
+def test_road_network_stats():
+    g = road_network(20, 20, seed=0)
+    assert g.n == 400 and is_connected(g)
+    deg = g.degrees()
+    assert deg.mean() < 5  # road-like sparsity
+
+
+def test_sampler_fanout_bounds():
+    g = road_network(15, 15, seed=1)
+    seeds = np.asarray([0, 7, 30], dtype=np.int64)
+    sub = sample_khop(g, seeds, (4, 3), seed=0)
+    # every seed present, edges reference valid local ids
+    assert len(sub.seeds_local) == 3
+    assert sub.edge_index.max() < len(sub.nodes)
+    # fanout bound: layer1 <= 3*4 edges, layer2 <= (3*4)*3
+    assert sub.edge_index.shape[1] <= 3 * 4 + 3 * 4 * 3
+    padded = pad_subgraph(sub, 256, 512)
+    assert padded.edge_index.shape == (2, 512) and len(padded.nodes) == 256
+
+
+def test_pick_objects_density():
+    m = pick_objects(1000, 0.05, seed=0)
+    assert len(m) == 50 and len(np.unique(m)) == 50

@@ -1,0 +1,108 @@
+"""Per-kernel shape/dtype sweeps: pallas (interpret) vs pure-jnp oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+@pytest.mark.parametrize("b", [1, 7, 128, 300])
+@pytest.mark.parametrize("c,k", [(16, 3), (130, 10), (257, 20)])
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_topk_merge_sweep(b, c, k, dtype):
+    rng = _rng(b * 1000 + c)
+    ids = rng.integers(0, max(4, c // 3), size=(b, c)).astype(np.int32)
+    ids[rng.random((b, c)) < 0.15] = -1
+    d = np.round(rng.uniform(0, 64, size=(b, c)), 1).astype(dtype)
+    got_i, got_d = ops.topk_merge(jnp.asarray(ids), jnp.asarray(d), k)
+    want_i, want_d = ref.topk_merge_ref(jnp.asarray(ids), jnp.asarray(d), k)
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    np.testing.assert_allclose(
+        np.nan_to_num(np.asarray(got_d, np.float32), posinf=1e30),
+        np.nan_to_num(np.asarray(want_d, np.float32), posinf=1e30),
+        rtol=1e-3,
+    )
+
+
+def test_topk_merge_all_invalid_row():
+    ids = jnp.full((4, 20), -1, jnp.int32)
+    d = jnp.zeros((4, 20), jnp.float32)
+    got_i, got_d = ops.topk_merge(ids, d, 5)
+    assert (np.asarray(got_i) == -1).all()
+    assert np.isinf(np.asarray(got_d)).all()
+
+
+@pytest.mark.parametrize("m,k,n", [(32, 32, 32), (70, 90, 130), (128, 256, 128)])
+@pytest.mark.parametrize("dtype", [np.float32])
+def test_minplus_sweep(m, k, n, dtype):
+    rng = _rng(m + k + n)
+    a = rng.uniform(0, 50, size=(m, k)).astype(dtype)
+    b = rng.uniform(0, 50, size=(k, n)).astype(dtype)
+    got = ops.minplus_matmul(jnp.asarray(a), jnp.asarray(b), block_m=32, block_n=64, block_k=32)
+    want = ref.minplus_matmul_ref(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_minplus_with_inf_padding():
+    a = np.full((8, 8), np.inf, np.float32)
+    a[0, 0] = 1.0
+    b = np.full((8, 8), np.inf, np.float32)
+    b[0, 0] = 2.0
+    got = np.asarray(ops.minplus_matmul(jnp.asarray(a), jnp.asarray(b), block_m=8, block_n=8, block_k=8))
+    assert got[0, 0] == 3.0 and np.isinf(got[1, 1])
+
+
+@pytest.mark.parametrize("b,n,k", [(1, 1024, 5), (8, 10000, 16), (3, 4096, 100)])
+@pytest.mark.parametrize("dtype", [np.float32])
+def test_retrieval_topk_sweep(b, n, k, dtype):
+    rng = _rng(b * n)
+    s = rng.standard_normal((b, n)).astype(dtype)
+    got_i, got_d = ops.retrieval_topk(jnp.asarray(s), k, block_b=1, block_n=1024)
+    want_i, want_d = ref.retrieval_topk_ref(jnp.asarray(s), k)
+    np.testing.assert_allclose(np.asarray(got_d), np.asarray(want_d), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+
+
+@pytest.mark.parametrize(
+    "b,s,t,h,hkv,d,bq,bk,causal",
+    [
+        (2, 32, 32, 4, 2, 8, 8, 16, True),
+        (1, 64, 64, 4, 4, 16, 16, 16, False),
+        (2, 16, 16, 8, 2, 8, 16, 8, True),
+        (1, 48, 48, 2, 1, 32, 16, 24, True),
+    ],
+)
+def test_flash_attention_sweep(b, s, t, h, hkv, d, bq, bk, causal):
+    rng = _rng(s * t)
+    q = jnp.asarray(rng.standard_normal((b, s, h, d)), np.float32)
+    k = jnp.asarray(rng.standard_normal((b, t, hkv, d)), np.float32)
+    v = jnp.asarray(rng.standard_normal((b, t, hkv, d)), np.float32)
+    got = ops.flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bk)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    rng = _rng(3)
+    q = jnp.asarray(rng.standard_normal((1, 32, 4, 16)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((1, 32, 2, 16)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((1, 32, 2, 16)), jnp.bfloat16)
+    got = ops.flash_attention(q, k, v, causal=True, block_q=16, block_k=16)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=3e-2, atol=3e-2
+    )
+
+
+def test_retrieval_topk_matches_lax_topk():
+    rng = _rng(9)
+    s = rng.standard_normal((4, 2048)).astype(np.float32)
+    import jax
+
+    want, _ = jax.lax.top_k(jnp.asarray(s), 7)
+    _, got_d = ops.retrieval_topk(jnp.asarray(s), 7, block_b=4, block_n=512)
+    np.testing.assert_allclose(np.asarray(got_d), np.asarray(want), rtol=1e-6)

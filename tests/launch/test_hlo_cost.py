@@ -1,0 +1,106 @@
+"""Structural HLO cost model: loop trip-count correction (the basis of every
+roofline number in EXPERIMENTS.md §Roofline)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_cost import analyze
+
+
+def _compiled_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_cost_analysis_undercounts_scan_and_we_correct_it():
+    x = jnp.zeros((64, 128))
+    w = jnp.zeros((32, 128, 128))
+
+    def scan_fn(x, w):
+        def body(c, wi):
+            return c @ wi, None
+
+        y, _ = jax.lax.scan(body, x, w)
+        return y
+
+    def unroll_fn(x, w):
+        for i in range(32):
+            x = x @ w[i]
+        return x
+
+    expected = 2 * 64 * 128 * 128 * 32
+    compiled = jax.jit(scan_fn).lower(x, w).compile()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    raw = ca.get("flops", 0.0)
+    assert raw < expected / 4, "XLA cost_analysis counts loop bodies once"
+
+    corrected = analyze(compiled.as_text())
+    assert corrected["flops"] == expected
+    assert 32 in corrected["loops"].values()
+    # the unrolled program agrees
+    assert analyze(_compiled_text(unroll_fn, x, w))["flops"] == expected
+
+
+def test_nested_loops_multiply():
+    x = jnp.zeros((16, 16))
+    w = jnp.zeros((4, 16, 16))
+
+    def fn(x, w):
+        def outer(c, _):
+            def inner(c2, wi):
+                return c2 @ wi, None
+
+            c, _ = jax.lax.scan(inner, c, w)
+            return c, None
+
+        y, _ = jax.lax.scan(outer, x, None, length=5)
+        return y
+
+    got = analyze(_compiled_text(fn, x, w))["flops"]
+    assert got == 2 * 16 * 16 * 16 * 4 * 5
+
+
+def test_collectives_weighted_by_trips():
+    hlo = """
+%body (arg: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %arg = (s32[], f32[8]) parameter(0)
+  %i = s32[] get-tuple-element(%arg), index=0
+  %x = f32[8]{0} get-tuple-element(%arg), index=1
+  %ar = f32[8]{0} all-reduce(%x), to_apply=%sum
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8]) tuple(%ni, %ar)
+}
+
+%cond (arg: (s32[], f32[8])) -> pred[] {
+  %arg = (s32[], f32[8]) parameter(0)
+  %i = s32[] get-tuple-element(%arg), index=0
+  %lim = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i, %lim), direction=LT
+}
+
+ENTRY %main (p: f32[8]) -> f32[8] {
+  %p = f32[8]{0} parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[8]) tuple(%zero, %p)
+  %w = (s32[], f32[8]) while(%init), condition=%cond, body=%body
+  ROOT %out = f32[8]{0} get-tuple-element(%w), index=1
+}
+"""
+    r = analyze(hlo)
+    assert r["collective_counts"]["all-reduce"] == 10
+    assert r["collective_bytes"]["all-reduce"] == 10 * 8 * 4
+
+
+def test_traffic_windows_dynamic_slice():
+    hlo = """
+ENTRY %main (p: f32[1024,1024]) -> f32[8,1024] {
+  %p = f32[1024,1024]{1,0} parameter(0)
+  %z = s32[] constant(0)
+  ROOT %ds = f32[8,1024]{1,0} dynamic-slice(%p, %z, %z), dynamic_slice_sizes={8,1024}
+}
+"""
+    r = analyze(hlo)
+    # windowed: 2x output, NOT the 4 MB operand
+    assert r["traffic_bytes"] == 3 * 8 * 1024 * 4

@@ -1,0 +1,78 @@
+"""Launcher-level tests: dry-run machinery on a small mesh, HLO parsing,
+end-to-end train driver with checkpoint resume."""
+import re
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from conftest import REPO, run_devices_subprocess
+from repro.launch.hlo_analysis import _shape_bytes, collective_stats
+
+DRYRUN_SMALL = r"""
+import jax
+from repro.launch.mesh import make_mesh
+from repro.distributed.sharding import make_rules
+from repro.configs.registry import get_arch
+from repro.launch import dryrun
+from pathlib import Path
+import tempfile
+
+assert len(jax.devices()) == 8
+# monkeypatch the production mesh to the 8-device test mesh
+dryrun.make_production_mesh = lambda multi_pod=False: make_mesh(
+    (2, 2, 2) if multi_pod else (4, 2),
+    ("pod", "data", "model") if multi_pod else ("data", "model"))
+arch = get_arch("gcn-cora")
+out = Path(tempfile.mkdtemp())
+rec = dryrun.run_cell(arch, "molecule", arch.shapes["molecule"], multi_pod=True, out_dir=out)
+assert rec["n_chips"] == 8
+assert rec["per_device"]["flops"] > 0
+assert rec["bottleneck"] in ("compute_s", "memory_s", "collective_s")
+assert len(list(out.glob("*.json"))) == 1
+print("DRYRUN_SMALL_OK")
+"""
+
+
+def test_dryrun_machinery_small_mesh():
+    out = run_devices_subprocess(DRYRUN_SMALL, n_devices=8)
+    assert "DRYRUN_SMALL_OK" in out
+
+
+def test_hlo_shape_bytes():
+    assert _shape_bytes("f32[2,3]") == 24
+    assert _shape_bytes("bf16[128]") == 256
+    assert _shape_bytes("(f32[4], s32[2])") == 24
+    assert _shape_bytes("pred[]") == 1
+
+
+def test_collective_stats_parsing():
+    hlo = """
+  %ar = f32[16,4]{1,0} all-reduce(f32[16,4]{1,0} %x), replica_groups={}
+  %ag.1 = bf16[32]{0} all-gather(bf16[16]{0} %y), dimensions={0}
+  %st = f32[8]{0} all-reduce-start(f32[8]{0} %z)
+  %dn = f32[8]{0} all-reduce-done(f32[8]{0} %st)
+"""
+    s = collective_stats(hlo)
+    assert s["counts"]["all-reduce"] == 2  # plain + start (done skipped)
+    assert s["bytes_per_device"]["all-gather"] == 64
+    assert s["total_bytes_per_device"] == 16 * 4 * 4 + 64 + 32
+
+
+def test_train_driver_resume(tmp_path):
+    env_cmd = [
+        sys.executable, "-m", "repro.launch.train",
+        "--arch", "qwen2.5-3b", "--smoke", "--steps", "6",
+        "--ckpt-dir", str(tmp_path), "--ckpt-every", "3", "--log-every", "2",
+    ]
+    import os
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"{REPO}/src"
+    p1 = subprocess.run(env_cmd, capture_output=True, text=True, env=env, timeout=600)
+    assert p1.returncode == 0, p1.stderr
+    env_cmd[env_cmd.index("--steps") + 1] = "8"
+    p2 = subprocess.run(env_cmd, capture_output=True, text=True, env=env, timeout=600)
+    assert p2.returncode == 0, p2.stderr
+    assert "resumed from step 6" in p2.stdout

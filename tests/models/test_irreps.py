@@ -1,0 +1,95 @@
+"""Irreps algebra: CG identities, Wigner-D, sh equivariance, and E(3)
+invariance of the NequIP/MACE energies."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.models.gnn import irreps, mace, nequip
+
+
+def _random_rotation(seed):
+    rng = np.random.default_rng(seed)
+    q, _ = np.linalg.qr(rng.standard_normal((3, 3)))
+    if np.linalg.det(q) < 0:
+        q[:, 0] *= -1
+    return q
+
+
+def test_cg_dot_and_cross():
+    c110 = irreps.real_cg(1, 1, 0)[:, :, 0]
+    assert np.allclose(c110, np.eye(3) * c110[0, 0], atol=1e-12)
+    c111 = irreps.real_cg(1, 1, 1)
+    eps = np.zeros((3, 3, 3))
+    for i, j, k in [(0, 1, 2), (1, 2, 0), (2, 0, 1)]:
+        eps[i, j, k] = 1
+        eps[j, i, k] = -1
+    assert np.allclose(np.abs(c111), np.abs(eps) * np.abs(c111).max(), atol=1e-12)
+
+
+def test_cg_orthonormal_columns():
+    for (l1, l2, l3) in irreps.cg_paths(2):
+        c = irreps.real_cg(l1, l2, l3).reshape(-1, 2 * l3 + 1)
+        g = c.T @ c
+        assert np.allclose(g, np.eye(2 * l3 + 1) * g[0, 0], atol=1e-10), (l1, l2, l3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_wigner_orthogonal_and_sh_equivariant(seed):
+    q = _random_rotation(seed)
+    v = np.random.default_rng(seed).standard_normal((6, 3))
+    sh_v = irreps.sh(jnp.asarray(v, jnp.float64), 2)
+    sh_rv = irreps.sh(jnp.asarray(v @ q.T, jnp.float64), 2)
+    for l in (1, 2):
+        d = irreps.wigner_d(l, q)
+        assert np.allclose(d @ d.T, np.eye(2 * l + 1), atol=1e-10)
+        np.testing.assert_allclose(
+            np.asarray(sh_rv[l]), np.asarray(sh_v[l]) @ d.T, rtol=1e-6, atol=1e-6
+        )
+
+
+@pytest.mark.parametrize("model", ["nequip", "mace"])
+def test_energy_e3_invariance(model):
+    rng = np.random.default_rng(0)
+    n, e = 16, 40
+    batch = {
+        "species": jnp.asarray(rng.integers(0, 4, n), jnp.int32),
+        "pos": jnp.asarray(rng.standard_normal((n, 3)) * 1.5, jnp.float32),
+        "edge_index": jnp.asarray(rng.integers(0, n, (2, e)), jnp.int32),
+        "graph_id": jnp.zeros((n,), jnp.int32),
+        "graph_targets": jnp.zeros((1,), jnp.float32),
+    }
+    if model == "nequip":
+        cfg = nequip.NequIPConfig(name="t", n_layers=2, d_hidden=8, n_species=4)
+        mod = nequip
+    else:
+        cfg = mace.MACEConfig(name="t", n_layers=2, d_hidden=8, n_species=4)
+        mod = mace
+    params = mod.init_params(jax.random.PRNGKey(0), cfg)
+    e1 = float(mod.loss_fn(params, batch, cfg))
+    q = _random_rotation(3)
+    batch2 = dict(batch, pos=batch["pos"] @ jnp.asarray(q.T, jnp.float32) + 7.5)
+    e2 = float(mod.loss_fn(params, batch2, cfg))
+    np.testing.assert_allclose(e1, e2, rtol=1e-4)
+
+
+def test_mace_correlation_order_changes_output():
+    """corr=3 must produce genuinely higher-order terms than corr=1."""
+    rng = np.random.default_rng(1)
+    n, e = 10, 24
+    batch = {
+        "species": jnp.asarray(rng.integers(0, 4, n), jnp.int32),
+        "pos": jnp.asarray(rng.standard_normal((n, 3)), jnp.float32),
+        "edge_index": jnp.asarray(rng.integers(0, n, (2, e)), jnp.int32),
+        "graph_id": jnp.zeros((n,), jnp.int32),
+        "graph_targets": jnp.zeros((1,), jnp.float32),
+    }
+    c3 = mace.MACEConfig(name="t", n_layers=1, d_hidden=8, n_species=4, correlation_order=3)
+    c1 = mace.MACEConfig(name="t", n_layers=1, d_hidden=8, n_species=4, correlation_order=1)
+    params = mace.init_params(jax.random.PRNGKey(0), c3)
+    e3_ = float(mace.loss_fn(params, batch, c3))
+    e1_ = float(mace.loss_fn(params, batch, c1))
+    assert not np.isclose(e3_, e1_)
