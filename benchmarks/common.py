@@ -13,9 +13,24 @@ from repro.graph.generators import pick_objects, road_network
 
 DEFAULT_GRID = 48  # n = 2304 — CPU-container scale; same trends as Table 2
 
+# Machine-readable capture of everything row()/meta() emit, for --json output.
+RESULTS: list[dict] = []
+META: dict[str, object] = {}
+
+
+def reset_results() -> None:
+    RESULTS.clear()
+    META.clear()
+
 
 def row(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.3f},{derived}")
+    RESULTS.append({"name": name, "us_per_call": float(us_per_call), "derived": derived})
+
+
+def meta(name: str, value) -> None:
+    """Record a non-timing stat (occupancy, compile counts, ...) for --json."""
+    META[name] = value
 
 
 def time_us(fn, *, repeat: int = 3, number: int = 1) -> float:

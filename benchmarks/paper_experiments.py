@@ -19,7 +19,15 @@ import time
 
 import numpy as np
 
-from benchmarks.common import DEFAULT_GRID, bngraph, dataset, query_vertices, row, time_us
+from benchmarks.common import (
+    DEFAULT_GRID,
+    bngraph,
+    dataset,
+    meta,
+    query_vertices,
+    row,
+    time_us,
+)
 from repro.core.baselines import TENIndexLite
 from repro.core.bngraph import build_bngraph
 from repro.core.construct_jax import build_knn_index_jax
@@ -112,10 +120,32 @@ def exp4_indexing_time() -> None:
     row("exp4.cons.knn_index_cons", (t_bn + t_cons) * 1e6,
         f"alg2(bottom-up);x{(t_bn + t_cons) / (t_bn + t_plus):.1f}")
 
+    from repro.core import construct_jax
+
+    compiles_before = construct_jax.sweep_compile_count()
+    t0 = time.perf_counter()
+    build_knn_index_jax(bn, objects, k, use_pallas=False)
+    t_jax_cold = time.perf_counter() - t0
+    compiles = (
+        construct_jax.sweep_compile_count() - compiles_before
+        if compiles_before >= 0
+        else "n/a"
+    )
+    row("exp4.cons.jax_fused_sweeps_cold", (t_bn + t_jax_cold) * 1e6,
+        f"device sweeps incl compile;xla_programs={compiles}")
     t0 = time.perf_counter()
     build_knn_index_jax(bn, objects, k, use_pallas=False)
     t_jax = time.perf_counter() - t0
-    row("exp4.cons.jax_level_sync", (t_bn + t_jax) * 1e6, "device sweeps (CPU backend)")
+    row("exp4.cons.jax_fused_sweeps", (t_bn + t_jax) * 1e6, "device sweeps (CPU backend)")
+    for direction in ("up", "down"):
+        plan = construct_jax.prepare_sweep(bn, direction)
+        meta(f"exp4.sweep.{direction}.occupancy", round(plan.occupancy, 4))
+        meta(f"exp4.sweep.{direction}.occupancy_levelwise",
+             round(plan.occupancy_levelwise, 4))
+        meta(f"exp4.sweep.{direction}.levels", plan.num_levels)
+        meta(f"exp4.sweep.{direction}.chunks", plan.num_chunks)
+        meta(f"exp4.sweep.{direction}.shape_buckets", len(plan.buckets))
+    meta("exp4.sweep.xla_programs_per_build", compiles)
 
     t0 = time.perf_counter()
     dijkstra_cons(g, objects, k)

@@ -1,12 +1,18 @@
 """Benchmark entry point: one function per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--only exp1,exp4] [--skip-kernels]
+                                            [--json out/BENCH_cpu.json]
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows. With ``--json PATH`` the same
+rows plus the non-timing stats recorded via ``common.meta`` (sweep occupancy,
+XLA compile counts, ...) are written as a machine-readable perf-trajectory
+file so successive PRs can be diffed.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
 import time
 
@@ -15,9 +21,11 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="comma list, e.g. exp1,exp4")
     ap.add_argument("--skip-kernels", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write results as machine-readable JSON")
     args = ap.parse_args()
 
-    from benchmarks import kernel_bench, paper_experiments
+    from benchmarks import common, kernel_bench, paper_experiments
 
     fns = list(paper_experiments.ALL)
     if not args.skip_kernels:
@@ -30,17 +38,41 @@ def main() -> None:
             if f.__name__.split("_")[0] in wanted or f.__name__ in wanted
         ]
 
+    common.reset_results()
     print("name,us_per_call,derived")
     t0 = time.time()
-    for fn in fns:
-        t1 = time.time()
-        try:
-            fn()
-        except Exception as e:  # noqa: BLE001
-            print(f"{fn.__name__},NaN,ERROR:{type(e).__name__}:{e}", file=sys.stderr)
-            raise
-        print(f"# {fn.__name__} done in {time.time() - t1:.1f}s", file=sys.stderr)
-    print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+    status = "ok"
+    try:
+        for fn in fns:
+            t1 = time.time()
+            try:
+                fn()
+            except Exception as e:  # noqa: BLE001
+                print(f"{fn.__name__},NaN,ERROR:{type(e).__name__}:{e}", file=sys.stderr)
+                raise
+            print(f"# {fn.__name__} done in {time.time() - t1:.1f}s", file=sys.stderr)
+    except Exception:
+        status = "error"
+        raise
+    finally:
+        total_s = time.time() - t0
+        print(f"# total {total_s:.1f}s", file=sys.stderr)
+        if args.json:
+            import jax
+
+            payload = {
+                "status": status,
+                "total_s": round(total_s, 3),
+                "argv": sys.argv[1:],
+                "platform": platform.platform(),
+                "backend": jax.devices()[0].platform,
+                "rows": common.RESULTS,
+                "meta": common.META,
+            }
+            with open(args.json, "w") as f:
+                json.dump(payload, f, indent=2)
+                f.write("\n")
+            print(f"# json written to {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -27,7 +27,8 @@ def main():
     print("\n== 2. BN-Graph (Algorithm 1) ==")
     bn = build_bngraph(g)
     plan = prepare_sweep(bn, "up")
-    print(f"rho={bn.rho} tau={bn.tau} levels={len(plan.levels)} "
+    print(f"rho={bn.rho} tau={bn.tau} levels={plan.num_levels} "
+          f"chunks={plan.num_chunks} shape-buckets={len(plan.buckets)} "
           f"pad-occupancy={plan.occupancy:.2f}")
 
     print("\n== 3. construction: Algorithm 3 (host) vs level-sync sweeps (device) ==")

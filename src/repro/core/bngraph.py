@@ -59,6 +59,35 @@ class BNGraph:
         """max |BNS(v)| (paper's tau')."""
         return int(((self.hi_ids >= 0).sum(axis=1) + (self.lo_ids >= 0).sum(axis=1)).max())
 
+    def sweep_tables(self, direction: str) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(level_of, neighbor ids, neighbor weights) for one sweep direction.
+
+        "up" is the bottom-up sweep over BNS^< (increasing rank), "down" the
+        top-down sweep over BNS^> (decreasing rank). This is the schedule
+        layout consumed by construct_jax.prepare_sweep.
+        """
+        if direction == "up":
+            return self.level_up, self.lo_ids, self.lo_w
+        if direction == "down":
+            return self.level_down, self.hi_ids, self.hi_w
+        raise ValueError(f"direction must be 'up' or 'down', got {direction!r}")
+
+    def level_members(self, direction: str) -> list[np.ndarray]:
+        """Vertices of each DAG level, in level order (device sweep batches).
+
+        Vertices within one level are mutually independent: every bridge
+        neighbor a level-l vertex reads lives in a strictly earlier level.
+        """
+        level_of, _, _ = self.sweep_tables(direction)
+        nlev = int(level_of.max()) + 1 if self.n else 0
+        order = np.argsort(level_of, kind="stable")
+        bounds = np.searchsorted(level_of[order], np.arange(nlev + 1))
+        return [
+            order[bounds[lv] : bounds[lv + 1]].astype(np.int32)
+            for lv in range(nlev)
+            if bounds[lv + 1] > bounds[lv]
+        ]
+
     def bns_lower(self, v: int) -> list[tuple[int, float]]:
         ids = self.lo_ids[v]
         sel = ids >= 0

@@ -1,15 +1,41 @@
-"""Level-synchronous TPU construction of the KNN-Index (Algorithm 3, batched).
+"""Device-resident level-synchronous construction of the KNN-Index (Alg. 3).
 
 The paper's bidirectional construction processes vertices one at a time in
 rank order. The only true dependency is through BNS^< (bottom-up sweep) or
 BNS^> (top-down sweep), so vertices sharing a DAG level are independent and
-are processed as one fully-vectorised device step:
+are processed as one vectorised device step:
 
     gather neighbor rows -> shift by edge weight -> dedup top-k merge -> scatter
 
-The merge is the `topk_merge` Pallas kernel (k rounds of VPU min-selection
-over a VMEM candidate tile). Levels are padded to bucketed shapes (powers of
-two) so the whole build compiles to a few dozen XLA programs regardless of n.
+This module runs the whole sweep as a *fused, device-resident schedule*:
+
+* ``prepare_sweep`` packs every level's ``verts``/``nbr``/``w`` into a small
+  number of flat, contiguous device arrays — one set per (T, CHUNK) shape
+  bucket — plus two tiny index arrays naming, for each fixed-size row chunk,
+  which bucket it lives in and at which row offset. The entire schedule is
+  uploaded **once** per sweep (explicit ``jax.device_put``); nothing else
+  crosses the host/device boundary until the final result readback.
+  Ragged-aware bucketing (power-of-4 neighbor widths, capped at the global
+  max, two chunk tiers) caps padding waste; the plan reports ``occupancy``
+  for the flat layout next to ``occupancy_levelwise`` for the seed's
+  per-level power-of-two padding.
+
+* ``run_sweep`` executes one direction as a **single jitted program**: a
+  ``lax.fori_loop`` over chunks whose body ``lax.switch``es into one branch
+  per shape bucket. Each branch dynamic-slices its chunk out of the flat
+  schedule and applies ``ops.sweep_merge`` — on the Pallas path a single
+  fused kernel per chunk that gathers neighbor k-lists straight out of the
+  live HBM V_k tables into VMEM, shifts, merges (k rounds of dedup
+  min-selection) and scatters the result rows, never materialising the
+  (S, T*k + E) candidate tensor; on the XLA path the same math with an
+  explicit candidate tensor. Distinct compilations per build are bounded by
+  the number of shape-bucket signatures (one program per sweep), not by the
+  number of levels.
+
+* ``build_knn_index_jax`` chains the two sweeps entirely on device: the
+  bottom-up result tables (V_k^<, including the dummy padding row) are handed
+  to the top-down sweep as its per-vertex extra candidates (the paper's
+  computation sharing, §5.3) with no host sync in between.
 
 Value-equivalence with the sequential reference is exact (tested): a level
 only ever reads rows written by strictly earlier levels — the same partial
@@ -18,7 +44,7 @@ order the paper's total rank refines.
 from __future__ import annotations
 
 import dataclasses
-import math
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -30,150 +56,263 @@ from repro.kernels import ops
 
 _INF = np.float32(np.inf)
 
+# Row-chunk tiers: big levels stream in wide chunks, the long tail of tiny
+# levels (often size 1) pads only to the sublane width.
+CHUNK_SMALL = 8
+CHUNK_LARGE = 64
+_LARGE_LEVEL = 48  # levels at least this big use CHUNK_LARGE
+
+
+def _t_bucket(t_true: int, cap: int) -> int:
+    """Power-of-4 neighbor-width bucket (lo 4), capped at the global width."""
+    p = 4
+    while p < t_true:
+        p *= 4
+    return min(p, cap)
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepBucket:
+    """Flat device-resident schedule arrays for one (T, CHUNK) shape bucket."""
+
+    t_pad: int
+    chunk: int
+    verts: jax.Array  # (R,) int32, padded rows hold n (the dummy row id)
+    nbr: jax.Array    # (R, t_pad) int32, padded slots hold -1
+    w: jax.Array      # (R, t_pad) float32, padded slots hold +inf
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepPlan:
+    """One direction of the construction, uploaded once and replayed on device."""
+
+    n: int
+    direction: str
+    buckets: tuple[SweepBucket, ...]
+    chunk_bucket: jax.Array   # (Nc,) int32: bucket index of each chunk
+    chunk_off: jax.Array      # (Nc,) int32: first row of each chunk in its bucket
+    num_chunks: int
+    level_sizes: tuple[int, ...]
+    occupancy: float            # true neighbor cells / flat padded cells
+    occupancy_levelwise: float  # same metric under per-level pow2 padding (seed)
+
+    @property
+    def num_levels(self) -> int:
+        return len(self.level_sizes)
+
+    def bucket_signature(self) -> tuple[tuple[int, int], ...]:
+        """The (T, CHUNK) shapes that bound distinct compilations."""
+        return tuple((b.t_pad, b.chunk) for b in self.buckets)
+
 
 def _next_pow2(x: int, lo: int = 8) -> int:
     return max(lo, 1 << (max(1, x) - 1).bit_length())
 
 
-@dataclasses.dataclass(frozen=True)
-class LevelBatch:
-    verts: np.ndarray    # (S,) int32, padded with n (dummy row id)
-    nbr: np.ndarray      # (S, T) int32, padded with -1
-    w: np.ndarray        # (S, T) float32, padded with +inf
-    size: int            # true number of vertices in this level
-
-
-@dataclasses.dataclass(frozen=True)
-class SweepPlan:
-    n: int
-    levels: list[LevelBatch]
-    occupancy: float  # true cells / padded cells (padding-waste metric)
-
-
 def prepare_sweep(bn: BNGraph, direction: str) -> SweepPlan:
-    """Host-side schedule extraction: bucket-padded per-level batches."""
-    if direction == "up":
-        level_of, ids_tab, w_tab = bn.level_up, bn.lo_ids, bn.lo_w
-    elif direction == "down":
-        level_of, ids_tab, w_tab = bn.level_down, bn.hi_ids, bn.hi_w
-    else:
-        raise ValueError(direction)
+    """Extract one direction's schedule and upload it to the device, once."""
+    level_of, ids_tab, w_tab = bn.sweep_tables(direction)
     n = bn.n
-    nlev = int(level_of.max()) + 1 if n else 0
     deg = (ids_tab >= 0).sum(axis=1)
-    levels: list[LevelBatch] = []
+    cap = _next_pow2(int(deg.max()), lo=4) if n else 4
+
+    levels = bn.level_members(direction)
+    acc: dict[tuple[int, int], dict] = {}
+    chunk_bucket: list[int] = []
+    chunk_off: list[int] = []
+    key_index: dict[tuple[int, int], int] = {}
     true_cells = 0
-    pad_cells = 0
-    order = np.argsort(level_of, kind="stable")
-    bounds = np.searchsorted(level_of[order], np.arange(nlev + 1))
-    for lv in range(nlev):
-        vs = order[bounds[lv] : bounds[lv + 1]].astype(np.int32)
-        if vs.size == 0:
-            continue
-        t_true = int(deg[vs].max()) if vs.size else 0
-        s_pad = _next_pow2(len(vs))
-        t_pad = _next_pow2(t_true, lo=1) if t_true else 1
-        verts = np.full(s_pad, n, dtype=np.int32)
+    flat_cells = 0
+    levelwise_cells = 0
+    for vs in levels:
+        t_true = int(deg[vs].max())
+        t_pad = _t_bucket(t_true, cap)
+        chunk = CHUNK_LARGE if len(vs) >= _LARGE_LEVEL else CHUNK_SMALL
+        rows = -(-len(vs) // chunk) * chunk
+        key = (t_pad, chunk)
+        b = acc.setdefault(key, {"verts": [], "nbr": [], "w": [], "rows": 0})
+        verts = np.full(rows, n, np.int32)
         verts[: len(vs)] = vs
-        nbr = np.full((s_pad, t_pad), -1, dtype=np.int32)
-        w = np.full((s_pad, t_pad), _INF, dtype=np.float32)
-        nbr[: len(vs), :t_true] = ids_tab[vs][:, :t_true]
-        w[: len(vs), :t_true] = w_tab[vs][:, :t_true].astype(np.float32)
+        nbr = np.full((rows, t_pad), -1, np.int32)
+        w = np.full((rows, t_pad), _INF, np.float32)
+        t_copy = min(t_pad, ids_tab.shape[1])
+        nbr[: len(vs), :t_copy] = ids_tab[vs][:, :t_copy]
+        w[: len(vs), :t_copy] = w_tab[vs][:, :t_copy].astype(np.float32)
         w[nbr < 0] = _INF
-        levels.append(LevelBatch(verts=verts, nbr=nbr, w=w, size=len(vs)))
+        start = b["rows"]
+        b["verts"].append(verts)
+        b["nbr"].append(nbr)
+        b["w"].append(w)
+        b["rows"] += rows
+        bid = key_index.setdefault(key, len(key_index))
+        for c in range(rows // chunk):
+            chunk_bucket.append(bid)
+            chunk_off.append(start + c * chunk)
         true_cells += int(deg[vs].sum())
-        pad_cells += s_pad * t_pad
-    occ = true_cells / max(1, pad_cells)
-    return SweepPlan(n=n, levels=levels, occupancy=occ)
+        flat_cells += rows * t_pad
+        levelwise_cells += _next_pow2(len(vs)) * (_next_pow2(t_true, lo=1) if t_true else 1)
+
+    buckets = []
+    for key, _ in sorted(key_index.items(), key=lambda kv: kv[1]):
+        b = acc[key]
+        buckets.append(
+            SweepBucket(
+                t_pad=key[0],
+                chunk=key[1],
+                verts=jax.device_put(np.concatenate(b["verts"])),
+                nbr=jax.device_put(np.concatenate(b["nbr"])),
+                w=jax.device_put(np.concatenate(b["w"])),
+            )
+        )
+    return SweepPlan(
+        n=n,
+        direction=direction,
+        buckets=tuple(buckets),
+        chunk_bucket=jax.device_put(np.asarray(chunk_bucket, np.int32)),
+        chunk_off=jax.device_put(np.asarray(chunk_off, np.int32)),
+        num_chunks=len(chunk_bucket),
+        level_sizes=tuple(len(vs) for vs in levels),
+        occupancy=true_cells / max(1, flat_cells),
+        occupancy_levelwise=true_cells / max(1, levelwise_cells),
+    )
 
 
-def _sweep_step(verts, nbr, w, extra_ids, extra_d, vk_ids, vk_d, *, k: int, use_pallas: bool):
-    """One level: gather -> shift -> dedup-top-k merge -> scatter."""
-    s, t = nbr.shape
-    valid = nbr >= 0
-    nbr_c = jnp.where(valid, nbr, vk_ids.shape[0] - 1)  # dummy row
-    g_ids = vk_ids[nbr_c]                       # (S, T, k)
-    g_d = w[..., None] + vk_d[nbr_c]            # (S, T, k)
-    g_ids = jnp.where(valid[..., None], g_ids, -1)
-    cand_ids = jnp.concatenate([g_ids.reshape(s, t * k), extra_ids], axis=1)
-    cand_d = jnp.concatenate([g_d.reshape(s, t * k), extra_d], axis=1)
-    m_ids, m_d = ops.topk_merge(cand_ids, cand_d, k, use_pallas=use_pallas)
-    vk_ids = vk_ids.at[verts].set(m_ids)
-    vk_d = vk_d.at[verts].set(m_d)
-    return vk_ids, vk_d
+def _sweep_program(
+    bucket_data,   # tuple over buckets of (verts, nbr, w) device arrays
+    chunk_bucket,
+    chunk_off,
+    ex_ids,
+    ex_d,
+    *,
+    n: int,
+    k: int,
+    chunks: tuple[int, ...],   # static CHUNK per bucket (not derivable from shapes)
+    use_pallas: bool,
+    interpret: bool | None,
+):
+    """One full sweep as a single XLA program: fori_loop over chunks, switch
+    over shape buckets. The V_k carry lives in HBM for the whole loop."""
+    vk_ids = jnp.full((n + 1, k), -1, jnp.int32)
+    vk_d = jnp.full((n + 1, k), jnp.inf, jnp.float32)
+
+    def make_branch(bverts, bnbr, bw, chunk):
+        def branch(off, vk_ids, vk_d):
+            verts = jax.lax.dynamic_slice_in_dim(bverts, off, chunk)
+            nbr = jax.lax.dynamic_slice_in_dim(bnbr, off, chunk)
+            w = jax.lax.dynamic_slice_in_dim(bw, off, chunk)
+            return ops.sweep_merge(
+                nbr, verts, w, ex_ids, ex_d, vk_ids, vk_d, k,
+                use_pallas=use_pallas, interpret=interpret,
+            )
+        return branch
+
+    branches = [
+        make_branch(bv, bn_, bw, chunk)
+        for (bv, bn_, bw), chunk in zip(bucket_data, chunks)
+    ]
+
+    def body(c, carry):
+        vk_ids, vk_d = carry
+        return jax.lax.switch(
+            chunk_bucket[c], branches, chunk_off[c], vk_ids, vk_d
+        )
+
+    return jax.lax.fori_loop(0, chunk_bucket.shape[0], body, (vk_ids, vk_d))
 
 
-_sweep_step_jit = jax.jit(
-    _sweep_step,
-    static_argnames=("k", "use_pallas"),
-    donate_argnums=(5, 6),
+_sweep_program_jit = jax.jit(
+    _sweep_program,
+    static_argnames=("n", "k", "chunks", "use_pallas", "interpret"),
 )
+
+
+def sweep_compile_count() -> int:
+    """Distinct XLA programs compiled for sweeps so far in this process.
+
+    Returns -1 when the jit cache introspection hook (a private JAX API) is
+    unavailable, so callers can degrade to "unknown" instead of crashing.
+    """
+    cache_size = getattr(_sweep_program_jit, "_cache_size", None)
+    return int(cache_size()) if cache_size is not None else -1
 
 
 def run_sweep(
     plan: SweepPlan,
-    extra_ids_full: np.ndarray,  # (n, E) per-vertex extra candidates
-    extra_d_full: np.ndarray,    # (n, E)
-    init_ids: np.ndarray | None,
-    init_d: np.ndarray | None,
+    extra_ids: jax.Array,  # (n+1, E) int32 per-vertex extra candidates, on device
+    extra_d: jax.Array,    # (n+1, E) float32, on device
     k: int,
     *,
     use_pallas: bool = True,
-) -> tuple[np.ndarray, np.ndarray]:
-    """Run one direction of the construction. Returns (n, k) id/dist arrays.
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Run one direction of the construction. Returns device (n+1, k) tables.
 
-    extra_*_full supply the non-neighbor candidate terms of Lemmas 5.12/5.21:
-    bottom-up E=1 (the vertex itself when it is an object); top-down E=k (the
-    vertex's own V_k^< row).
+    extra_* supply the non-neighbor candidate terms of Lemmas 5.12/5.21:
+    bottom-up, the vertex itself when it is an object; top-down, the vertex's
+    own V_k^< row. Both are (n+1)-row device tables (dummy row last) so the
+    sweep gathers them on device — zero host traffic inside the loop, which is
+    why callers may wrap this in ``jax.transfer_guard("disallow")``.
     """
-    n = plan.n
-    if init_ids is None:
-        vk_ids = jnp.full((n + 1, k), -1, jnp.int32)
-        vk_d = jnp.full((n + 1, k), jnp.inf, jnp.float32)
-    else:
-        vk_ids = jnp.concatenate([jnp.asarray(init_ids, jnp.int32), jnp.full((1, k), -1, jnp.int32)])
-        vk_d = jnp.concatenate([jnp.asarray(init_d, jnp.float32), jnp.full((1, k), jnp.inf, jnp.float32)])
-    e = extra_ids_full.shape[1]
-    ex_ids_pad = np.concatenate([extra_ids_full, np.full((1, e), -1, np.int32)])
-    ex_d_pad = np.concatenate([extra_d_full, np.full((1, e), _INF, np.float32)])
-    for lb in plan.levels:
-        extra_ids = jnp.asarray(ex_ids_pad[lb.verts])
-        extra_d = jnp.asarray(ex_d_pad[lb.verts])
-        vk_ids, vk_d = _sweep_step_jit(
-            jnp.asarray(lb.verts),
-            jnp.asarray(lb.nbr),
-            jnp.asarray(lb.w),
-            extra_ids,
-            extra_d,
-            vk_ids,
-            vk_d,
-            k=k,
-            use_pallas=use_pallas,
+    if plan.num_chunks == 0:  # empty graph: nothing to sweep
+        return (
+            jnp.full((plan.n + 1, k), -1, jnp.int32),
+            jnp.full((plan.n + 1, k), jnp.inf, jnp.float32),
         )
-    return np.asarray(vk_ids[:n]), np.asarray(vk_d[:n])
+    bucket_data = tuple((b.verts, b.nbr, b.w) for b in plan.buckets)
+    chunks = tuple(b.chunk for b in plan.buckets)
+    return _sweep_program_jit(
+        bucket_data,
+        plan.chunk_bucket,
+        plan.chunk_off,
+        extra_ids,
+        extra_d,
+        n=plan.n,
+        k=k,
+        chunks=chunks,
+        use_pallas=use_pallas,
+        interpret=interpret,
+    )
+
+
+def object_extras(n: int, objects: np.ndarray, k: int) -> tuple[jax.Array, jax.Array]:
+    """Bottom-up extras: each object is a distance-0 candidate for itself.
+
+    Padded to E = k columns so both sweeps share extra shapes (and therefore
+    compiled programs) wherever their bucket signatures coincide.
+    """
+    is_obj = np.zeros(n, dtype=bool)
+    is_obj[objects] = True
+    ex_ids = np.full((n + 1, k), -1, np.int32)
+    ex_ids[:n, 0] = np.where(is_obj, np.arange(n, dtype=np.int32), -1)
+    ex_d = np.full((n + 1, k), _INF, np.float32)
+    ex_d[:n, 0] = np.where(is_obj, np.float32(0), _INF)
+    return jax.device_put(ex_ids), jax.device_put(ex_d)
 
 
 def build_knn_index_jax(
     bn: BNGraph, objects: np.ndarray, k: int, *, use_pallas: bool = True
 ) -> KNNIndex:
-    """Algorithm 3, level-batched on device: V_k^< sweep up, V_k sweep down."""
+    """Algorithm 3, fused device sweeps: V_k^< up, then V_k down, no host sync.
+
+    The bottom-up tables (dummy row included) feed the top-down sweep directly
+    as its extra-candidate tables — the two sweeps share device buffers and
+    the only readback is the final result.
+    """
     n = bn.n
-    is_obj = np.zeros(n, dtype=bool)
-    is_obj[objects] = True
+    plan_up = prepare_sweep(bn, "up")
+    plan_down = prepare_sweep(bn, "down")
+    ex_ids, ex_d = object_extras(n, objects, k)
 
     # ---- bottom-up: V_k^< (Lemma 5.12) ----
-    plan_up = prepare_sweep(bn, "up")
-    own_ids = np.where(is_obj, np.arange(n, dtype=np.int32), -1)[:, None]
-    own_d = np.where(is_obj, np.float32(0), _INF)[:, None].astype(np.float32)
-    vkl_ids, vkl_d = run_sweep(plan_up, own_ids, own_d, None, None, k, use_pallas=use_pallas)
+    vkl_ids, vkl_d = run_sweep(plan_up, ex_ids, ex_d, k, use_pallas=use_pallas)
+    # ---- top-down: V_k (Lemma 5.21), extras = own V_k^< rows, still on device ----
+    vk_ids, vk_d = run_sweep(plan_down, vkl_ids, vkl_d, k, use_pallas=use_pallas)
 
-    # ---- top-down: V_k (Lemma 5.21) ----
-    plan_down = prepare_sweep(bn, "down")
-    vk_ids, vk_d = run_sweep(
-        plan_down, vkl_ids, vkl_d, None, None, k, use_pallas=use_pallas
-    )
-    dists = np.where(vk_ids >= 0, vk_d.astype(np.float64), np.inf)
-    return KNNIndex(ids=np.array(vk_ids), dists=np.array(dists), k=k)
+    # np.array (not asarray): the index must own writable host buffers, the
+    # update algorithms (core/updates.py) patch rows in place.
+    ids = np.array(vk_ids[:n])
+    dists = np.where(ids >= 0, np.asarray(vk_d[:n], np.float64), np.inf)
+    return KNNIndex(ids=ids, dists=dists, k=k)
 
 
 def batched_query(vk_ids: jax.Array, vk_d: jax.Array, queries: jax.Array):

@@ -16,6 +16,7 @@ from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.minplus import minplus_matmul_pallas
 from repro.kernels.retrieval_topk import retrieval_topk_pallas
+from repro.kernels.sweep_merge import kround_merge, sweep_merge_pallas
 from repro.kernels.topk_merge import topk_merge_pallas
 
 
@@ -52,6 +53,52 @@ def topk_merge(
     itp = (not _on_tpu()) if interpret is None else interpret
     oid, od = topk_merge_pallas(ids, d, k, block_b=block_b, interpret=itp)
     return oid[:b], od[:b]
+
+
+def sweep_merge(
+    nbr: jax.Array,
+    verts: jax.Array,
+    w: jax.Array,
+    ex_ids: jax.Array,
+    ex_d: jax.Array,
+    vk_ids: jax.Array,
+    vk_d: jax.Array,
+    k: int,
+    *,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused construction step: gather + shift + dedup top-k + scatter.
+
+    Updates rows ``verts`` of the live (n+1, k) V_k tables from the k-lists of
+    the neighbors in ``nbr`` (shifted by ``w``) merged with per-vertex extras.
+    Unlike the other wrappers this is a *trace-level* function, meant to be
+    called inside an already-jitted sweep loop (core/construct_jax.py), so it
+    does no padding or jit of its own: the caller guarantees the layout
+    invariants (padded slots -1/+inf, dummy row n).
+
+    The XLA fallback materialises the (CHUNK, T*k+E) candidate tensor and runs
+    the same k-round merge; the Pallas path never materialises it (see
+    sweep_merge.py).
+    """
+    if not use_pallas:
+        chunk, t = nbr.shape
+        n1 = vk_ids.shape[0]
+        valid = nbr >= 0
+        nbr_c = jnp.where(valid, nbr, n1 - 1)
+        g_ids = jnp.where(valid[..., None], vk_ids[nbr_c], -1)
+        g_d = w[..., None] + vk_d[nbr_c]
+        cand_ids = jnp.concatenate([g_ids.reshape(chunk, t * k), ex_ids[verts]], axis=1)
+        cand_d = jnp.concatenate(
+            [g_d.reshape(chunk, t * k), ex_d[verts]], axis=1
+        ).astype(jnp.float32)
+        cand_d = jnp.where(cand_ids < 0, jnp.inf, cand_d)
+        m_ids, m_d = kround_merge(cand_ids, cand_d, k)
+        return vk_ids.at[verts].set(m_ids), vk_d.at[verts].set(m_d)
+    itp = (not _on_tpu()) if interpret is None else interpret
+    return sweep_merge_pallas(
+        nbr, verts, w, ex_ids, ex_d, vk_ids, vk_d, k=k, interpret=itp
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k", "use_pallas", "interpret"))

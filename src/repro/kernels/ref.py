@@ -7,6 +7,10 @@ import jax.numpy as jnp
 
 def topk_merge_ref(cand_ids: jax.Array, cand_d: jax.Array, k: int):
     """k smallest-distance distinct ids per row; ties broken by smaller id."""
+    if cand_ids.shape[1] < k:  # fewer candidate slots than outputs: pad
+        pad = ((0, 0), (0, k - cand_ids.shape[1]))
+        cand_ids = jnp.pad(cand_ids, pad, constant_values=-1)
+        cand_d = jnp.pad(cand_d, pad, constant_values=jnp.inf)
     d = jnp.where(cand_ids < 0, jnp.inf, cand_d.astype(jnp.float32))
 
     def row(ids_r, d_r):
@@ -21,6 +25,33 @@ def topk_merge_ref(cand_ids: jax.Array, cand_d: jax.Array, k: int):
 
     out_ids, out_d = jax.vmap(row)(cand_ids, d)
     return out_ids, out_d.astype(cand_d.dtype)
+
+
+def sweep_merge_ref(
+    nbr: jax.Array,     # (CHUNK, T) int32, -1 = padded slot
+    verts: jax.Array,   # (CHUNK,)  int32, n = dummy row
+    w: jax.Array,       # (CHUNK, T) float32
+    ex_ids: jax.Array,  # (n+1, E) int32
+    ex_d: jax.Array,    # (n+1, E) float32
+    vk_ids: jax.Array,  # (n+1, k) int32
+    vk_d: jax.Array,    # (n+1, k) float32
+    k: int,
+):
+    """Unfused oracle for the sweep_merge kernel: explicit candidate tensor.
+
+    gather neighbor k-lists -> shift by edge weight -> append extras ->
+    topk_merge_ref -> scatter rows back into copies of the V_k tables.
+    """
+    chunk, t = nbr.shape
+    n1 = vk_ids.shape[0]
+    valid = nbr >= 0
+    nbr_c = jnp.where(valid, nbr, n1 - 1)
+    g_ids = jnp.where(valid[..., None], vk_ids[nbr_c], -1)
+    g_d = w[..., None] + vk_d[nbr_c]
+    cand_ids = jnp.concatenate([g_ids.reshape(chunk, t * k), ex_ids[verts]], axis=1)
+    cand_d = jnp.concatenate([g_d.reshape(chunk, t * k), ex_d[verts]], axis=1)
+    m_ids, m_d = topk_merge_ref(cand_ids, cand_d.astype(jnp.float32), k)
+    return vk_ids.at[verts].set(m_ids), vk_d.at[verts].set(m_d)
 
 
 def minplus_matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:

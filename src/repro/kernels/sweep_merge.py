@@ -1,0 +1,167 @@
+"""Fused Pallas TPU kernel for one construction sweep step (chunk of a level).
+
+The level-synchronous construction (Algorithm 3, see core/construct_jax.py)
+repeats, for every vertex of a level,
+
+    gather the k-lists of its bridge neighbors from the live V_k tables
+    -> shift every candidate by the connecting edge weight
+    -> merge with the vertex's extra candidates (Lemmas 5.12/5.21)
+    -> keep the k closest *distinct* objects
+    -> scatter the merged row back into the V_k tables.
+
+The unfused form (seed implementation) ran the gather and shift in XLA,
+materialised a (S, T*k + E) candidate tensor in HBM, and handed it to the
+`topk_merge` kernel — one full HBM round trip of the candidate tensor per
+level. This kernel fuses the whole step: the V_k tables stay in HBM ("ANY"
+memory space from the kernel's point of view) and the Pallas pipeline DMAs
+exactly the (1, k) rows named by the neighbor table into VMEM, where the
+shift, dedup top-k min-selection (k rounds of VPU work over a lane-padded
+candidate tile, identical semantics to `topk_merge`) and the scatter of the
+result row all happen without ever writing candidates back to HBM.
+
+Mechanics: the neighbor ids `nbr` (CHUNK, T) and target rows `verts` (CHUNK,)
+are scalar-prefetched; the grid is (CHUNK, T) and the gather/scatter are
+expressed through BlockSpec index maps reading `nbr`/`verts`, so each grid
+step pipelines one (1, k) row DMA. The output V_k tables are input/output
+aliased: rows not named by `verts` keep their previous values, which is what
+makes the kernel a scatter. Correctness of the in-place update relies on the
+level schedule invariant that a level only reads rows written by strictly
+earlier levels (neighbor rows and target rows are disjoint within a call; the
+shared dummy row n is write-garbage and read-masked).
+
+Padded rows use vertex id n (the dummy row) and padded neighbor slots use -1
+with +inf weight, exactly as in the XLA path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_INT_MAX = jnp.iinfo(jnp.int32).max
+
+
+def kround_merge(cand_ids: jax.Array, cand_d: jax.Array, k: int):
+    """k rounds of dedup min-selection (branch-free, shared by kernel + XLA).
+
+    Semantics match ref.topk_merge_ref: k smallest-distance distinct ids per
+    row, distance ties broken by the smaller id, exhausted slots -> (-1, inf).
+    cand_d must already be +inf wherever cand_ids < 0.
+    """
+    b = cand_ids.shape[0]
+
+    def body(i, carry):
+        out_ids, out_d, cd = carry
+        dmin = jnp.min(cd, axis=1)
+        idmin = jnp.min(jnp.where(cd == dmin[:, None], cand_ids, _INT_MAX), axis=1)
+        ok = jnp.isfinite(dmin)
+        out_ids = jax.lax.dynamic_update_slice(
+            out_ids, jnp.where(ok, idmin, -1)[:, None], (0, i))
+        out_d = jax.lax.dynamic_update_slice(
+            out_d, jnp.where(ok, dmin, jnp.inf)[:, None], (0, i))
+        # drop every candidate carrying the selected id -> dedup for free
+        cd = jnp.where(cand_ids == idmin[:, None], jnp.inf, cd)
+        return out_ids, out_d, cd
+
+    init = (
+        jnp.full((b, k), -1, jnp.int32),
+        jnp.full((b, k), jnp.inf, jnp.float32),
+        cand_d,
+    )
+    out_ids, out_d, _ = jax.lax.fori_loop(0, k, body, init)
+    return out_ids, out_d
+
+
+def _sweep_merge_kernel(
+    nbr_ref, verts_ref,             # scalar-prefetch
+    w_ref, exi_ref, exd_ref, vki_ref, vkd_ref,
+    oi_ref, od_ref,
+    ci_ref, cd_ref,                 # VMEM candidate scratch
+    *, k: int, e: int,
+):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    nt = pl.num_programs(1)
+    valid = nbr_ref[i, j] >= 0
+
+    @pl.when(j == 0)
+    def _init_candidates():
+        ci_ref[...] = jnp.full_like(ci_ref, -1)
+        cd_ref[...] = jnp.full_like(cd_ref, jnp.inf)
+        ex_ids = exi_ref[...]
+        ci_ref[:, pl.dslice(nt * k, e)] = ex_ids
+        cd_ref[:, pl.dslice(nt * k, e)] = jnp.where(
+            ex_ids >= 0, exd_ref[...].astype(jnp.float32), jnp.inf)
+
+    g_ids = vki_ref[...]                                    # gathered (1, k) row
+    g_d = w_ref[0, 0] + vkd_ref[...].astype(jnp.float32)
+    ok = valid & (g_ids >= 0)
+    ci_ref[:, pl.dslice(j * k, k)] = jnp.where(ok, g_ids, -1)
+    cd_ref[:, pl.dslice(j * k, k)] = jnp.where(ok, g_d, jnp.inf)
+
+    @pl.when(j == nt - 1)
+    def _merge_and_emit():
+        out_ids, out_d = kround_merge(ci_ref[...], cd_ref[...], k)
+        oi_ref[...] = out_ids
+        od_ref[...] = out_d
+
+
+def sweep_merge_pallas(
+    nbr: jax.Array,       # (CHUNK, T) int32, -1 = padded slot
+    verts: jax.Array,     # (CHUNK,)  int32, n = padded row (dummy)
+    w: jax.Array,         # (CHUNK, T) float32, +inf on padded slots
+    ex_ids: jax.Array,    # (n+1, E) int32 per-vertex extra candidates
+    ex_d: jax.Array,      # (n+1, E) float32
+    vk_ids: jax.Array,    # (n+1, k) int32 live table (aliased to output)
+    vk_d: jax.Array,      # (n+1, k) float32 live table (aliased to output)
+    *,
+    k: int,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """One fused construction step; returns the updated (vk_ids, vk_d)."""
+    chunk, t = nbr.shape
+    e = ex_ids.shape[1]
+    n1 = vk_ids.shape[0]
+    c_pad = -(-(t * k + e) // 128) * 128  # lane-align the candidate scratch
+
+    def nbr_map(i, j, nbr_ref, verts_ref):
+        x = nbr_ref[i, j]
+        return (jnp.where(x >= 0, x, n1 - 1), 0)  # clamp pads to the dummy row
+
+    def vert_map(i, j, nbr_ref, verts_ref):
+        return (verts_ref[i], 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(chunk, t),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, n_, v_: (i, j)),  # w
+            pl.BlockSpec((1, e), vert_map),                      # ex_ids gather
+            pl.BlockSpec((1, e), vert_map),                      # ex_d gather
+            pl.BlockSpec((1, k), nbr_map),                       # vk_ids gather
+            pl.BlockSpec((1, k), nbr_map),                       # vk_d gather
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), vert_map),                      # vk_ids scatter
+            pl.BlockSpec((1, k), vert_map),                      # vk_d scatter
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, c_pad), jnp.int32),
+            pltpu.VMEM((1, c_pad), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_sweep_merge_kernel, k=k, e=e)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n1, k), jnp.int32),
+            jax.ShapeDtypeStruct((n1, k), jnp.float32),
+        ],
+        # operand indices count the two scalar-prefetch args
+        input_output_aliases={5: 0, 6: 1},
+        interpret=interpret,
+    )(nbr, verts, w, ex_ids, ex_d, vk_ids, vk_d)

@@ -49,8 +49,12 @@ def main():
         "k": args.k,
         "rho": bn.rho,
         "tau": bn.tau,
-        "levels_up": len(up.levels),
-        "levels_down": len(down.levels),
+        "levels_up": up.num_levels,
+        "levels_down": down.num_levels,
+        "chunks_up": up.num_chunks,
+        "chunks_down": down.num_chunks,
+        "shape_buckets_up": len(up.buckets),
+        "shape_buckets_down": len(down.buckets),
         "pad_occupancy_up": round(up.occupancy, 4),
         "pad_occupancy_down": round(down.occupancy, 4),
         "gen_s": round(t1 - t0, 3),

@@ -192,8 +192,6 @@ def make_knn_build(cfg, rules: ShardingRules, use_pallas: bool = False,
     """contiguous=True is the §Perf variant: vertices are renumbered by
     (level, position) on the host, so each level's results land in one
     dynamic-update-slice instead of a scatter — in-place with donation."""
-    from repro.core.construct_jax import _sweep_step
-
     if contiguous:
         def step(level_start, nbr, w, extra_ids, extra_d, vk_ids, vk_d):
             s, t = nbr.shape
@@ -218,8 +216,17 @@ def make_knn_build(cfg, rules: ShardingRules, use_pallas: bool = False,
         return step, in_specs, out_specs, None
 
     def step(verts, nbr, w, extra_ids, extra_d, vk_ids, vk_d):
-        return _sweep_step(verts, nbr, w, extra_ids, extra_d, vk_ids, vk_d,
-                           k=cfg.k, use_pallas=use_pallas)
+        s, t = nbr.shape
+        valid = nbr >= 0
+        nbr_c = jnp.where(valid, nbr, vk_ids.shape[0] - 1)
+        g_ids = jnp.where(valid[..., None], vk_ids[nbr_c], -1)
+        g_d = w[..., None] + vk_d[nbr_c]
+        cand_ids = jnp.concatenate([g_ids.reshape(s, t * cfg.k), extra_ids], axis=1)
+        cand_d = jnp.concatenate([g_d.reshape(s, t * cfg.k), extra_d], axis=1)
+        from repro.kernels import ops as kops
+
+        m_ids, m_d = kops.topk_merge(cand_ids, cand_d, cfg.k, use_pallas=use_pallas)
+        return vk_ids.at[verts].set(m_ids), vk_d.at[verts].set(m_d)
 
     flat = tuple(rules.mesh.axis_names)
     in_specs = (P(flat), P(flat, None), P(flat, None), P(flat, None), P(flat, None),

@@ -1,0 +1,95 @@
+"""Tiny stand-in for the slice of the `hypothesis` API this suite uses.
+
+The real library is the declared test dependency (see pyproject.toml); this
+fallback keeps the suite runnable on minimal images where it is absent.
+Installed into ``sys.modules["hypothesis"]`` by tests/conftest.py only when
+the import fails, so environments with hypothesis installed are unaffected.
+
+Coverage: ``given``, ``settings(max_examples=, deadline=)`` and the
+``st.tuples`` / ``st.integers`` / ``st.floats`` / ``st.booleans`` /
+``st.sampled_from`` strategies. Unlike the real thing there is no shrinking
+and the draw sequence is deterministic per test (seeded from the test name),
+so failures reproduce exactly.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+from types import SimpleNamespace
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def _integers(min_value: int = 0, max_value: int = 1 << 16) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def _floats(min_value: float = 0.0, max_value: float = 1.0) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def _booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+
+def _sampled_from(elements) -> _Strategy:
+    pool = list(elements)
+    return _Strategy(lambda rng: rng.choice(pool))
+
+
+def _tuples(*strategies: _Strategy) -> _Strategy:
+    return _Strategy(lambda rng: tuple(s.draw(rng) for s in strategies))
+
+
+strategies = SimpleNamespace(
+    integers=_integers,
+    floats=_floats,
+    booleans=_booleans,
+    sampled_from=_sampled_from,
+    tuples=_tuples,
+)
+
+
+class settings:  # noqa: N801 — mirrors the hypothesis name
+    def __init__(self, max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._mini_hypothesis_settings = self
+        return fn
+
+
+def given(*arg_strategies: _Strategy, **kw_strategies: _Strategy):
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            cfg = getattr(wrapper, "_mini_hypothesis_settings", None) or getattr(
+                fn, "_mini_hypothesis_settings", None
+            )
+            n = cfg.max_examples if cfg else _DEFAULT_MAX_EXAMPLES
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for _ in range(n):
+                drawn = tuple(s.draw(rng) for s in arg_strategies)
+                kdrawn = {name: s.draw(rng) for name, s in kw_strategies.items()}
+                fn(*args, *drawn, **kwargs, **kdrawn)
+
+        # Hide the strategy-driven parameters from pytest's fixture resolver
+        # (functools.wraps exposes them via __wrapped__ / the copied signature).
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+
+    return decorate
+
+
+HealthCheck = SimpleNamespace(too_slow="too_slow", data_too_large="data_too_large")

@@ -12,6 +12,21 @@ SRC = os.path.join(REPO, "src")
 if SRC not in sys.path:
     sys.path.insert(0, SRC)
 
+# Property tests import `hypothesis`, which is a declared test dependency
+# (pyproject.toml) but absent from minimal images. Fall back to the vendored
+# mini implementation so collection never fails on a clean checkout.
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    import importlib.util
+
+    _spec = importlib.util.spec_from_file_location(
+        "hypothesis", os.path.join(os.path.dirname(__file__), "_mini_hypothesis.py")
+    )
+    _mod = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_mod)
+    sys.modules["hypothesis"] = _mod
+
 
 def run_devices_subprocess(code: str, n_devices: int = 8, timeout: int = 600):
     """Run `code` in a subprocess with n fake CPU devices; returns stdout."""

@@ -1,0 +1,182 @@
+"""Edge cases for the dedup top-k merges: `topk_merge` and the fused
+`sweep_merge`, both checked against the pure-jnp oracles in kernels/ref.py."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _assert_merge_equal(got, want):
+    got_i, got_d = got
+    want_i, want_d = want
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    np.testing.assert_allclose(
+        np.nan_to_num(np.asarray(got_d, np.float32), posinf=1e30),
+        np.nan_to_num(np.asarray(want_d, np.float32), posinf=1e30),
+        rtol=1e-6,
+    )
+
+
+# ---------------------------------------------------------------------------
+# topk_merge edge cases (the unfused kernel the XLA path still uses elsewhere)
+# ---------------------------------------------------------------------------
+
+def test_topk_merge_duplicate_ids_span_lane_pad_boundary():
+    """The same id on both sides of the 128-lane pad seam must dedup to the
+    smaller distance, not appear twice."""
+    c = 130  # pads to 256: columns 127/128 straddle the first lane boundary
+    ids = np.full((4, c), -1, np.int32)
+    d = np.full((4, c), np.inf, np.float32)
+    ids[:, 127] = 7
+    d[:, 127] = 5.0
+    ids[:, 128] = 7
+    d[:, 128] = 3.0
+    ids[:, 0] = 1
+    d[:, 0] = 4.0
+    got = ops.topk_merge(jnp.asarray(ids), jnp.asarray(d), 3)
+    want = ref.topk_merge_ref(jnp.asarray(ids), jnp.asarray(d), 3)
+    _assert_merge_equal(got, want)
+    got_i, got_d = got
+    np.testing.assert_array_equal(np.asarray(got_i)[0], [7, 1, -1])
+    np.testing.assert_allclose(np.asarray(got_d)[0, :2], [3.0, 4.0])
+
+
+def test_topk_merge_all_invalid_rows():
+    ids = jnp.full((8, 37), -1, jnp.int32)
+    d = jnp.zeros((8, 37), jnp.float32)  # distances must be ignored
+    got_i, got_d = ops.topk_merge(ids, d, 4)
+    assert (np.asarray(got_i) == -1).all()
+    assert np.isinf(np.asarray(got_d)).all()
+
+
+def test_topk_merge_k_exceeds_distinct_candidates():
+    ids = np.array([[3, 3, 5, 5, 3]], np.int32)
+    d = np.array([[2.0, 1.0, 9.0, 8.0, 4.0]], np.float32)
+    got_i, got_d = ops.topk_merge(jnp.asarray(ids), jnp.asarray(d), 6)
+    np.testing.assert_array_equal(np.asarray(got_i)[0], [3, 5, -1, -1, -1, -1])
+    np.testing.assert_allclose(np.asarray(got_d)[0, :2], [1.0, 8.0])
+    assert np.isinf(np.asarray(got_d)[0, 2:]).all()
+
+
+def test_topk_merge_distance_ties_pick_smaller_id():
+    ids = np.array([[9, 2, 5, 2, 9]], np.int32)
+    d = np.array([[1.0, 1.0, 1.0, 7.0, 7.0]], np.float32)
+    got_i, got_d = ops.topk_merge(jnp.asarray(ids), jnp.asarray(d), 3)
+    np.testing.assert_array_equal(np.asarray(got_i)[0], [2, 5, 9])
+    np.testing.assert_allclose(np.asarray(got_d)[0], [1.0, 1.0, 1.0])
+    _assert_merge_equal(
+        (got_i, got_d), ref.topk_merge_ref(jnp.asarray(ids), jnp.asarray(d), 3)
+    )
+
+
+@pytest.mark.parametrize("c", [1, 5, 127, 129, 200, 257])
+def test_topk_merge_non_multiple_of_128_widths(c):
+    rng = np.random.default_rng(c)
+    ids = rng.integers(-1, 30, size=(6, c)).astype(np.int32)
+    d = np.round(rng.uniform(0, 9, size=(6, c)), 1).astype(np.float32)
+    got = ops.topk_merge(jnp.asarray(ids), jnp.asarray(d), 5)
+    want = ref.topk_merge_ref(jnp.asarray(ids), jnp.asarray(d), 5)
+    _assert_merge_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# sweep_merge: fused gather+shift+merge+scatter vs the unfused oracle
+# ---------------------------------------------------------------------------
+
+def _random_case(rng, *, n, chunk, t, k, e=None):
+    e = k if e is None else e
+    nbr = rng.integers(-1, n, size=(chunk, t)).astype(np.int32)
+    verts = rng.choice(n, size=chunk, replace=False).astype(np.int32)
+    nbr[np.isin(nbr, verts)] = -1  # level invariant: targets are never sources
+    w = rng.uniform(0, 10, (chunk, t)).astype(np.float32)
+    w[nbr < 0] = np.inf
+    ex_ids = rng.integers(-1, n, size=(n + 1, e)).astype(np.int32)
+    ex_d = rng.uniform(0, 50, (n + 1, e)).astype(np.float32)
+    ex_d[ex_ids < 0] = np.inf
+    ex_ids[n], ex_d[n] = -1, np.inf
+    vk_ids = rng.integers(-1, n, size=(n + 1, k)).astype(np.int32)
+    vk_d = np.sort(rng.uniform(0, 50, (n + 1, k)), axis=1).astype(np.float32)
+    vk_d[vk_ids < 0] = np.inf
+    vk_ids[n], vk_d[n] = -1, np.inf
+    return tuple(jnp.asarray(x) for x in (nbr, verts, w, ex_ids, ex_d, vk_ids, vk_d))
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+@pytest.mark.parametrize(
+    "chunk,t,k",
+    [(4, 1, 2), (8, 3, 5), (8, 7, 20), (4, 4, 3)],
+)
+def test_sweep_merge_matches_oracle(use_pallas, chunk, t, k):
+    rng = np.random.default_rng(chunk * 100 + t * 10 + k)
+    args = _random_case(rng, n=37, chunk=chunk, t=t, k=k)
+    got = ops.sweep_merge(*args, k, use_pallas=use_pallas)
+    want = ref.sweep_merge_ref(*args, k)
+    _assert_merge_equal(got, want)
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_sweep_merge_untouched_rows_preserved(use_pallas):
+    rng = np.random.default_rng(0)
+    args = _random_case(rng, n=29, chunk=4, t=3, k=4)
+    verts = np.asarray(args[1])
+    got_i, got_d = ops.sweep_merge(*args, 4, use_pallas=use_pallas)
+    untouched = np.setdiff1d(np.arange(30), verts)
+    np.testing.assert_array_equal(
+        np.asarray(got_i)[untouched], np.asarray(args[5])[untouched]
+    )
+    np.testing.assert_array_equal(
+        np.asarray(got_d)[untouched], np.asarray(args[6])[untouched]
+    )
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_sweep_merge_all_invalid_neighbors_keeps_extras_only(use_pallas):
+    n, chunk, t, k = 12, 4, 2, 3
+    nbr = np.full((chunk, t), -1, np.int32)
+    verts = np.arange(chunk, dtype=np.int32)
+    w = np.full((chunk, t), np.inf, np.float32)
+    ex_ids = np.full((n + 1, k), -1, np.int32)
+    ex_d = np.full((n + 1, k), np.inf, np.float32)
+    ex_ids[:chunk, 0] = np.arange(chunk) + 5
+    ex_d[:chunk, 0] = 2.5
+    vk_ids = np.full((n + 1, k), -1, np.int32)
+    vk_d = np.full((n + 1, k), np.inf, np.float32)
+    args = tuple(jnp.asarray(x) for x in (nbr, verts, w, ex_ids, ex_d, vk_ids, vk_d))
+    got_i, got_d = ops.sweep_merge(*args, k, use_pallas=use_pallas)
+    np.testing.assert_array_equal(np.asarray(got_i)[:chunk, 0], np.arange(chunk) + 5)
+    np.testing.assert_allclose(np.asarray(got_d)[:chunk, 0], 2.5)
+    assert (np.asarray(got_i)[:chunk, 1:] == -1).all()
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_sweep_merge_ties_and_dedup_across_neighbors(use_pallas):
+    """Two neighbors both know object 3 at the same shifted distance; the
+    merged row must keep one copy and tie-break equal distances by id."""
+    n, chunk, t, k = 10, 4, 2, 3
+    nbr = np.array([[0, 1]] * chunk, np.int32)
+    verts = np.arange(4, 8).astype(np.int32)
+    w = np.ones((chunk, t), np.float32)
+    vk_ids = np.full((n + 1, k), -1, np.int32)
+    vk_d = np.full((n + 1, k), np.inf, np.float32)
+    vk_ids[0, :2] = [3, 8]
+    vk_d[0, :2] = [1.0, 1.0]
+    vk_ids[1, :2] = [3, 2]
+    vk_d[1, :2] = [1.0, 1.0]
+    ex_ids = np.full((n + 1, k), -1, np.int32)
+    ex_d = np.full((n + 1, k), np.inf, np.float32)
+    args = tuple(jnp.asarray(x) for x in (nbr, verts, w, ex_ids, ex_d, vk_ids, vk_d))
+    got_i, got_d = ops.sweep_merge(*args, k, use_pallas=use_pallas)
+    want_i, want_d = ref.sweep_merge_ref(*args, k)
+    _assert_merge_equal((got_i, got_d), (want_i, want_d))
+    np.testing.assert_array_equal(np.asarray(got_i)[4], [2, 3, 8])
+    np.testing.assert_allclose(np.asarray(got_d)[4], [2.0, 2.0, 2.0])
+
+
+def test_sweep_merge_candidate_width_not_multiple_of_128():
+    """t*k+e far from a lane multiple exercises the scratch padding path."""
+    rng = np.random.default_rng(3)
+    args = _random_case(rng, n=41, chunk=8, t=5, k=7)  # width 42
+    got = ops.sweep_merge(*args, 7, use_pallas=True)
+    want = ref.sweep_merge_ref(*args, 7)
+    _assert_merge_equal(got, want)
