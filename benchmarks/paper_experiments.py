@@ -168,7 +168,7 @@ def exp5_index_size() -> None:
     k = 20
     g, objects, bn, idx = _build(k)
     ten = TENIndexLite(g, objects, k)
-    knn_b = idx.size_bytes()
+    knn_b = idx.size_bytes(dist_bytes=4)  # the paper's n*k*(4+4) count
     ten_b = ten.size_bytes()
     row("exp5.size.knn_index_bytes", knn_b, f"n*k*8={g.n}*{k}*8")
     row("exp5.size.ten_lite_bytes", ten_b, f"x{ten_b / knn_b:.1f};h2h={ten.size_entries()['h2h_entries']}ent")
@@ -181,7 +181,7 @@ def exp6_vary_k_build() -> None:
         t0 = time.perf_counter()
         idx = knn_index_cons_plus(bn, objects, k)
         dt = time.perf_counter() - t0
-        row(f"exp6.build.k{k}", dt * 1e6, f"size={idx.size_bytes()}B")
+        row(f"exp6.build.k{k}", dt * 1e6, f"size={idx.size_bytes(dist_bytes=4)}B")
 
 
 def exp7_scalability() -> None:
@@ -277,6 +277,79 @@ def exp9_throughput() -> None:
         f"{(len(qs) + ups) / dt:.0f}ops/s")
 
 
+def exp11_engine_serving() -> None:
+    """Batched QueryEngine serving vs the scalar per-call Python loop.
+
+    The ISSUE-2 acceptance experiment (grid=40, k=20, CPU backend): mirrors
+    Exp-2's query cost and Exp-9's mixed query+update traffic, but through
+    the device-resident ``repro.knn`` serving path. Emits the engine stats
+    (batch size, queries/s, staged-queue depth) as meta for the CI schema
+    check; the engine batch path must report >= 10x the scalar loop's ops/s.
+    """
+    import jax
+
+    from repro import knn
+
+    k = 20
+    g = road_network(40, 40, seed=0)
+    objects = pick_objects(g.n, 0.02, seed=0)
+    bn = build_bngraph(g)
+    engine = knn.QueryEngine.build(bn, objects, k)
+    idx = engine.to_index()
+    rng = np.random.default_rng(1)
+
+    # scalar baseline: one Python KNNIndex.query per op
+    qs = rng.integers(0, g.n, size=4000)
+    t0 = time.perf_counter()
+    for u in qs:
+        idx.query(int(u))
+    t_scalar = time.perf_counter() - t0
+    scalar_qps = len(qs) / t_scalar
+    row("exp11.serve.scalar_query_loop", t_scalar / len(qs) * 1e6,
+        f"{scalar_qps:.0f}ops/s")
+
+    # engine: batched gather path at serving batch sizes
+    best_qps, best_b = 0.0, 0
+    for b in (512, 4096):
+        us = rng.integers(0, g.n, size=b)
+        jax.block_until_ready(engine.query_batch(us)[0])  # compile outside timing
+        t0 = time.perf_counter()
+        n = 0
+        while time.perf_counter() - t0 < 1.0:
+            ids, _ = engine.query_batch(us)
+            jax.block_until_ready(ids)
+            n += b
+        qps = n / (time.perf_counter() - t0)
+        if qps > best_qps:
+            best_qps, best_b = qps, b
+        row(f"exp11.serve.engine_query_batch.b{b}", 1e6 / qps,
+            f"{qps:.0f}ops/s;x{qps / scalar_qps:.1f}")
+
+    # mixed traffic: query tiles + staged updates flushed per tile (BUA)
+    mset = set(engine.objects.tolist())
+    batch, n_upd = 512, 26
+    jax.block_until_ready(engine.query_batch(rng.integers(0, g.n, size=batch))[0])
+    depth = 0
+    t0 = time.perf_counter()
+    ops_done = 0
+    for _ in range(6):
+        ids, _ = engine.query_batch(rng.integers(0, g.n, size=batch))
+        jax.block_until_ready(ids)
+        staged = knn.stage_random_updates(engine, mset, rng, n_upd)
+        depth = max(depth, engine.queue_depth)
+        engine.flush_updates()
+        ops_done += batch + staged
+    dt = time.perf_counter() - t0
+    row("exp11.serve.engine_mixed_bua", dt / ops_done * 1e6,
+        f"{ops_done / dt:.0f}ops/s;{n_upd}/{batch}upd")
+
+    meta("exp11.engine.batch_size", best_b)
+    meta("exp11.engine.queries_per_s", round(best_qps, 1))
+    meta("exp11.engine.staged_queue_depth", depth)
+    meta("exp11.engine.speedup_vs_scalar", round(best_qps / scalar_qps, 2))
+    meta("exp11.engine.stats", engine.stats())
+
+
 def exp10_vertex_orders() -> None:
     k = 20
     g, objects = dataset(grid=28)  # static orders blow up fast; small grid
@@ -299,4 +372,5 @@ ALL = [
     exp8_updates,
     exp9_throughput,
     exp10_vertex_orders,
+    exp11_engine_serving,
 ]

@@ -4,22 +4,31 @@ service over a road network with mixed query + object-update traffic.
     PYTHONPATH=src python examples/knn_road_service.py [--grid 40] [--k 20]
 
 Simulates a Yelp/Uber-style workload: 95% kNN queries ("nearest coffee"),
-5% object updates (stores opening/closing), under the two arrival models the
-paper benchmarks (BUA+QF and RUA+FCFS), printing throughput for each.
+5% object updates (stores opening/closing). Two serving paths over the SAME
+traffic:
+
+  scalar host loop — one ``KNNIndex.query`` / ``insert_object`` /
+      ``delete_object`` Python call per op (the paper's per-request model,
+      kept as the baseline);
+  batched QueryEngine — queries served in ``query_batch`` tiles, updates
+      staged into the engine queue and flushed once per tile (the BUA
+      arrival model), everything device-resident via ``repro.knn``.
+
+Prints both throughputs and the speedup; the engine path is also what
+``repro.launch.serve --arch knn-index`` runs as a service.
 """
 import argparse
 import time
 
+import jax
 import numpy as np
 
-from repro.core.bngraph import build_bngraph
-from repro.core.reference import knn_index_cons_plus
-from repro.core.updates import delete_object, insert_object
-from repro.graph.generators import pick_objects, road_network
+from repro import knn
 
 
-def run_workload(bn, idx, objects, n_ops: int, update_frac: float, k: int,
-                 mode: str, seed: int = 0) -> float:
+def run_scalar_loop(bn, idx, objects, n_ops: int, update_frac: float, k: int,
+                    mode: str, seed: int = 0) -> float:
+    """Baseline: per-op Python dispatch (one row scan / heap loop per call)."""
     rng = np.random.default_rng(seed)
     mset = set(objects.tolist())
     ops_done = 0
@@ -34,15 +43,52 @@ def run_workload(bn, idx, objects, n_ops: int, update_frac: float, k: int,
         if is_update[i]:
             v = int(queries[i])
             if v in mset and len(mset) > k + 1:
-                delete_object(bn, idx, v)
+                knn.delete_object(bn, idx, v)
                 mset.discard(v)
             elif v not in mset:
-                insert_object(bn, idx, v)
+                knn.insert_object(bn, idx, v)
                 mset.add(v)
         else:
             idx.query(int(queries[i]))
         ops_done += 1
     return ops_done / (time.perf_counter() - t0)
+
+
+def run_engine_batched(engine, n_ops: int, update_frac: float,
+                       batch: int, seed: int = 0) -> dict:
+    """Engine path: query tiles + staged updates flushed per tile (BUA+QF)."""
+    rng = np.random.default_rng(seed)
+    mset = set(engine.objects.tolist())
+    n_upd = int(round(batch * update_frac))
+    n_q = batch - n_upd
+
+    def one_tile():
+        us = rng.integers(0, engine.n, size=n_q)
+        jax.block_until_ready(engine.query_batch(us)[0])
+        if knn.stage_random_updates(engine, mset, rng, n_upd):
+            engine.flush_updates()
+
+    one_tile()  # compile the gather + the flush repair programs, untimed
+    ops_done = queries = updates = 0
+    t_q = t_u = 0.0
+    while ops_done < n_ops:
+        t0 = time.perf_counter()
+        ids, _ = engine.query_batch(rng.integers(0, engine.n, size=n_q))
+        jax.block_until_ready(ids)
+        t_q += time.perf_counter() - t0
+        queries += n_q
+        t0 = time.perf_counter()
+        staged = knn.stage_random_updates(engine, mset, rng, n_upd)
+        if staged:
+            engine.flush_updates()
+        t_u += time.perf_counter() - t0
+        updates += staged
+        ops_done += n_q + staged
+    return {
+        "ops_per_s": ops_done / max(t_q + t_u, 1e-9),
+        "queries_per_s": queries / max(t_q, 1e-9),
+        "updates_per_s": updates / max(t_u, 1e-9) if updates else 0.0,
+    }
 
 
 def main():
@@ -51,20 +97,34 @@ def main():
     ap.add_argument("--k", type=int, default=20)
     ap.add_argument("--mu", type=float, default=0.02)
     ap.add_argument("--ops", type=int, default=3000)
+    ap.add_argument("--batch", type=int, default=512)
+    ap.add_argument("--update-frac", type=float, default=0.05)
     args = ap.parse_args()
 
-    g = road_network(args.grid, args.grid, seed=0)
-    objects = pick_objects(g.n, args.mu, seed=0)
+    g = knn.road_network(args.grid, args.grid, seed=0)
+    objects = knn.pick_objects(g.n, args.mu, seed=0)
     print(f"network: n={g.n} m={g.m}; |M|={len(objects)}; k={args.k}")
     t0 = time.perf_counter()
-    bn = build_bngraph(g)
-    idx = knn_index_cons_plus(bn, objects, args.k)
+    bn = knn.build_bngraph(g)
+    engine = knn.QueryEngine.build(bn, objects, args.k)
+    idx = engine.to_index()
     print(f"index built in {time.perf_counter() - t0:.2f}s "
-          f"({idx.size_bytes() / 1024:.0f} KiB)")
+          f"({idx.size_bytes(dist_bytes=4) / 1024:.0f} KiB on device)")
 
+    base = {}
     for mode in ("bua_qf", "rua_fcfs"):
-        thr = run_workload(bn, idx.copy(), objects, args.ops, 0.05, args.k, mode)
-        print(f"{mode:10s}: {thr:,.0f} ops/s (95% queries / 5% updates)")
+        thr = run_scalar_loop(bn, idx.copy(), objects, args.ops, args.update_frac,
+                              args.k, mode)
+        base[mode] = thr
+        print(f"scalar {mode:10s}: {thr:,.0f} ops/s "
+              f"({1 - args.update_frac:.0%} queries / {args.update_frac:.0%} updates)")
+
+    r = run_engine_batched(engine, args.ops, args.update_frac, args.batch)
+    print(f"engine bua_qf (batch={args.batch}): {r['ops_per_s']:,.0f} ops/s "
+          f"(x{r['ops_per_s'] / base['bua_qf']:.1f} vs scalar loop); "
+          f"queries alone {r['queries_per_s']:,.0f}/s, "
+          f"updates alone {r['updates_per_s']:,.0f}/s")
+    print("engine stats:", engine.stats())
 
 
 if __name__ == "__main__":

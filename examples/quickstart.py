@@ -4,11 +4,16 @@
 
 Builds a synthetic road network, constructs the KNN-Index with the
 bidirectional algorithm (host reference AND the TPU-style level-synchronous
-sweeps), answers queries progressively, and maintains the index through
-object insertions/deletions.
+sweeps), answers queries progressively, maintains the index through object
+insertions/deletions, and serves batched traffic through the ``repro.knn``
+QueryEngine facade.
 """
+import os
+import tempfile
+
 import numpy as np
 
+from repro import knn
 from repro.core.bngraph import build_bngraph
 from repro.core.construct_jax import build_knn_index_jax, prepare_sweep
 from repro.core.index import indices_equivalent
@@ -35,7 +40,8 @@ def main():
     idx_host = knn_index_cons_plus(bn, objects, k)
     idx_dev = build_knn_index_jax(bn, objects, k, use_pallas=False)
     print(f"identical results: {indices_equivalent(idx_host, idx_dev)}")
-    print(f"index size: {idx_dev.size_bytes() / 1024:.1f} KiB (= n*k*8 bytes)")
+    print(f"index size: {idx_dev.size_bytes(dist_bytes=4) / 1024:.1f} KiB "
+          f"(= n*k*8 bytes on device, Theorem 4.5)")
 
     print("\n== 4. queries (O(k), progressive) ==")
     u = 777
@@ -52,6 +58,26 @@ def main():
     delta = delete_object(bn, idx_dev, new_obj)
     print(f"delete {new_obj}: {delta} rows touched")
     print(f"back to original: {indices_equivalent(idx_host, idx_dev)}")
+
+    print("\n== 6. serving (repro.knn facade: batched device-resident engine) ==")
+    engine = knn.build_engine(bn, objects, k)
+    us = np.arange(0, g.n, 7, dtype=np.int32)
+    ids, dists = engine.query_batch(us)              # one gather, whole batch
+    print(f"query_batch({len(us)} queries): ids {ids.shape}, "
+          f"first row {np.asarray(ids[0, :3]).tolist()}")
+    for prefix_ids, _ in engine.query_progressive_batch(us[:4], 3):
+        pass                                          # first-i prefixes, one gather
+    print(f"progressive prefixes up to i={prefix_ids.shape[1]} for "
+          f"{prefix_ids.shape[0]} queries")
+    engine.stage_insert(new_obj)                      # queued, not yet visible
+    print(f"staged queue depth: {engine.queue_depth}; "
+          f"flush: {engine.flush_updates()}")
+    path = os.path.join(tempfile.mkdtemp(), "index.npz")
+    engine.save(path)                                 # same artifact knn_build --out writes
+    engine2 = knn.load_engine(path, bn=bn)
+    print(f"save/load round-trip equivalent: "
+          f"{indices_equivalent(engine.to_index(), engine2.to_index())}")
+    print(f"engine stats: {engine.stats()}")
 
 
 if __name__ == "__main__":

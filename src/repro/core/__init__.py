@@ -1,3 +1,8 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+# The paper's primary contribution — the SYSTEM lives here:
+#   bngraph.py       Algorithm 1 (BN-Graph, host symbolic phase)
+#   reference.py     Algorithms 2/3 host oracles
+#   construct_jax.py device-resident fused construction sweeps
+#   index.py         host KNNIndex view (Definition 4.1, O(k) query)
+#   updates.py       Algorithms 4/5 scalar host oracle
+#   engine.py        device-resident batched QueryEngine (serving surface)
+# Public entry point: the stable `repro.knn` facade.

@@ -289,29 +289,41 @@ def object_extras(n: int, objects: np.ndarray, k: int) -> tuple[jax.Array, jax.A
     return jax.device_put(ex_ids), jax.device_put(ex_d)
 
 
-def build_knn_index_jax(
-    bn: BNGraph, objects: np.ndarray, k: int, *, use_pallas: bool = True
-) -> KNNIndex:
+def build_knn_tables_jax(
+    bn: BNGraph,
+    objects: np.ndarray,
+    k: int,
+    *,
+    use_pallas: bool = True,
+    plans: tuple[SweepPlan, SweepPlan] | None = None,
+) -> tuple[jax.Array, jax.Array]:
     """Algorithm 3, fused device sweeps: V_k^< up, then V_k down, no host sync.
 
     The bottom-up tables (dummy row included) feed the top-down sweep directly
     as its extra-candidate tables — the two sweeps share device buffers and
-    the only readback is the final result.
+    nothing is read back. Returns the live device (n+1, k) int32/float32
+    tables (dummy row last) — the layout ``QueryEngine`` serves from.
+    ``plans`` lets a caller that already ran ``prepare_sweep`` (e.g. to report
+    schedule stats) reuse the uploaded (up, down) schedules.
     """
-    n = bn.n
-    plan_up = prepare_sweep(bn, "up")
-    plan_down = prepare_sweep(bn, "down")
-    ex_ids, ex_d = object_extras(n, objects, k)
+    ex_ids, ex_d = object_extras(bn.n, objects, k)
+    plan_up, plan_down = plans or (prepare_sweep(bn, "up"), prepare_sweep(bn, "down"))
 
     # ---- bottom-up: V_k^< (Lemma 5.12) ----
     vkl_ids, vkl_d = run_sweep(plan_up, ex_ids, ex_d, k, use_pallas=use_pallas)
     # ---- top-down: V_k (Lemma 5.21), extras = own V_k^< rows, still on device ----
-    vk_ids, vk_d = run_sweep(plan_down, vkl_ids, vkl_d, k, use_pallas=use_pallas)
+    return run_sweep(plan_down, vkl_ids, vkl_d, k, use_pallas=use_pallas)
 
+
+def build_knn_index_jax(
+    bn: BNGraph, objects: np.ndarray, k: int, *, use_pallas: bool = True
+) -> KNNIndex:
+    """Device construction + readback into the host ``KNNIndex`` view."""
+    vk_ids, vk_d = build_knn_tables_jax(bn, objects, k, use_pallas=use_pallas)
     # np.array (not asarray): the index must own writable host buffers, the
     # update algorithms (core/updates.py) patch rows in place.
-    ids = np.array(vk_ids[:n])
-    dists = np.where(ids >= 0, np.asarray(vk_d[:n], np.float64), np.inf)
+    ids = np.array(vk_ids[: bn.n])
+    dists = np.where(ids >= 0, np.asarray(vk_d[: bn.n], np.float64), np.inf)
     return KNNIndex(ids=ids, dists=dists, k=k)
 
 

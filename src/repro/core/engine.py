@@ -1,0 +1,496 @@
+"""Device-resident batched kNN serving engine — the production query surface.
+
+``KNNIndex`` (core/index.py) is the paper's host view: one numpy row scan per
+query, one heap loop per update. That shape cannot serve heavy traffic — every
+call pays Python dispatch, and nothing batches. ``QueryEngine`` keeps the
+index as live device ``(n+1, k)`` id/dist tables (the construction sweeps'
+layout, dummy row last) and exposes the paper's three operations in batched,
+jitted form:
+
+* ``query_batch(us, k)`` — one row gather + per-query k mask for a whole
+  batch of queries (Theorem 4.3's O(k) scan, vectorized); and
+  ``query_progressive_batch`` which yields the first-i prefix incrementally
+  (Theorem 4.4) from a single gather.
+
+* staged updates — ``stage_insert`` / ``stage_delete`` accumulate object
+  updates in an arrival-order queue; ``flush_updates`` coalesces the queue to
+  its net object-set delta and applies it as *vectorized batches* against the
+  device tables. Deletes: one device scan finds every row naming a deleted
+  object (``ops.rows_containing``), one ``ops.rows_purge`` drops and
+  recompacts them, then Jacobi rounds of the construction merge
+  (``ops.sweep_merge`` over the affected rows' bridge neighborhoods) repair
+  the rows to a fixpoint — Algorithm 5's processDel, run breadth-first on
+  device instead of vertex-at-a-time on host. Inserts: the checkIns frontier
+  (``updates.insert_affected_set``, shared with the host oracle) finds the
+  affected rows and exact distances, and one ``ops.rows_merge`` (the
+  ``topk_merge`` kernel) repairs all of them at once — Algorithm 4's lines
+  9-10 over the whole batch. The scalar ``core/updates.py`` path is kept as
+  the reference oracle; the batched path is property-tested
+  ``indices_equivalent`` against it.
+
+  The repair rounds use the merge's XLA form (functional gather-then-scatter)
+  rather than the in-place Pallas kernel: repaired rows read each other, so
+  the level-schedule disjointness the fused kernel's aliasing relies on does
+  not hold here.
+
+* ``save`` / ``load`` — one ``.npz`` artifact (ids, dists, k, object set,
+  format version) shared by ``knn_build.py --out`` and the serving loop.
+
+Queries always see the last *flushed* state: the staged queue is invisible
+until ``flush_updates``, which is exactly the paper's batch-update-arrival
+(BUA) serving model, and what lets a server interleave large query batches
+with periodic update batches without locking.
+
+Host/device traffic per flush: the update script and affected-row indices go
+up; a changed-row mask per repair round (which narrows the next round's
+frontier) and one (n,) k-th-distance column (the checkIns pruning bound)
+come back. Queries move only the query ids up and the (B, k) result tiles
+back.
+"""
+from __future__ import annotations
+
+import json
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bngraph import BNGraph
+from repro.core.construct_jax import build_knn_tables_jax
+from repro.core.index import PAD_ID, KNNIndex
+from repro.core.updates import insert_affected_set
+from repro.kernels import ops
+
+_FORMAT = "repro-knn-index"
+_FORMAT_VERSION = 1
+_MAX_REPAIR_ROUNDS = 256
+
+
+def _pow2_pad(x: int, lo: int = 8) -> int:
+    """Next power of two >= x (>= lo): bounds distinct jit signatures."""
+    return max(lo, 1 << (max(1, x) - 1).bit_length())
+
+
+class QueryEngine:
+    """Batched kNN serving over device-resident index tables (see module doc)."""
+
+    def __init__(
+        self,
+        ids: np.ndarray | jax.Array,
+        dists: np.ndarray | jax.Array,
+        k: int,
+        objects,
+        *,
+        bn: BNGraph | None = None,
+        use_pallas: bool = False,
+    ):
+        ids = jnp.asarray(ids, jnp.int32)
+        dists = jnp.asarray(dists, jnp.float32)
+        if ids.ndim != 2 or ids.shape != dists.shape or ids.shape[1] != k:
+            raise ValueError(f"tables must be (n, k)={ids.shape} with k={k}")
+        self.k = int(k)
+        self.use_pallas = bool(use_pallas)
+        self.bn = bn
+        obj = {int(o) for o in np.asarray(objects).ravel()}
+        if bn is not None and ids.shape[0] not in (bn.n, bn.n + 1):
+            raise ValueError(f"tables have {ids.shape[0]} rows but graph has n={bn.n}")
+        if bn is not None and ids.shape[0] == bn.n + 1:
+            # device tables straight from the sweeps, dummy row already there
+            self.n = ids.shape[0] - 1
+            self._vk_ids, self._vk_d = ids, dists
+        else:
+            # host (n, k) tables: append the dummy gather row the kernels use
+            self.n = int(ids.shape[0])
+            self._vk_ids = jnp.concatenate(
+                [ids, jnp.full((1, k), PAD_ID, jnp.int32)], axis=0
+            )
+            self._vk_d = jnp.concatenate(
+                [dists, jnp.full((1, k), jnp.inf, jnp.float32)], axis=0
+            )
+        self._objects = obj
+        self._pending = set(obj)
+        self._staged: list[tuple[str, int]] = []
+        self._nbr_ids: np.ndarray | None = None
+        self._nbr_w: np.ndarray | None = None
+        self._nbr_deg: np.ndarray | None = None
+        self._nbr_by_t: dict[int, tuple[jax.Array, jax.Array]] = {}
+        self._stats = {
+            "queries_served": 0,
+            "query_batches": 0,
+            "last_batch_size": 0,
+            "flushes": 0,
+            "inserts_applied": 0,
+            "deletes_applied": 0,
+            "rows_repaired": 0,
+            "repair_rounds_last": 0,
+        }
+
+    # ------------------------------------------------------------------
+    # construction / conversion
+    # ------------------------------------------------------------------
+
+    @classmethod
+    def build(
+        cls,
+        bn: BNGraph,
+        objects: np.ndarray,
+        k: int,
+        *,
+        use_pallas: bool = False,
+    ) -> "QueryEngine":
+        """Construct on device (Algorithm 3 fused sweeps) and serve in place:
+        the sweep result tables become the engine's live tables, no readback."""
+        vk_ids, vk_d = build_knn_tables_jax(bn, objects, k, use_pallas=use_pallas)
+        return cls(vk_ids, vk_d, k, objects, bn=bn, use_pallas=use_pallas)
+
+    @classmethod
+    def from_index(
+        cls,
+        index: KNNIndex,
+        objects,
+        *,
+        bn: BNGraph | None = None,
+        use_pallas: bool = False,
+    ) -> "QueryEngine":
+        """Upload a host ``KNNIndex`` (e.g. an oracle-built one)."""
+        dists = np.where(index.ids >= 0, index.dists, np.inf).astype(np.float32)
+        return cls(index.ids, dists, index.k, objects, bn=bn, use_pallas=use_pallas)
+
+    def to_index(self) -> KNNIndex:
+        """Read the tables back into the host ``KNNIndex`` view (oracle dtype)."""
+        ids = np.array(self._vk_ids[: self.n])
+        dists = np.where(ids >= 0, np.asarray(self._vk_d[: self.n], np.float64), np.inf)
+        return KNNIndex(ids=ids, dists=dists, k=self.k)
+
+    @property
+    def objects(self) -> np.ndarray:
+        """The flushed candidate-object set M (staged updates not included)."""
+        return np.array(sorted(self._objects), dtype=np.int32)
+
+    @property
+    def tables(self) -> tuple[jax.Array, jax.Array]:
+        """The live device (n+1, k) id/dist tables (dummy row last)."""
+        return self._vk_ids, self._vk_d
+
+    # ------------------------------------------------------------------
+    # queries
+    # ------------------------------------------------------------------
+
+    def _ks_array(self, b: int, k) -> tuple[jax.Array, int]:
+        if k is None:
+            return jnp.full((b,), self.k, jnp.int32), self.k
+        ks = np.asarray(k, dtype=np.int32)
+        if ks.ndim == 0:
+            if int(ks) > self.k:
+                raise ValueError(f"query k={int(ks)} exceeds index k={self.k}")
+            return jnp.full((b,), int(ks), jnp.int32), int(ks)
+        if ks.shape != (b,):
+            raise ValueError(f"per-query k must have shape ({b},), got {ks.shape}")
+        if ks.size and int(ks.max()) > self.k:
+            raise ValueError(f"per-query k max={int(ks.max())} exceeds index k={self.k}")
+        return jnp.asarray(ks), self.k
+
+    def query_batch(self, us, k=None) -> tuple[jax.Array, jax.Array]:
+        """Batched kNN: (B,) vertices -> ((B, k') ids, (B, k') dists).
+
+        ``k`` may be None (index k), a scalar, or a (B,) array for mixed-k
+        traffic; columns past a query's k hold the pad sentinel (-1, +inf).
+        Raises ValueError when any requested k exceeds the index's k.
+        """
+        us = jnp.asarray(np.asarray(us, dtype=np.int32))
+        if us.ndim != 1:
+            raise ValueError(f"queries must be a 1-D vertex array, got {us.shape}")
+        ks, width = self._ks_array(us.shape[0], k)
+        ids, d = ops.serve_gather(self._vk_ids, self._vk_d, us, ks)
+        self._stats["queries_served"] += int(us.shape[0])
+        self._stats["query_batches"] += 1
+        self._stats["last_batch_size"] = int(us.shape[0])
+        if width < self.k:
+            ids, d = ids[:, :width], d[:, :width]
+        return ids, d
+
+    def query_progressive_batch(
+        self, us, k=None
+    ) -> Iterator[tuple[jax.Array, jax.Array]]:
+        """Progressive batched output: yields the first-i prefix for
+        i = 1..k from ONE gather — O(i) work to surface i results per query
+        (Theorem 4.4, batched)."""
+        ids, d = self.query_batch(us, k)
+        for i in range(1, ids.shape[1] + 1):
+            yield ids[:, :i], d[:, :i]
+
+    # ------------------------------------------------------------------
+    # staged updates
+    # ------------------------------------------------------------------
+
+    def _check_vertex(self, u: int) -> int:
+        u = int(u)
+        if not 0 <= u < self.n:
+            raise ValueError(f"vertex {u} out of range [0, {self.n})")
+        if self.bn is None:
+            raise RuntimeError(
+                "updates need the BN-Graph; build the engine with bn= or load(..., bn=)"
+            )
+        return u
+
+    def stage_insert(self, u: int) -> int:
+        """Queue an object insertion; returns the staged-queue depth."""
+        u = self._check_vertex(u)
+        if u in self._pending:
+            raise ValueError(f"object {u} already present (or staged for insert)")
+        self._pending.add(u)
+        self._staged.append(("ins", u))
+        return len(self._staged)
+
+    def stage_delete(self, u: int) -> int:
+        """Queue an object deletion; returns the staged-queue depth."""
+        u = self._check_vertex(u)
+        if u not in self._pending:
+            raise ValueError(f"object {u} absent (or staged for delete)")
+        self._pending.discard(u)
+        self._staged.append(("del", u))
+        return len(self._staged)
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self._staged)
+
+    def _nbr_tables(self) -> None:
+        """Combined BNS^< + BNS^> adjacency, uploaded once, width-bucketed.
+
+        Valid neighbors are compacted to the front of each row so that a row
+        with degree d is fully described by the first d columns; repair
+        rounds then run on the (n+1, t) column slice of the smallest pow4
+        bucket t >= the batch rows' max degree instead of the global tau',
+        mirroring the construction sweeps' shape bucketing.
+        """
+        if self._nbr_ids is None:
+            bn = self.bn
+            nbr = np.concatenate([bn.lo_ids, bn.hi_ids], axis=1).astype(np.int32)
+            w = np.concatenate([bn.lo_w, bn.hi_w], axis=1).astype(np.float32)
+            w[nbr < 0] = np.inf
+            order = np.argsort(nbr < 0, axis=1, kind="stable")  # valid first
+            nbr = np.take_along_axis(nbr, order, axis=1)
+            w = np.take_along_axis(w, order, axis=1)
+            nbr = np.concatenate([nbr, np.full((1, nbr.shape[1]), -1, np.int32)])
+            w = np.concatenate([w, np.full((1, w.shape[1]), np.inf, np.float32)])
+            self._nbr_deg = (nbr >= 0).sum(axis=1).astype(np.int32)
+            self._nbr_ids = nbr
+            self._nbr_w = w
+
+    def _nbr_slice(self, t: int) -> tuple[jax.Array, jax.Array]:
+        """Device (n+1, t) adjacency slice for one width bucket, cached."""
+        if t not in self._nbr_by_t:
+            self._nbr_by_t[t] = (
+                jax.device_put(self._nbr_ids[:, :t]),
+                jax.device_put(self._nbr_w[:, :t]),
+            )
+        return self._nbr_by_t[t]
+
+    def _t_bucket(self, rows: np.ndarray) -> int:
+        """Smallest pow4 width (>= 8) covering the rows' max BNS degree."""
+        t_max = int(self._nbr_deg[rows].max())
+        t = 8
+        while t < t_max:
+            t *= 4
+        return min(t, self._nbr_ids.shape[1])
+
+    def _pad_rows(self, rows: np.ndarray) -> jax.Array:
+        """Pad a row batch to a pow2 length with the dummy row id n.
+
+        lo=64 keeps the set of distinct jit row-count signatures small (64,
+        128, 256, ...) so a long-running service stops compiling after the
+        first few flushes; merging a few dozen dummy rows costs nothing.
+        """
+        out = np.full(_pow2_pad(len(rows), lo=64), self.n, np.int32)
+        out[: len(rows)] = rows
+        return jnp.asarray(out)
+
+    def _apply_deletes(self, deletes: list[int]) -> tuple[int, int]:
+        """Vectorized Algorithm 5 over a delete batch; returns (rows, rounds)."""
+        # pow2-pad with the dummy id n (never an object id, so never a hit):
+        # bounds the distinct jit signatures across flushes of varying size.
+        padded = np.full(_pow2_pad(len(deletes)), self.n, np.int32)
+        padded[: len(deletes)] = deletes
+        del_arr = jnp.asarray(padded)
+        hit = np.asarray(ops.rows_containing(self._vk_ids, del_arr))
+        rows = np.flatnonzero(hit).astype(np.int32)
+        if rows.size == 0:
+            return 0, 0
+        self._vk_ids, self._vk_d = ops.rows_purge(
+            self._vk_ids, self._vk_d, self._pad_rows(rows), del_arr, self.k,
+            use_pallas=self.use_pallas,
+        )
+        self._nbr_tables()
+        # Round 1 re-merges every purged row; later rounds only the frontier:
+        # a row can improve again only if a BNS neighbor's row changed last
+        # round (BN adjacency is symmetric, so BNS(changed) IS that set).
+        # The frontier collapses fast, so later rounds are tiny batches.
+        # Within a round, rows are split by BNS-degree width bucket so the
+        # candidate tensor is sized to the batch, not to the global tau'.
+        active = rows
+        rounds = 0
+        while active.size and rounds < _MAX_REPAIR_ROUNDS:
+            changed_parts = []
+            deg = self._nbr_deg[active]
+            cap = self._nbr_ids.shape[1]
+            prev = 0
+            for t in [b for b in (8, 32, 128) if b < cap] + [cap]:
+                part = active[(deg > prev) & (deg <= t)]
+                prev = t
+                if part.size == 0:
+                    continue
+                nbr_tab, w_tab = self._nbr_slice(self._t_bucket(part))
+                self._vk_ids, self._vk_d, changed_mask = _repair_round(
+                    nbr_tab, w_tab, self._pad_rows(part), self._vk_ids, self._vk_d
+                )
+                changed_parts.append(part[np.asarray(changed_mask)[: part.size]])
+            rounds += 1
+            changed_rows = (
+                np.concatenate(changed_parts) if changed_parts else np.empty(0, np.int32)
+            )
+            if changed_rows.size == 0:
+                break
+            nbrs = np.unique(
+                np.concatenate(
+                    [self.bn.lo_ids[changed_rows].ravel(),
+                     self.bn.hi_ids[changed_rows].ravel()]
+                )
+            )
+            active = np.intersect1d(nbrs[nbrs >= 0], rows).astype(np.int32)
+        else:
+            if active.size:
+                raise RuntimeError(
+                    f"delete repair did not reach a fixpoint in "
+                    f"{_MAX_REPAIR_ROUNDS} rounds"
+                )
+        return int(rows.size), rounds
+
+    def _apply_inserts(self, inserts: list[int]) -> int:
+        """Vectorized Algorithm 4 over an insert batch; returns repaired rows."""
+        kth = np.asarray(self._vk_d[: self.n, -1], np.float64)
+        per_row: dict[int, list[tuple[int, float]]] = {}
+        for u in inserts:
+            affected = insert_affected_set(self.bn, lambda v: float(kth[v]), u)
+            for v, d in affected.items():
+                per_row.setdefault(v, []).append((u, d))
+        if not per_row:
+            return 0
+        rows = np.fromiter(per_row.keys(), np.int32, len(per_row))
+        p = _pow2_pad(max(len(c) for c in per_row.values()), lo=4)
+        r_pad = _pow2_pad(len(rows), lo=64)  # must match _pad_rows
+        cand_ids = np.full((r_pad, p), -1, np.int32)
+        cand_d = np.full((r_pad, p), np.inf, np.float32)
+        for i, v in enumerate(rows):
+            for j, (u, d) in enumerate(per_row[int(v)]):
+                cand_ids[i, j] = u
+                cand_d[i, j] = d
+        self._vk_ids, self._vk_d = ops.rows_merge(
+            self._vk_ids, self._vk_d, self._pad_rows(rows),
+            jnp.asarray(cand_ids), jnp.asarray(cand_d), self.k,
+            use_pallas=self.use_pallas,
+        )
+        return int(rows.size)
+
+    def flush_updates(self) -> dict:
+        """Apply the staged queue as vectorized device batches.
+
+        The queue is coalesced to its net object-set delta (the index is a
+        pure function of the final object set — Theorems 6.2/6.4 make the
+        sequential replay land on the same tables), deletions are applied
+        first (purge + breadth-first repair), then insertions (checkIns
+        frontier + one batched merge). Returns per-flush stats.
+        """
+        staged = len(self._staged)
+        deletes = sorted(self._objects - self._pending)
+        inserts = sorted(self._pending - self._objects)
+        rows_del = rounds = rows_ins = 0
+        if deletes:
+            rows_del, rounds = self._apply_deletes(deletes)
+        if inserts:
+            rows_ins = self._apply_inserts(inserts)
+        self._objects = set(self._pending)
+        self._staged.clear()
+        self._stats["flushes"] += 1
+        self._stats["inserts_applied"] += len(inserts)
+        self._stats["deletes_applied"] += len(deletes)
+        self._stats["rows_repaired"] += rows_del + rows_ins
+        self._stats["repair_rounds_last"] = rounds
+        return {
+            "staged": staged,
+            "inserts": len(inserts),
+            "deletes": len(deletes),
+            "rows_purged": rows_del,
+            "rows_merged": rows_ins,
+            "repair_rounds": rounds,
+        }
+
+    # ------------------------------------------------------------------
+    # persistence / stats
+    # ------------------------------------------------------------------
+
+    def save(self, path) -> None:
+        """Write the index artifact: one npz shared by build and serving."""
+        if self._staged:
+            raise RuntimeError("flush_updates() before save(): staged updates pending")
+        meta = {"format": _FORMAT, "version": _FORMAT_VERSION, "n": self.n, "k": self.k}
+        np.savez_compressed(
+            path,
+            ids=np.asarray(self._vk_ids[: self.n]),
+            dists=np.asarray(self._vk_d[: self.n]),
+            k=np.int64(self.k),
+            objects=self.objects,
+            meta=np.bytes_(json.dumps(meta).encode()),
+        )
+
+    @classmethod
+    def load(
+        cls, path, *, bn: BNGraph | None = None, use_pallas: bool = False
+    ) -> "QueryEngine":
+        """Load a ``save``/``knn_build --out`` artifact. ``bn`` enables updates.
+
+        Accepts the pre-engine ``knn_build`` npz too (no object set stored):
+        M is recovered as the distance-0 entries — every object is its own
+        0-th nearest neighbor, so exactly the objects appear at distance 0.
+        """
+        with np.load(path) as z:
+            ids = z["ids"]
+            dists = z["dists"]
+            k = int(z["k"])
+            if "objects" in z.files:
+                objects = z["objects"]
+            else:
+                objects = np.unique(ids[dists == 0.0])
+                objects = objects[objects >= 0]
+        return cls(ids, dists.astype(np.float32), k, objects, bn=bn, use_pallas=use_pallas)
+
+    def stats(self) -> dict:
+        """Serving counters (merged into benchmark/serve JSON output)."""
+        return {
+            "n": self.n,
+            "k": self.k,
+            "num_objects": len(self._objects),
+            "staged_queue_depth": len(self._staged),
+            **self._stats,
+        }
+
+
+@jax.jit
+def _repair_round(nbr_tab, w_tab, rows, vk_ids, vk_d):
+    """One Jacobi repair round: every row in ``rows`` re-merges its own
+    entries (extras tables = the live tables themselves) with its bridge
+    neighbors' rows; returns the per-row changed mask the caller uses to
+    narrow the next round's frontier. use_pallas=False in the merge is
+    required, not a tuning choice — see the module docstring.
+    """
+    k = vk_ids.shape[1]
+    nbr = nbr_tab[rows]
+    w = w_tab[rows]
+    new_ids, new_d = ops.sweep_merge(
+        nbr, rows, w, vk_ids, vk_d, vk_ids, vk_d, k, use_pallas=False
+    )
+    changed = jnp.any(
+        (new_ids[rows] != vk_ids[rows]) | (new_d[rows] != vk_d[rows]), axis=1
+    )
+    return new_ids, new_d, changed

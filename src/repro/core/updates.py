@@ -5,10 +5,18 @@ k-th distance of each visited vertex (checkIns / checkDel). We use a distance-
 ordered frontier (lazy-deletion heap) rather than the paper's FIFO queue: it
 explores the same pruned region but guarantees dist[v] is settled exactly when
 v is expanded, which is the invariant the paper's Theorems 6.2/6.4 assert.
+
+This module is the scalar *host reference oracle*: one update at a time
+against the numpy ``KNNIndex``. The production path is the batched,
+device-resident staged-update queue of ``repro.core.engine.QueryEngine``,
+which is property-tested to be ``indices_equivalent`` to a sequential replay
+through these functions. ``insert_affected_set`` is shared: the engine runs
+the same checkIns frontier against its k-th-distance mirror.
 """
 from __future__ import annotations
 
 import heapq
+from typing import Callable
 
 import numpy as np
 
@@ -24,11 +32,16 @@ def _kth_dist(index: KNNIndex, v: int) -> float:
     return float(row[-1])
 
 
-def _affected_set(
-    bn: BNGraph, index: KNNIndex, u: int, *, for_delete: bool
+def insert_affected_set(
+    bn: BNGraph, kth_of: Callable[[int], float], u: int
 ) -> dict[int, float]:
-    """Shared frontier search of Algorithms 4/5 (lines 1-8): the set S of
-    vertices whose V_k may change, with exact dist(u, v) for each."""
+    """checkIns frontier search (Algorithm 4 lines 1-8): the set S of vertices
+    whose V_k the insertion of u changes, with exact dist(u, v) for each.
+
+    ``kth_of(v)`` must return v's current k-th nearest distance (+inf when the
+    row is short); both the scalar oracle and the batched engine call through
+    here so their pruned regions coincide.
+    """
     dist: dict[int, float] = {u: 0.0}
     settled: set[int] = set()
     affected: dict[int, float] = {}
@@ -38,12 +51,35 @@ def _affected_set(
         if w in settled or d > dist.get(w, np.inf):
             continue
         settled.add(w)
-        if for_delete:
-            in_row = bool(np.any(index.ids[w] == u))
-            ok = in_row and d <= _kth_dist(index, w)  # checkDel
-        else:
-            ok = d < _kth_dist(index, w) or w == u  # checkIns
-        if not ok:
+        if not (d < kth_of(w) or w == u):  # checkIns
+            continue  # V_k(w) unaffected -> propagation stops here (Lemma 6.1)
+        affected[w] = d
+        for v, phi in bn.bns(w):
+            nd = d + phi
+            if nd < dist.get(v, np.inf):
+                dist[v] = nd
+                heapq.heappush(heap, (nd, v))
+    return affected
+
+
+def _affected_set(
+    bn: BNGraph, index: KNNIndex, u: int, *, for_delete: bool
+) -> dict[int, float]:
+    """Shared frontier search of Algorithms 4/5 (lines 1-8): the set S of
+    vertices whose V_k may change, with exact dist(u, v) for each."""
+    if not for_delete:
+        return insert_affected_set(bn, lambda v: _kth_dist(index, v), u)
+    dist: dict[int, float] = {u: 0.0}
+    settled: set[int] = set()
+    affected: dict[int, float] = {}
+    heap: list[tuple[float, int]] = [(0.0, u)]
+    while heap:
+        d, w = heapq.heappop(heap)
+        if w in settled or d > dist.get(w, np.inf):
+            continue
+        settled.add(w)
+        in_row = bool(np.any(index.ids[w] == u))
+        if not (in_row and d <= _kth_dist(index, w)):  # checkDel
             continue  # V_k(w) unaffected -> propagation stops here (Lemma 6.1)
         affected[w] = d
         for v, phi in bn.bns(w):

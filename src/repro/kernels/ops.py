@@ -126,6 +126,88 @@ def minplus_matmul(
     return out[:m, :n]
 
 
+@jax.jit
+def serve_gather(
+    vk_ids: jax.Array,   # (n+1, k) int32 live index table (dummy row last)
+    vk_d: jax.Array,     # (n+1, k) float32
+    queries: jax.Array,  # (B,) int32 query vertices
+    ks: jax.Array,       # (B,) int32 per-query result count, <= k
+) -> tuple[jax.Array, jax.Array]:
+    """Batched kNN query: one row gather + per-query k mask (Theorem 4.3).
+
+    Columns at positions >= ks[b] are masked to the pad sentinel (-1, +inf),
+    so one (B, k) launch serves heterogeneous-k traffic.
+    """
+    ids = vk_ids[queries]
+    d = vk_d[queries]
+    b, k = ids.shape
+    mask = jax.lax.broadcasted_iota(jnp.int32, (b, k), 1) < ks[:, None]
+    return jnp.where(mask, ids, -1), jnp.where(mask & (ids >= 0), d, jnp.inf)
+
+
+@jax.jit
+def rows_containing(vk_ids: jax.Array, obj_ids: jax.Array) -> jax.Array:
+    """(n,) bool: which index rows hold any of ``obj_ids`` (dummy row excluded).
+
+    The vectorized replacement for the host checkDel membership scan: the
+    rows a batched delete must repair are exactly the rows naming a deleted
+    object, and this finds them in one device pass over the table.
+    """
+    return (vk_ids[:-1, :, None] == obj_ids[None, None, :]).any(axis=(1, 2))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "use_pallas", "interpret"))
+def rows_merge(
+    vk_ids: jax.Array,    # (n+1, k) int32 live table
+    vk_d: jax.Array,      # (n+1, k) float32
+    rows: jax.Array,      # (R,) int32 target rows, n (dummy) = padding
+    cand_ids: jax.Array,  # (R, P) int32 new candidates per row, -1 = padding
+    cand_d: jax.Array,    # (R, P) float32
+    k: int,
+    *,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Batched row repair: merge per-row candidates into the live tables.
+
+    Gathers the ``rows`` out of the table, appends ``cand_*``, reruns the
+    dedup top-k merge (the construction kernel) and scatters the results
+    back — the device form of Algorithm 4 lines 9-10 over a whole batch.
+    """
+    own_ids = vk_ids[rows]
+    own_d = vk_d[rows]
+    cat_ids = jnp.concatenate([own_ids, cand_ids], axis=1)
+    cat_d = jnp.concatenate([own_d, cand_d.astype(vk_d.dtype)], axis=1)
+    cat_d = jnp.where(cat_ids < 0, jnp.inf, cat_d)
+    m_ids, m_d = topk_merge(cat_ids, cat_d, k, use_pallas=use_pallas, interpret=interpret)
+    return vk_ids.at[rows].set(m_ids), vk_d.at[rows].set(m_d)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "use_pallas", "interpret"))
+def rows_purge(
+    vk_ids: jax.Array,   # (n+1, k) int32 live table
+    vk_d: jax.Array,     # (n+1, k) float32
+    rows: jax.Array,     # (R,) int32 rows to purge, n (dummy) = padding
+    del_ids: jax.Array,  # (D,) int32 deleted object ids
+    k: int,
+    *,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Batched row purge: drop ``del_ids`` entries and recompact the rows.
+
+    Deleted entries become pad sentinels and the top-k merge re-sorts them to
+    the row tail (Algorithm 5's removal phase, vectorized over the batch).
+    """
+    own_ids = vk_ids[rows]
+    own_d = vk_d[rows]
+    hit = (own_ids[:, :, None] == del_ids[None, None, :]).any(axis=-1)
+    pid = jnp.where(hit, -1, own_ids)
+    pd = jnp.where(hit, jnp.inf, own_d)
+    m_ids, m_d = topk_merge(pid, pd, k, use_pallas=use_pallas, interpret=interpret)
+    return vk_ids.at[rows].set(m_ids), vk_d.at[rows].set(m_d)
+
+
 @functools.partial(
     jax.jit, static_argnames=("causal", "block_q", "block_k", "use_pallas", "interpret")
 )

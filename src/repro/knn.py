@@ -1,0 +1,111 @@
+"""Stable public facade for the kNN road-network system.
+
+One import surface for the whole pipeline — build, serve, maintain, persist:
+
+    from repro import knn
+
+    g = knn.road_network(64, 64, seed=0)
+    objects = knn.pick_objects(g.n, 0.02, seed=0)
+    engine = knn.build_engine(g, objects, k=20)        # device sweeps end to end
+
+    ids, dists = engine.query_batch(us)                # batched O(k) serving
+    engine.stage_insert(u); engine.stage_delete(v)
+    engine.flush_updates()                             # vectorized batch repair
+    engine.save("index.npz")
+
+    engine = knn.load_engine("index.npz", bn=knn.build_bngraph(g))
+
+Later scaling PRs (sharding, caching, async serving) build on this module;
+everything re-exported here is covered by the equivalence tests, so internal
+layouts may change under it without breaking callers.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.bngraph import BNGraph, build_bngraph
+from repro.core.construct_jax import build_knn_index_jax, build_knn_tables_jax
+from repro.core.engine import QueryEngine
+from repro.core.index import KNNIndex, indices_equivalent
+from repro.core.reference import knn_index_cons_plus
+from repro.core.updates import delete_object, insert_object
+from repro.graph.csr import Graph
+from repro.graph.generators import pick_objects, road_network
+
+__all__ = [
+    "BNGraph",
+    "Graph",
+    "KNNIndex",
+    "QueryEngine",
+    "build_bngraph",
+    "build_engine",
+    "build_index",
+    "build_knn_index_jax",
+    "build_knn_tables_jax",
+    "delete_object",
+    "indices_equivalent",
+    "insert_object",
+    "knn_index_cons_plus",
+    "load_engine",
+    "pick_objects",
+    "road_network",
+    "stage_random_updates",
+]
+
+
+def build_engine(
+    graph: Graph | BNGraph,
+    objects: np.ndarray,
+    k: int,
+    *,
+    use_pallas: bool = False,
+) -> QueryEngine:
+    """Road network (or prebuilt BN-Graph) -> serving engine, on device."""
+    bn = graph if isinstance(graph, BNGraph) else build_bngraph(graph)
+    return QueryEngine.build(bn, objects, k, use_pallas=use_pallas)
+
+
+def build_index(
+    graph: Graph | BNGraph,
+    objects: np.ndarray,
+    k: int,
+    *,
+    use_pallas: bool = False,
+) -> KNNIndex:
+    """Road network (or prebuilt BN-Graph) -> host KNNIndex view."""
+    bn = graph if isinstance(graph, BNGraph) else build_bngraph(graph)
+    return build_knn_index_jax(bn, objects, k, use_pallas=use_pallas)
+
+
+def load_engine(
+    path, *, bn: BNGraph | None = None, use_pallas: bool = False
+) -> QueryEngine:
+    """Load a ``QueryEngine.save`` / ``knn_build --out`` artifact."""
+    return QueryEngine.load(path, bn=bn, use_pallas=use_pallas)
+
+
+def stage_random_updates(engine: QueryEngine, mset: set, rng, count: int) -> int:
+    """Stage ``count`` random net object updates (the benchmark workload mix).
+
+    Draws uniform vertices: a present one is staged for deletion (skipped
+    while |M| <= k+1 so rows stay full through the churn), an absent one for
+    insertion. ``mset`` is the caller's membership mirror and is kept in
+    sync. Returns the number staged — possibly fewer than ``count`` when the
+    draw budget runs out (e.g. every vertex is an object but |M| <= k+1, so
+    nothing is stageable); the caller decides when to flush.
+    """
+    staged = 0
+    for _ in range(max(16, 16 * count)):
+        if staged >= count:
+            break
+        v = int(rng.integers(0, engine.n))
+        if v in mset and len(mset) > engine.k + 1:
+            engine.stage_delete(v)
+            mset.discard(v)
+        elif v not in mset:
+            engine.stage_insert(v)
+            mset.add(v)
+        else:
+            continue
+        staged += 1
+    return staged

@@ -2,9 +2,14 @@
 
   road network -> min-degree order + BN-Graph (host symbolic phase)
                -> level-synchronous device sweeps (bottom-up V_k^<, top-down V_k)
-               -> index artifact + stats
+               -> QueryEngine artifact + stats
 
-  PYTHONPATH=src python -m repro.launch.knn_build --grid 80 --k 20 --mu 0.05
+  PYTHONPATH=src python -m repro.launch.knn_build --grid 80 --k 20 --mu 0.05 \
+      --out index.npz
+
+The build goes through the ``repro.knn`` facade and the ``--out`` artifact is
+``QueryEngine.save`` format, so ``serve.py --arch knn-index --artifact`` (and
+``knn.load_engine``) round-trip through one file.
 """
 from __future__ import annotations
 
@@ -12,12 +17,8 @@ import argparse
 import json
 import time
 
-import numpy as np
-
-from repro.core.bngraph import build_bngraph
-from repro.core.construct_jax import build_knn_index_jax, prepare_sweep
-from repro.core.reference import knn_index_cons_plus
-from repro.graph.generators import pick_objects, road_network
+from repro import knn
+from repro.core.construct_jax import build_knn_tables_jax, prepare_sweep
 
 
 def main():
@@ -28,20 +29,26 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--use-pallas", action="store_true")
     ap.add_argument("--verify", action="store_true", help="check vs host reference")
-    ap.add_argument("--out", default=None)
+    ap.add_argument("--out", default=None, help="write a QueryEngine.save npz")
     args = ap.parse_args()
 
     t0 = time.perf_counter()
-    g = road_network(args.grid, args.grid, seed=args.seed)
-    objects = pick_objects(g.n, args.mu, seed=args.seed)
+    g = knn.road_network(args.grid, args.grid, seed=args.seed)
+    objects = knn.pick_objects(g.n, args.mu, seed=args.seed)
     t1 = time.perf_counter()
-    bn = build_bngraph(g)
+    bn = knn.build_bngraph(g)
     t2 = time.perf_counter()
-    idx = build_knn_index_jax(bn, objects, args.k, use_pallas=args.use_pallas)
-    t3 = time.perf_counter()
-
+    # prepare the sweep schedules once: they drive the build AND the stats
     up = prepare_sweep(bn, "up")
     down = prepare_sweep(bn, "down")
+    vk_ids, vk_d = build_knn_tables_jax(
+        bn, objects, args.k, use_pallas=args.use_pallas, plans=(up, down)
+    )
+    engine = knn.QueryEngine(
+        vk_ids, vk_d, args.k, objects, bn=bn, use_pallas=args.use_pallas
+    )
+    t3 = time.perf_counter()
+    idx = engine.to_index()
     stats = {
         "n": g.n,
         "m": g.m,
@@ -60,19 +67,19 @@ def main():
         "gen_s": round(t1 - t0, 3),
         "bngraph_s": round(t2 - t1, 3),
         "sweeps_s": round(t3 - t2, 3),
-        "index_bytes": idx.size_bytes(),
+        # the paper's n*k*(4+4)-byte count = what the device tables occupy
+        "index_bytes": idx.size_bytes(dist_bytes=4),
     }
     if args.verify:
-        ref = knn_index_cons_plus(bn, objects, args.k)
-        from repro.core.index import indices_equivalent
         from repro.core.verify import certificate
 
-        stats["verified"] = bool(indices_equivalent(ref, idx))
+        ref = knn.knn_index_cons_plus(bn, objects, args.k)
+        stats["verified"] = bool(knn.indices_equivalent(ref, idx))
         if g.n <= 20000:  # dense tropical certificate at verification scale
             stats["bngraph_certificate"] = certificate(bn, use_pallas=False)
     print(json.dumps(stats, indent=2))
     if args.out:
-        np.savez(args.out, ids=idx.ids, dists=idx.dists, k=args.k)
+        engine.save(args.out)
     return stats
 
 

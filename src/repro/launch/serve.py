@@ -1,15 +1,25 @@
-"""LM serving driver: batched prefill + autoregressive decode loop.
+"""Serving driver, dispatched by architecture family.
+
+LM archs — batched prefill + autoregressive decode loop:
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
       --prompt-len 32 --gen 16 --batch 4
 
-Runs the same prefill/decode steps the dry-run lowers for the
-prefill_32k/decode_32k cells (GQA grouped-einsum attention, sharded KV
-cache); on the CPU container use --smoke.
+kNN archs — device-resident ``QueryEngine`` loop under mixed traffic
+(batched queries + staged object updates, the paper's BUA arrival model):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch knn-index --smoke \
+      --batch 1024 --ops 50000 --update-frac 0.05
+
+The kNN loop builds (or loads, --artifact) the index, then serves rounds of
+``query_batch`` with updates staged into the engine's queue and flushed once
+per round, printing queries/s, updates/s and the engine's serving stats as
+JSON. On the CPU container use --smoke.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -17,24 +27,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import get_arch
-from repro.distributed.sharding import make_rules
-from repro.launch.mesh import make_host_mesh
-from repro.models import transformer as tr
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen2.5-3b")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--temperature", type=float, default=0.0)
-    args = ap.parse_args()
+def serve_lm(args) -> np.ndarray:
+    """Batched prefill + decode loop (GQA grouped-einsum attention, sharded
+    KV cache) — the same steps the dry-run lowers for prefill/decode cells."""
+    from repro.distributed.sharding import make_rules
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import transformer as tr
 
     arch = get_arch(args.arch)
-    if arch.family != "lm":
-        raise SystemExit("serve.py drives LM archs; use knn_build.py for the index")
     cfg = arch.make_smoke() if args.smoke else arch.make_config()
     mesh = make_host_mesh(data=len(jax.devices()))
     rules = make_rules(mesh)
@@ -75,6 +77,119 @@ def main():
           f"{t_decode * 1e3:.1f} ms ({tps:.1f} tok/s)")
     print("generated token ids (first sequence):", out[0].tolist())
     return out
+
+
+def serve_knn(args) -> dict:
+    """kNN serving loop: batched queries + staged updates on a QueryEngine."""
+    from repro import knn
+
+    arch = get_arch(args.arch)
+    cfg = arch.make_smoke() if args.smoke else arch.make_config()
+    grid = args.grid or int(np.ceil(np.sqrt(cfg.n_vertices)))
+    k = args.k or cfg.k
+
+    batch = args.batch or min(cfg.query_batch, 4096)
+
+    g = knn.road_network(grid, grid, seed=args.seed)
+    objects = knn.pick_objects(g.n, args.mu, seed=args.seed)
+    t0 = time.perf_counter()
+    bn = knn.build_bngraph(g)
+    t_bn = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    if args.artifact:
+        # The artifact must come from the same (grid, seed) network: the
+        # engine stores tables + objects, the BN-Graph supplies adjacency.
+        engine = knn.load_engine(args.artifact, bn=bn, use_pallas=args.use_pallas)
+        if engine.n != g.n or engine.k != k:
+            raise SystemExit(
+                f"artifact shape (n={engine.n}, k={engine.k}) does not match "
+                f"--grid/--k (n={g.n}, k={k})"
+            )
+    else:
+        engine = knn.QueryEngine.build(bn, objects, k, use_pallas=args.use_pallas)
+    t_build = time.perf_counter() - t0
+
+    rng = np.random.default_rng(args.seed + 1)
+    mset = set(engine.objects.tolist())
+    n_upd_round = int(round(batch * args.update_frac))
+    rounds = max(1, args.ops // (batch + n_upd_round))
+
+    # warmup: compile the gather once outside the timed loop
+    jax.block_until_ready(engine.query_batch(rng.integers(0, g.n, size=batch))[0])
+
+    t_query = t_update = 0.0
+    queries = updates = 0
+    for _ in range(rounds):
+        us = rng.integers(0, g.n, size=batch)
+        t0 = time.perf_counter()
+        ids, dists = engine.query_batch(us)
+        jax.block_until_ready(ids)
+        t_query += time.perf_counter() - t0
+        queries += batch
+
+        if n_upd_round:
+            t0 = time.perf_counter()
+            knn.stage_random_updates(engine, mset, rng, n_upd_round)
+            depth = engine.queue_depth
+            engine.flush_updates()
+            t_update += time.perf_counter() - t0
+            updates += depth
+
+    wall = t_query + t_update
+    stats = {
+        "arch": arch.arch_id,
+        "n": g.n,
+        "k": k,
+        "batch": batch,
+        "rounds": rounds,
+        "bngraph_s": round(t_bn, 3),
+        "build_s": round(t_build, 3),
+        "queries": queries,
+        "updates": updates,
+        "queries_per_s": round(queries / max(t_query, 1e-9), 1),
+        "updates_per_s": round(updates / max(t_update, 1e-9), 1) if updates else 0.0,
+        "ops_per_s": round((queries + updates) / max(wall, 1e-9), 1),
+        "us_per_query": round(t_query / max(queries, 1) * 1e6, 3),
+        "engine": engine.stats(),
+    }
+    print(json.dumps(stats, indent=2))
+    return stats
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=None,
+                    help="lm: sequence batch (default 4); knn: query batch "
+                         "(default min(config query_batch, 4096))")
+    # --query-batch is an alias for --batch kept for the knn family
+    ap.add_argument("--query-batch", type=int, default=None, dest="batch")
+    # lm options
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    # knn options
+    ap.add_argument("--grid", type=int, default=None, help="grid side; n = grid^2")
+    ap.add_argument("--k", type=int, default=None)
+    ap.add_argument("--mu", type=float, default=0.02)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ops", type=int, default=50_000)
+    ap.add_argument("--update-frac", type=float, default=0.05)
+    ap.add_argument("--artifact", default=None, help="serve a knn_build --out npz")
+    ap.add_argument("--use-pallas", action="store_true")
+    args = ap.parse_args()
+
+    arch = get_arch(args.arch)
+    if arch.family == "lm":
+        args.batch = 4 if args.batch is None else args.batch
+        return serve_lm(args)
+    if arch.family == "knn":
+        return serve_knn(args)
+    raise SystemExit(
+        f"serve.py drives 'lm' and 'knn' arch families; {args.arch!r} is "
+        f"{arch.family!r} (use the train/dryrun drivers for it)"
+    )
 
 
 if __name__ == "__main__":

@@ -1,0 +1,194 @@
+"""QueryEngine: batched device serving vs the scalar host reference.
+
+The engine's contract (ISSUE-2 acceptance): query_batch matches per-row
+KNNIndex.query exactly; staged batched updates are indices_equivalent to a
+sequential replay through the core/updates.py oracle AND to a fresh rebuild;
+save/load round-trips the artifact.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro import knn
+from repro.core.reference import knn_index_cons_plus
+from repro.core.updates import delete_object, insert_object
+from repro.graph.generators import pick_objects, random_connected_graph, road_network
+
+
+def _setup(grid=12, mu=0.15, k=6, seed=0):
+    g = road_network(grid, grid, seed=seed)
+    objects = pick_objects(g.n, mu, seed=seed)
+    bn = knn.build_bngraph(g)
+    idx = knn_index_cons_plus(bn, objects, k)
+    engine = knn.QueryEngine.from_index(idx, objects, bn=bn)
+    return g, objects, bn, idx, engine
+
+
+def test_query_batch_matches_scalar_query():
+    g, objects, bn, idx, engine = _setup()
+    us = np.arange(g.n, dtype=np.int32)
+    ids, d = engine.query_batch(us)
+    ids, d = np.asarray(ids), np.asarray(d)
+    for u in range(g.n):
+        got = [(int(i), float(x)) for i, x in zip(ids[u], d[u]) if i >= 0]
+        assert got == idx.query(u)
+
+
+def test_query_batch_per_query_k_masking():
+    g, objects, bn, idx, engine = _setup()
+    rng = np.random.default_rng(0)
+    us = rng.integers(0, g.n, size=64).astype(np.int32)
+    ks = rng.integers(1, engine.k + 1, size=64).astype(np.int32)
+    ids, d = engine.query_batch(us, ks)
+    full_ids, full_d = engine.query_batch(us)
+    ids, d = np.asarray(ids), np.asarray(d)
+    full_ids, full_d = np.asarray(full_ids), np.asarray(full_d)
+    for b in range(64):
+        assert (ids[b, ks[b]:] == -1).all()
+        assert np.isinf(d[b, ks[b]:]).all()
+        assert (ids[b, : ks[b]] == full_ids[b, : ks[b]]).all()
+
+
+def test_query_batch_k_too_large_raises():
+    _, _, _, _, engine = _setup()
+    with pytest.raises(ValueError):
+        engine.query_batch(np.array([0, 1]), engine.k + 1)
+    with pytest.raises(ValueError):
+        engine.query_batch(np.array([0, 1]), np.array([1, engine.k + 1]))
+
+
+def test_query_progressive_batch_prefixes():
+    g, _, _, _, engine = _setup()
+    us = np.arange(0, g.n, 5, dtype=np.int32)
+    full_ids, full_d = engine.query_batch(us)
+    full_ids, full_d = np.asarray(full_ids), np.asarray(full_d)
+    seen = 0
+    for i, (ids, d) in enumerate(engine.query_progressive_batch(us), start=1):
+        assert ids.shape == (len(us), i)
+        assert (np.asarray(ids) == full_ids[:, :i]).all()
+        assert np.array_equal(np.asarray(d), full_d[:, :i])
+        seen = i
+    assert seen == engine.k
+
+
+def test_staged_updates_match_oracle_and_rebuild():
+    g, objects, bn, idx, engine = _setup(mu=0.2)
+    k = engine.k
+    rng = np.random.default_rng(3)
+    mset = set(objects.tolist())
+    oracle = idx.copy()
+    for step in range(30):
+        u = int(rng.integers(0, g.n))
+        if u in mset and len(mset) > k + 1:
+            delete_object(bn, oracle, u)
+            engine.stage_delete(u)
+            mset.discard(u)
+        elif u not in mset:
+            insert_object(bn, oracle, u)
+            engine.stage_insert(u)
+            mset.add(u)
+        if step % 9 == 8:  # several flushes, several batch shapes
+            engine.flush_updates()
+    engine.flush_updates()
+    got = engine.to_index()
+    fresh = knn_index_cons_plus(bn, np.array(sorted(mset)), k)
+    assert knn.indices_equivalent(oracle, got)
+    assert knn.indices_equivalent(fresh, got)
+    assert set(engine.objects.tolist()) == mset
+
+
+def test_insert_then_delete_coalesces_to_noop():
+    g, objects, bn, idx, engine = _setup()
+    before = engine.to_index()
+    outside = int(np.setdiff1d(np.arange(g.n), objects)[0])
+    engine.stage_insert(outside)
+    engine.stage_delete(outside)
+    assert engine.queue_depth == 2
+    stats = engine.flush_updates()
+    assert stats["inserts"] == 0 and stats["deletes"] == 0
+    after = engine.to_index()
+    assert np.array_equal(before.ids, after.ids)
+    assert np.array_equal(before.dists, after.dists)
+
+
+def test_stage_validation():
+    g, objects, bn, idx, engine = _setup()
+    present = int(objects[0])
+    absent = int(np.setdiff1d(np.arange(g.n), objects)[0])
+    with pytest.raises(ValueError):
+        engine.stage_insert(present)
+    with pytest.raises(ValueError):
+        engine.stage_delete(absent)
+    with pytest.raises(ValueError):
+        engine.stage_insert(g.n + 5)
+    # staging state, not just flushed state, is what validation sees
+    engine.stage_delete(present)
+    with pytest.raises(ValueError):
+        engine.stage_delete(present)
+    engine.stage_insert(present)  # re-insert of the staged-deleted id is fine
+
+
+def test_updates_require_bngraph():
+    g, objects, bn, idx, _ = _setup()
+    engine = knn.QueryEngine.from_index(idx, objects)  # no bn
+    with pytest.raises(RuntimeError):
+        engine.stage_insert(int(np.setdiff1d(np.arange(g.n), objects)[0]))
+
+
+def test_save_load_roundtrip(tmp_path):
+    g, objects, bn, idx, engine = _setup()
+    path = os.path.join(tmp_path, "index.npz")
+    engine.save(path)
+    loaded = knn.load_engine(path, bn=bn)
+    assert loaded.n == engine.n and loaded.k == engine.k
+    assert np.array_equal(loaded.objects, engine.objects)
+    a, b = engine.to_index(), loaded.to_index()
+    assert np.array_equal(a.ids, b.ids)
+    assert np.array_equal(a.dists, b.dists)
+    # updates still work on the loaded engine
+    absent = int(np.setdiff1d(np.arange(g.n), objects)[0])
+    loaded.stage_insert(absent)
+    loaded.flush_updates()
+    oracle = idx.copy()
+    insert_object(bn, oracle, absent)
+    assert knn.indices_equivalent(oracle, loaded.to_index())
+
+
+def test_save_refuses_pending_queue(tmp_path):
+    g, objects, bn, idx, engine = _setup()
+    engine.stage_insert(int(np.setdiff1d(np.arange(g.n), objects)[0]))
+    with pytest.raises(RuntimeError):
+        engine.save(os.path.join(tmp_path, "index.npz"))
+
+
+def test_load_legacy_artifact_infers_objects(tmp_path):
+    """Pre-engine knn_build npz (ids/dists/k only): M = distance-0 entries."""
+    g, objects, bn, idx, engine = _setup()
+    path = os.path.join(tmp_path, "legacy.npz")
+    np.savez(path, ids=idx.ids, dists=idx.dists, k=idx.k)
+    loaded = knn.load_engine(path)
+    assert set(loaded.objects.tolist()) == set(objects.tolist())
+
+
+def test_engine_on_arbitrary_topology():
+    """Engine flushes on a non-road random graph (property-test topology)."""
+    n, k = 30, 3
+    g = random_connected_graph(n, extra_edges=25, seed=7)
+    objects = pick_objects(n, 0.5, seed=7)
+    bn = knn.build_bngraph(g)
+    idx = knn_index_cons_plus(bn, objects, k)
+    engine = knn.QueryEngine.from_index(idx, objects, bn=bn)
+    rng = np.random.default_rng(7)
+    mset = set(objects.tolist())
+    for _ in range(20):
+        u = int(rng.integers(0, n))
+        if u in mset and len(mset) > k + 1:
+            engine.stage_delete(u)
+            mset.discard(u)
+        elif u not in mset:
+            engine.stage_insert(u)
+            mset.add(u)
+    engine.flush_updates()
+    fresh = knn_index_cons_plus(bn, np.array(sorted(mset)), k)
+    assert knn.indices_equivalent(fresh, engine.to_index())

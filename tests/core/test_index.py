@@ -1,8 +1,9 @@
 """KNN-Index structure: O(k) query, progressive output, bounded size."""
 import numpy as np
+import pytest
 
 from repro.core.bngraph import build_bngraph
-from repro.core.index import index_from_lists
+from repro.core.index import index_from_lists, indices_equivalent
 from repro.core.reference import dijkstra_knn, knn_index_cons_plus
 from repro.graph.generators import pick_objects, road_network
 
@@ -28,4 +29,48 @@ def test_query_and_progressive():
 
 def test_size_bound_is_exactly_nk():
     idx = index_from_lists(100, 7, [[(0, 1.0)]] * 100)
-    assert idx.size_bytes() == 100 * 7 * 8  # Theorem 4.5: O(n*k)
+    # Theorem 4.5: O(n*k) entries. The paper counts 4-byte ids + 4-byte
+    # dists (the device tables); the host view stores float64 dists.
+    assert idx.size_bytes(dist_bytes=4) == 100 * 7 * 8
+    assert idx.size_bytes() == 100 * 7 * (4 + 8)
+
+
+def test_query_k_beyond_index_k_raises():
+    idx = index_from_lists(4, 3, [[(0, 1.0), (1, 2.0), (2, 3.0)]] * 4)
+    with pytest.raises(ValueError):
+        idx.query(0, 4)
+    with pytest.raises(ValueError):
+        list(idx.query_progressive(0, 4))
+    assert idx.query(0, 3) == [(0, 1.0), (1, 2.0), (2, 3.0)]
+
+
+def test_indices_equivalent_checks_ids_at_unique_distances():
+    rows = [[(0, 1.0), (1, 2.0), (2, 3.0)], [(3, 1.0), (4, 1.0), (5, 9.0)]]
+    a = index_from_lists(2, 3, rows)
+
+    # a unique interior distance with a different id is NOT equivalent
+    b = a.copy()
+    b.ids[0, 1] = 7
+    assert not indices_equivalent(a, b)
+
+    # ids may swap across a genuine within-row distance tie
+    c = a.copy()
+    c.ids[1, 0], c.ids[1, 1] = 4, 3
+    assert indices_equivalent(a, c)
+
+    # the last slot of a FULL row may hide a boundary tie with the cut-off
+    # (k+1)-th candidate, so its id is not checked
+    d = a.copy()
+    d.ids[0, 2] = 8
+    assert indices_equivalent(a, d)
+
+    # but in a short row (all objects present) the last id IS checked
+    short = [[(0, 1.0), (1, 2.0)]]
+    e = index_from_lists(1, 3, short)
+    f = index_from_lists(1, 3, [[(0, 1.0), (6, 2.0)]])
+    assert not indices_equivalent(e, f)
+
+    # distances differing at all is never equivalent
+    g = a.copy()
+    g.dists[0, 1] = 2.5
+    assert not indices_equivalent(a, g)

@@ -1,9 +1,17 @@
-"""Algorithms 4/5 (object insert/delete) vs rebuild-from-scratch."""
+"""Algorithms 4/5 (object insert/delete) vs rebuild-from-scratch.
+
+The property covers both update paths: the scalar host oracle
+(insert_object/delete_object, one op at a time) AND the QueryEngine's
+batched staged equivalents (stage_* + flush_updates at random points) must
+land indices_equivalent to a fresh knn_index_cons_plus rebuild on the final
+object set — and therefore to each other.
+"""
 import numpy as np
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.core.bngraph import build_bngraph
+from repro.core.engine import QueryEngine
 from repro.core.index import indices_equivalent
 from repro.core.reference import knn_index_cons_plus
 from repro.core.updates import delete_object, insert_object
@@ -28,19 +36,28 @@ def test_mixed_updates_match_rebuild(p):
     if len(objects) <= k + n_updates:  # keep |M| > k through deletions
         objects |= set(range(min(n, k + n_updates + 2)))
     bn = build_bngraph(g)
-    idx = knn_index_cons_plus(bn, np.array(sorted(objects)), k)
+    obj0 = np.array(sorted(objects))
+    idx = knn_index_cons_plus(bn, obj0, k)
+    engine = QueryEngine.from_index(idx, obj0, bn=bn)
     for _ in range(n_updates):
         u = int(rng.integers(0, n))
         if u in objects:
             if len(objects) <= k + 1:
                 continue
             delete_object(bn, idx, u)
+            engine.stage_delete(u)
             objects.discard(u)
         else:
             insert_object(bn, idx, u)
+            engine.stage_insert(u)
             objects.add(u)
+        if rng.random() < 0.3:  # flush at random interleaving points
+            engine.flush_updates()
+    engine.flush_updates()
     fresh = knn_index_cons_plus(bn, np.array(sorted(objects)), k)
     assert indices_equivalent(fresh, idx)
+    assert indices_equivalent(fresh, engine.to_index())
+    assert indices_equivalent(idx, engine.to_index())
 
 
 def test_insert_then_delete_roundtrip():

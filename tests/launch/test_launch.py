@@ -60,6 +60,54 @@ def test_collective_stats_parsing():
     assert s["total_bytes_per_device"] == 16 * 4 * 4 + 64 + 32
 
 
+def test_knn_build_then_serve_artifact(tmp_path):
+    """knn_build --out writes a QueryEngine artifact that serve.py (dispatched
+    to the knn family) loads and serves under mixed query+update traffic."""
+    import json
+    import os
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"{REPO}/src"
+    art = str(tmp_path / "index.npz")
+    build = subprocess.run(
+        [sys.executable, "-m", "repro.launch.knn_build",
+         "--grid", "10", "--k", "4", "--mu", "0.2", "--out", art],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert build.returncode == 0, build.stderr
+    stats = json.loads(build.stdout)
+    assert stats["index_bytes"] == stats["n"] * stats["k"] * 8
+    assert os.path.exists(art)
+
+    serve = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve",
+         "--arch", "knn-index", "--smoke", "--grid", "10", "--k", "4",
+         "--mu", "0.2", "--ops", "600", "--query-batch", "128",
+         "--update-frac", "0.05", "--artifact", art],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert serve.returncode == 0, serve.stderr
+    out = json.loads(serve.stdout)
+    assert out["arch"] == "knn-index"
+    assert out["queries"] > 0 and out["queries_per_s"] > 0
+    assert out["updates"] > 0
+    assert out["engine"]["staged_queue_depth"] == 0  # all flushed
+    assert out["engine"]["flushes"] > 0
+
+
+def test_serve_rejects_unknown_family():
+    import os
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"{REPO}/src"
+    p = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "gcn-cora"],
+        capture_output=True, text=True, env=env, timeout=300,
+    )
+    assert p.returncode != 0
+    assert "families" in p.stderr
+
+
 def test_train_driver_resume(tmp_path):
     env_cmd = [
         sys.executable, "-m", "repro.launch.train",
