@@ -14,8 +14,14 @@ traffic:
       staged into the engine queue and flushed once per tile (the BUA
       arrival model), everything device-resident via ``repro.knn``.
 
-Prints both throughputs and the speedup; the engine path is also what
-``repro.launch.serve --arch knn-index`` runs as a service.
+Then switches the update traffic to the *moving-fleet* workload (the Uber
+half of the story: the objects are vehicles, and the dominant update is the
+same vehicle moving one street over): a ``knn.FleetSim`` drives the fleet
+along shortest-path trips, every tick's (src, dst) moves are staged via
+``stage_move`` and flushed as one fused device batch between query tiles.
+
+Prints the throughputs and speedups; the engine paths are also what
+``repro.launch.serve --arch knn-index [--workload fleet]`` runs as a service.
 """
 import argparse
 import time
@@ -91,6 +97,27 @@ def run_engine_batched(engine, n_ops: int, update_frac: float,
     }
 
 
+def run_fleet(g, bn, k: int, fleet_size: int, ticks: int, batch: int,
+              seed: int = 0) -> dict:
+    """Moving-fleet path: per tick, stage the tick's moves + serve a tile."""
+    from repro.workloads import drive_fleet_ticks
+
+    sim = knn.FleetSim(g, fleet_size=fleet_size, seed=seed)
+    engine = knn.build_engine(bn, sim.positions, k)
+    rng = np.random.default_rng(seed)
+    jax.block_until_ready(engine.query_batch(rng.integers(0, g.n, size=batch))[0])
+    r = drive_fleet_ticks(
+        engine, (sim.tick() for _ in range(ticks)), batch=batch, rng=rng
+    )
+    return {
+        "ticks_per_s": ticks / r["wall_s"],
+        "moves_per_tick": sim.moves_total / ticks,
+        "query_p50_us": float(np.percentile(r["lat"], 50)) * 1e6,
+        "query_p99_us": float(np.percentile(r["lat"], 99)) * 1e6,
+        "engine": engine,
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--grid", type=int, default=40)
@@ -99,6 +126,8 @@ def main():
     ap.add_argument("--ops", type=int, default=3000)
     ap.add_argument("--batch", type=int, default=512)
     ap.add_argument("--update-frac", type=float, default=0.05)
+    ap.add_argument("--fleet-size", type=int, default=128)
+    ap.add_argument("--ticks", type=int, default=30)
     args = ap.parse_args()
 
     g = knn.road_network(args.grid, args.grid, seed=0)
@@ -125,6 +154,18 @@ def main():
           f"queries alone {r['queries_per_s']:,.0f}/s, "
           f"updates alone {r['updates_per_s']:,.0f}/s")
     print("engine stats:", engine.stats())
+
+    print(f"\nmoving fleet: {args.fleet_size} vehicles on shortest-path trips, "
+          f"{args.ticks} serving ticks (one fused stage_move flush per tick)")
+    f = run_fleet(g, bn, args.k, args.fleet_size, args.ticks, args.batch)
+    es = f["engine"].stats()
+    print(f"fleet: {f['ticks_per_s']:.1f} ticks/s at "
+          f"{f['moves_per_tick']:.0f} moves/tick; query p50 "
+          f"{f['query_p50_us']:.0f} us / p99 {f['query_p99_us']:.0f} us "
+          f"while flushing")
+    print(f"fleet engine: {es['moves_applied']} moves applied, "
+          f"{es['coalesced']} staged ops coalesced away, "
+          f"{es['rows_repaired']} rows repaired")
 
 
 if __name__ == "__main__":

@@ -5,8 +5,10 @@
 Builds a synthetic road network, constructs the KNN-Index with the
 bidirectional algorithm (host reference AND the TPU-style level-synchronous
 sweeps), answers queries progressively, maintains the index through object
-insertions/deletions, and serves batched traffic through the ``repro.knn``
-QueryEngine facade.
+insertions/deletions, serves batched traffic through the ``repro.knn``
+QueryEngine facade, and finishes with the moving-fleet workload: vehicles on
+shortest-path trips whose per-tick moves are staged with ``stage_move`` and
+flushed as one fused device batch between query batches.
 """
 import os
 import tempfile
@@ -78,6 +80,18 @@ def main():
     print(f"save/load round-trip equivalent: "
           f"{indices_equivalent(engine.to_index(), engine2.to_index())}")
     print(f"engine stats: {engine.stats()}")
+
+    print("\n== 7. moving fleet (build -> simulate -> query while moving) ==")
+    sim = knn.FleetSim(g, fleet_size=64, seed=0)      # vehicles on sp trips
+    fleet_engine = knn.build_engine(bn, sim.positions, k)
+    for _ in range(3):                                # one serving tick each
+        moves = sim.tick()                            # vehicles advance a street
+        for src, dst in moves:
+            fleet_engine.stage_move(src, dst)         # staged, not yet visible
+        fleet_engine.query_batch(us[:64])             # queries see flushed state
+        stats = fleet_engine.flush_updates()          # one fused move batch
+    print(f"tick: {len(moves)} moves staged -> flush {stats}")
+    print(f"fleet sim: {sim.stats()}")
 
 
 if __name__ == "__main__":

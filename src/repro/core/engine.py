@@ -12,21 +12,40 @@ jitted form:
   ``query_progressive_batch`` which yields the first-i prefix incrementally
   (Theorem 4.4) from a single gather.
 
-* staged updates — ``stage_insert`` / ``stage_delete`` accumulate object
-  updates in an arrival-order queue; ``flush_updates`` coalesces the queue to
-  its net object-set delta and applies it as *vectorized batches* against the
-  device tables. Deletes: one device scan finds every row naming a deleted
-  object (``ops.rows_containing``), one ``ops.rows_purge`` drops and
-  recompacts them, then Jacobi rounds of the construction merge
-  (``ops.sweep_merge`` over the affected rows' bridge neighborhoods) repair
-  the rows to a fixpoint — Algorithm 5's processDel, run breadth-first on
-  device instead of vertex-at-a-time on host. Inserts: the checkIns frontier
-  (``updates.insert_affected_set``, shared with the host oracle) finds the
-  affected rows and exact distances, and one ``ops.rows_merge`` (the
-  ``topk_merge`` kernel) repairs all of them at once — Algorithm 4's lines
-  9-10 over the whole batch. The scalar ``core/updates.py`` path is kept as
-  the reference oracle; the batched path is property-tested
-  ``indices_equivalent`` against it.
+* staged updates — ``stage_insert`` / ``stage_delete`` / ``stage_move``
+  accumulate object updates in an arrival-order queue; ``flush_updates``
+  coalesces the queue to its net object-set delta and applies it as ONE fused
+  device batch against the tables.
+
+  Coalescing semantics (per object, in queue order): an insert followed by a
+  delete of the same object cancels to nothing; a delete followed by an
+  insert of the same object is a no-op (the index is a pure function of the
+  final object set — Theorems 6.2/6.4); move chains collapse to their
+  endpoint (``a->b`` then ``b->c`` is ``a->c``; a chain returning to its
+  origin cancels). The per-flush stats dict reports the pure insert/delete
+  counts, the net move count, and ``coalesced`` — how many staged ops the
+  folding eliminated.
+
+  Application is a single fused pipeline, not a delete pass chased by an
+  insert pass: one device scan finds every row naming a deleted object
+  (``ops.rows_containing``); the checkIns frontier
+  (``updates.insert_affected_set``, shared with the host oracle) runs against
+  the pre-update k-th distances — insert-first semantics, the same order the
+  scalar ``move_object`` oracle uses; any insert-affected row the pruning
+  misses lost an entry to the deletions and is repaired as part of the purge
+  set (see ``flush_updates``); then one ``ops.rows_purge_merge`` over
+  the union of the hit rows and the frontier drops the deleted entries,
+  merges the insert candidates and recompacts every affected row in a single
+  gather/merge/scatter. Jacobi rounds of the construction merge
+  (``ops.sweep_merge`` over the purged rows' bridge neighborhoods) then
+  repair the deletion holes to a fixpoint — Algorithm 5's processDel, run
+  breadth-first on device — with the source- and destination-side work
+  sharing one changed-row frontier and one repair pass per round. For a
+  moving fleet (each object deleted here, re-inserted a street away) the
+  destination entries are already in the tables when repair starts, so the
+  holes close in about one round instead of pulling replacements from far
+  away. The scalar ``core/updates.py`` path is kept as the reference oracle;
+  the batched path is property-tested ``indices_equivalent`` against it.
 
   The repair rounds use the merge's XLA form (functional gather-then-scatter)
   rather than the in-place Pallas kernel: repaired rows read each other, so
@@ -122,6 +141,8 @@ class QueryEngine:
             "flushes": 0,
             "inserts_applied": 0,
             "deletes_applied": 0,
+            "moves_applied": 0,
+            "coalesced": 0,
             "rows_repaired": 0,
             "repair_rounds_last": 0,
         }
@@ -252,6 +273,28 @@ class QueryEngine:
         self._staged.append(("del", u))
         return len(self._staged)
 
+    def stage_move(self, u: int, v: int) -> int:
+        """Queue an object movement u -> v; returns the staged-queue depth.
+
+        The moving-objects primitive: the object at vertex u relocates to
+        vertex v (same object, new position). At flush time move chains
+        collapse to their endpoints and the source purge, destination
+        checkIns frontier and repair rounds all run as one fused device
+        batch — cheaper than staging the delete and the insert separately.
+        """
+        u = self._check_vertex(u)
+        v = self._check_vertex(v)
+        if u == v:
+            raise ValueError(f"move source and destination are both {u}")
+        if u not in self._pending:
+            raise ValueError(f"object {u} absent (or staged for delete)")
+        if v in self._pending:
+            raise ValueError(f"object {v} already present (or staged for insert)")
+        self._pending.discard(u)
+        self._pending.add(v)
+        self._staged.append(("mov", u, v))
+        return len(self._staged)
+
     @property
     def queue_depth(self) -> int:
         return len(self._staged)
@@ -307,28 +350,17 @@ class QueryEngine:
         out[: len(rows)] = rows
         return jnp.asarray(out)
 
-    def _apply_deletes(self, deletes: list[int]) -> tuple[int, int]:
-        """Vectorized Algorithm 5 over a delete batch; returns (rows, rounds)."""
-        # pow2-pad with the dummy id n (never an object id, so never a hit):
-        # bounds the distinct jit signatures across flushes of varying size.
-        padded = np.full(_pow2_pad(len(deletes)), self.n, np.int32)
-        padded[: len(deletes)] = deletes
-        del_arr = jnp.asarray(padded)
-        hit = np.asarray(ops.rows_containing(self._vk_ids, del_arr))
-        rows = np.flatnonzero(hit).astype(np.int32)
-        if rows.size == 0:
-            return 0, 0
-        self._vk_ids, self._vk_d = ops.rows_purge(
-            self._vk_ids, self._vk_d, self._pad_rows(rows), del_arr, self.k,
-            use_pallas=self.use_pallas,
-        )
+    def _repair(self, rows: np.ndarray) -> int:
+        """Jacobi repair rounds over the purged rows; returns the round count.
+
+        Round 1 re-merges every purged row; later rounds only the frontier:
+        a row can improve again only if a BNS neighbor's row changed last
+        round (BN adjacency is symmetric, so BNS(changed) IS that set).
+        The frontier collapses fast, so later rounds are tiny batches.
+        Within a round, rows are split by BNS-degree width bucket so the
+        candidate tensor is sized to the batch, not to the global tau'.
+        """
         self._nbr_tables()
-        # Round 1 re-merges every purged row; later rounds only the frontier:
-        # a row can improve again only if a BNS neighbor's row changed last
-        # round (BN adjacency is symmetric, so BNS(changed) IS that set).
-        # The frontier collapses fast, so later rounds are tiny batches.
-        # Within a round, rows are split by BNS-degree width bucket so the
-        # candidate tensor is sized to the batch, not to the global tau'.
         active = rows
         rounds = 0
         while active.size and rounds < _MAX_REPAIR_ROUNDS:
@@ -365,64 +397,132 @@ class QueryEngine:
                     f"delete repair did not reach a fixpoint in "
                     f"{_MAX_REPAIR_ROUNDS} rounds"
                 )
-        return int(rows.size), rounds
+        return rounds
 
-    def _apply_inserts(self, inserts: list[int]) -> int:
-        """Vectorized Algorithm 4 over an insert batch; returns repaired rows."""
-        kth = np.asarray(self._vk_d[: self.n, -1], np.float64)
-        per_row: dict[int, list[tuple[int, float]]] = {}
-        for u in inserts:
-            affected = insert_affected_set(self.bn, lambda v: float(kth[v]), u)
-            for v, d in affected.items():
-                per_row.setdefault(v, []).append((u, d))
-        if not per_row:
-            return 0
-        rows = np.fromiter(per_row.keys(), np.int32, len(per_row))
-        p = _pow2_pad(max(len(c) for c in per_row.values()), lo=4)
-        r_pad = _pow2_pad(len(rows), lo=64)  # must match _pad_rows
-        cand_ids = np.full((r_pad, p), -1, np.int32)
-        cand_d = np.full((r_pad, p), np.inf, np.float32)
-        for i, v in enumerate(rows):
-            for j, (u, d) in enumerate(per_row[int(v)]):
-                cand_ids[i, j] = u
-                cand_d[i, j] = d
-        self._vk_ids, self._vk_d = ops.rows_merge(
-            self._vk_ids, self._vk_d, self._pad_rows(rows),
-            jnp.asarray(cand_ids), jnp.asarray(cand_d), self.k,
-            use_pallas=self.use_pallas,
-        )
-        return int(rows.size)
+    def _coalesced_moves(self, deletes: set, inserts: set) -> list[tuple[int, int]]:
+        """Fold the staged queue's move chains to (origin, endpoint) pairs.
+
+        Only chains whose origin is a net delete AND whose endpoint is a net
+        insert count as moves — everything else has already coalesced away in
+        the object-set delta (a chain that returns home, a moved-then-deleted
+        object, ...). Purely a classification for the stats dict: the applied
+        work is always the net set delta.
+        """
+        chain: dict[int, int] = {}  # current endpoint -> chain origin
+        for op in self._staged:
+            if op[0] == "mov":
+                _, u, v = op
+                chain[v] = chain.pop(u, u)
+            else:
+                chain.pop(op[1], None)  # a delete at the endpoint kills the chain
+        # Two chains can share an origin (move away, re-insert at the origin,
+        # move away again), so pair each origin/endpoint at most once.
+        avail_o, avail_c = set(deletes), set(inserts)
+        moves = []
+        for c, o in sorted(chain.items()):
+            if o != c and o in avail_o and c in avail_c:
+                moves.append((o, c))
+                avail_o.discard(o)
+                avail_c.discard(c)
+        return moves
 
     def flush_updates(self) -> dict:
-        """Apply the staged queue as vectorized device batches.
+        """Apply the staged queue as one fused vectorized device batch.
 
         The queue is coalesced to its net object-set delta (the index is a
         pure function of the final object set — Theorems 6.2/6.4 make the
-        sequential replay land on the same tables), deletions are applied
-        first (purge + breadth-first repair), then insertions (checkIns
-        frontier + one batched merge). Returns per-flush stats.
+        sequential replay land on the same tables; see the module docstring
+        for the per-object folding rules). Application: find the delete-hit
+        rows, run the checkIns frontier for the insertions against the
+        pre-update k-th distances (insert-first semantics — see the inline
+        comment), purge + merge the union of both row sets
+        in one ``rows_purge_merge`` pass, then repair the deletion holes with
+        breadth-first Jacobi rounds that source- and destination-side work
+        share. Returns the per-flush stats dict (net insert/delete/move
+        counts plus ``coalesced``, the staged ops the folding eliminated).
         """
         staged = len(self._staged)
-        deletes = sorted(self._objects - self._pending)
-        inserts = sorted(self._pending - self._objects)
-        rows_del = rounds = rows_ins = 0
+        del_set = self._objects - self._pending
+        ins_set = self._pending - self._objects
+        deletes = sorted(del_set)
+        inserts = sorted(ins_set)
+        moves = self._coalesced_moves(del_set, ins_set)
+        n_pure_ins = len(inserts) - len(moves)
+        n_pure_del = len(deletes) - len(moves)
+
+        # -- delete side: which rows name a deleted object (device scan) --
+        purged_rows = np.empty(0, np.int32)
+        del_arr = None
         if deletes:
-            rows_del, rounds = self._apply_deletes(deletes)
+            # pow2-pad with the dummy id n (never an object id, so never a
+            # hit): bounds the distinct jit signatures across flush sizes.
+            padded = np.full(_pow2_pad(len(deletes)), self.n, np.int32)
+            padded[: len(deletes)] = deletes
+            del_arr = jnp.asarray(padded)
+            hit = np.asarray(ops.rows_containing(self._vk_ids, del_arr))
+            purged_rows = np.flatnonzero(hit).astype(np.int32)
+
+        # -- insert side: checkIns frontier, insert-first semantics --
+        # The frontier prunes against the CURRENT (pre-update) k-th bounds,
+        # exactly Algorithm 4 run before Algorithm 5 (the same order the
+        # scalar ``move_object`` oracle uses). A row the pruning misses that
+        # still needs a new object in the *final* tables must have had its
+        # k-th distance raised by the deletions — i.e. it lost an entry, so
+        # it is in the purge set and the repair rounds rebuild it from its
+        # bridge neighbors anyway. Keeping the pre-update bounds keeps the
+        # host frontier search as small as the oracle's, instead of the
+        # unpruned sweep a post-purge (unbounded) k-th would trigger.
+        per_row: dict[int, list[tuple[int, float]]] = {}
         if inserts:
-            rows_ins = self._apply_inserts(inserts)
+            kth = np.asarray(self._vk_d[: self.n, -1], np.float64)
+            for u in inserts:
+                affected = insert_affected_set(self.bn, lambda v: float(kth[v]), u)
+                for v, d in affected.items():
+                    per_row.setdefault(v, []).append((u, d))
+
+        # -- one fused purge + merge over the union of both row sets --
+        rounds = 0
+        if purged_rows.size or per_row:
+            frows = np.fromiter(per_row.keys(), np.int32, len(per_row))
+            rows = np.union1d(purged_rows, frows).astype(np.int32)
+            p = _pow2_pad(max((len(c) for c in per_row.values()), default=1), lo=4)
+            r_pad = _pow2_pad(len(rows), lo=64)  # must match _pad_rows
+            cand_ids = np.full((r_pad, p), -1, np.int32)
+            cand_d = np.full((r_pad, p), np.inf, np.float32)
+            row_slot = {int(v): i for i, v in enumerate(rows)}
+            for v, cands in per_row.items():
+                i = row_slot[int(v)]
+                for j, (u, d) in enumerate(cands):
+                    cand_ids[i, j] = u
+                    cand_d[i, j] = d
+            if del_arr is None:
+                del_arr = jnp.asarray(np.full(1, self.n, np.int32))
+            self._vk_ids, self._vk_d = ops.rows_purge_merge(
+                self._vk_ids, self._vk_d, self._pad_rows(rows), del_arr,
+                jnp.asarray(cand_ids), jnp.asarray(cand_d), self.k,
+                use_pallas=self.use_pallas,
+            )
+            # -- breadth-first repair of the deletion holes (shared frontier) --
+            if purged_rows.size:
+                rounds = self._repair(purged_rows)
+
         self._objects = set(self._pending)
         self._staged.clear()
         self._stats["flushes"] += 1
-        self._stats["inserts_applied"] += len(inserts)
-        self._stats["deletes_applied"] += len(deletes)
-        self._stats["rows_repaired"] += rows_del + rows_ins
+        self._stats["inserts_applied"] += n_pure_ins
+        self._stats["deletes_applied"] += n_pure_del
+        self._stats["moves_applied"] += len(moves)
+        self._stats["coalesced"] += staged - (n_pure_ins + n_pure_del + len(moves))
+        self._stats["rows_repaired"] += int(purged_rows.size) + len(per_row)
         self._stats["repair_rounds_last"] = rounds
         return {
             "staged": staged,
-            "inserts": len(inserts),
-            "deletes": len(deletes),
-            "rows_purged": rows_del,
-            "rows_merged": rows_ins,
+            "inserts": n_pure_ins,
+            "deletes": n_pure_del,
+            "moves": len(moves),
+            "coalesced": staged - (n_pure_ins + n_pure_del + len(moves)),
+            "rows_purged": int(purged_rows.size),
+            "rows_merged": len(per_row),
             "repair_rounds": rounds,
         }
 
@@ -431,7 +531,15 @@ class QueryEngine:
     # ------------------------------------------------------------------
 
     def save(self, path) -> None:
-        """Write the index artifact: one npz shared by build and serving."""
+        """Write the index artifact: one npz shared by build and serving.
+
+        Saving with a non-empty staged queue raises ``RuntimeError`` (rather
+        than silently flushing): staged updates are invisible to queries, so
+        an implicit flush would make the saved artifact disagree with what
+        the engine was serving at save time. Call ``flush_updates()`` first;
+        the tables are then exactly the flushed state and round-trip
+        bit-identically through ``load``.
+        """
         if self._staged:
             raise RuntimeError("flush_updates() before save(): staged updates pending")
         meta = {"format": _FORMAT, "version": _FORMAT_VERSION, "n": self.n, "k": self.k}

@@ -1,4 +1,5 @@
-"""Candidate-object update maintenance — Algorithms 4 (insert) and 5 (delete).
+"""Candidate-object update maintenance — Algorithms 4 (insert) and 5 (delete),
+plus their composition ``move_object`` (the moving-objects workload primitive).
 
 Both propagate from the updated object u over BNS edges, pruned by the current
 k-th distance of each visited vertex (checkIns / checkDel). We use a distance-
@@ -104,6 +105,23 @@ def insert_object(bn: BNGraph, index: KNNIndex, u: int) -> int:
         row_ids[pos] = u
         row_d[pos] = d
     return len(affected)
+
+
+def move_object(bn: BNGraph, index: KNNIndex, u: int, v: int) -> int:
+    """Object movement: the object at vertex u relocates to vertex v.
+
+    The scalar host oracle for ``QueryEngine.stage_move``: Algorithm 4 at the
+    destination followed by Algorithm 5 at the source. Insertion runs first
+    so rows never go transiently deficient — the final index is a pure
+    function of the object set (Theorems 6.2/6.4), so the order only affects
+    intermediate states. The caller guarantees u is an object and v is not
+    (same contract as insert_object/delete_object). Returns the total |S|
+    over both halves.
+    """
+    if u == v:
+        raise ValueError(f"move source and destination are both {u}")
+    delta = insert_object(bn, index, v)
+    return delta + delete_object(bn, index, u)
 
 
 def delete_object(bn: BNGraph, index: KNNIndex, u: int) -> int:

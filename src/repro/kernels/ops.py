@@ -184,6 +184,42 @@ def rows_merge(
 
 
 @functools.partial(jax.jit, static_argnames=("k", "use_pallas", "interpret"))
+def rows_purge_merge(
+    vk_ids: jax.Array,    # (n+1, k) int32 live table
+    vk_d: jax.Array,      # (n+1, k) float32
+    rows: jax.Array,      # (R,) int32 target rows, n (dummy) = padding
+    del_ids: jax.Array,   # (D,) int32 deleted object ids, n = padding
+    cand_ids: jax.Array,  # (R, P) int32 new candidates per row, -1 = padding
+    cand_d: jax.Array,    # (R, P) float32
+    k: int,
+    *,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused batched move repair: purge + candidate merge in ONE pass.
+
+    The device form of a coalesced *move* flush (Algorithms 4+5 combined):
+    each row is gathered once, its entries naming a deleted object become pad
+    sentinels, the surviving entries and the new insert candidates run through
+    one dedup top-k merge, and the row scatters back — instead of a purge
+    gather/merge/scatter followed by a separate insert gather/merge/scatter
+    over largely the same rows. ``rows`` is the union of the delete-hit rows
+    and the insert (checkIns) frontier; rows outside one of the two sets just
+    carry all-pad columns for the other.
+    """
+    own_ids = vk_ids[rows]
+    own_d = vk_d[rows]
+    hit = (own_ids[:, :, None] == del_ids[None, None, :]).any(axis=-1)
+    pid = jnp.where(hit, -1, own_ids)
+    pd = jnp.where(hit, jnp.inf, own_d)
+    cat_ids = jnp.concatenate([pid, cand_ids], axis=1)
+    cat_d = jnp.concatenate([pd, cand_d.astype(vk_d.dtype)], axis=1)
+    cat_d = jnp.where(cat_ids < 0, jnp.inf, cat_d)
+    m_ids, m_d = topk_merge(cat_ids, cat_d, k, use_pallas=use_pallas, interpret=interpret)
+    return vk_ids.at[rows].set(m_ids), vk_d.at[rows].set(m_d)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "use_pallas", "interpret"))
 def rows_purge(
     vk_ids: jax.Array,   # (n+1, k) int32 live table
     vk_d: jax.Array,     # (n+1, k) float32

@@ -10,10 +10,15 @@ One import surface for the whole pipeline — build, serve, maintain, persist:
 
     ids, dists = engine.query_batch(us)                # batched O(k) serving
     engine.stage_insert(u); engine.stage_delete(v)
-    engine.flush_updates()                             # vectorized batch repair
+    engine.stage_move(a, b)                            # moving-objects traffic
+    engine.flush_updates()                             # one fused batch repair
     engine.save("index.npz")
 
     engine = knn.load_engine("index.npz", bn=knn.build_bngraph(g))
+
+Moving-fleet serving (see ``repro.workloads``): ``FleetSim`` drives vehicles
+along shortest-path trips and each ``sim.tick()`` yields the (src, dst) moves
+to stage; ``flush_updates`` applies them as one fused device batch.
 
 Later scaling PRs (sharding, caching, async serving) build on this module;
 everything re-exported here is covered by the equivalence tests, so internal
@@ -28,12 +33,14 @@ from repro.core.construct_jax import build_knn_index_jax, build_knn_tables_jax
 from repro.core.engine import QueryEngine
 from repro.core.index import KNNIndex, indices_equivalent
 from repro.core.reference import knn_index_cons_plus
-from repro.core.updates import delete_object, insert_object
+from repro.core.updates import delete_object, insert_object, move_object
 from repro.graph.csr import Graph
 from repro.graph.generators import pick_objects, road_network
+from repro.workloads.fleet import FleetSim
 
 __all__ = [
     "BNGraph",
+    "FleetSim",
     "Graph",
     "KNNIndex",
     "QueryEngine",
@@ -47,6 +54,7 @@ __all__ = [
     "insert_object",
     "knn_index_cons_plus",
     "load_engine",
+    "move_object",
     "pick_objects",
     "road_network",
     "stage_random_updates",

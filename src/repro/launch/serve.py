@@ -15,6 +15,15 @@ The kNN loop builds (or loads, --artifact) the index, then serves rounds of
 ``query_batch`` with updates staged into the engine's queue and flushed once
 per round, printing queries/s, updates/s and the engine's serving stats as
 JSON. On the CPU container use --smoke.
+
+``--workload fleet`` swaps the random insert/delete churn for the
+moving-objects workload: a ``FleetSim`` drives vehicles along shortest-path
+trips, each serving tick stages the tick's (src, dst) moves via
+``stage_move`` and flushes them as one fused device batch while query
+batches interleave. Reports sustained ticks/s and query p50/p99:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch knn-index --smoke \
+      --workload fleet --fleet-size 96 --ticks 50 --batch 256
 """
 from __future__ import annotations
 
@@ -79,6 +88,47 @@ def serve_lm(args) -> np.ndarray:
     return out
 
 
+def serve_knn_fleet(args, g, bn, k: int, batch: int, t_bn: float) -> dict:
+    """Moving-fleet serving loop: fused ``stage_move`` flushes per tick."""
+    from repro import knn
+    from repro.workloads import drive_fleet_ticks
+
+    sim = knn.FleetSim(g, fleet_size=args.fleet_size, seed=args.seed)
+    t0 = time.perf_counter()
+    engine = knn.QueryEngine.build(bn, sim.positions, k, use_pallas=args.use_pallas)
+    t_build = time.perf_counter() - t0
+
+    rng = np.random.default_rng(args.seed + 1)
+    # warmup: compile the gather once outside the timed loop
+    jax.block_until_ready(engine.query_batch(rng.integers(0, g.n, size=batch))[0])
+
+    r = drive_fleet_ticks(
+        engine, (sim.tick() for _ in range(args.ticks)), batch=batch, rng=rng
+    )
+    wall, lat = r["wall_s"], r["lat"]
+
+    stats = {
+        "arch": get_arch(args.arch).arch_id,
+        "workload": "fleet",
+        "n": g.n,
+        "k": k,
+        "batch": batch,
+        "fleet_size": sim.fleet_size,
+        "ticks": args.ticks,
+        "bngraph_s": round(t_bn, 3),
+        "build_s": round(t_build, 3),
+        "ticks_per_s": round(args.ticks / max(wall, 1e-9), 2),
+        "moves_per_tick": round(sim.moves_total / max(args.ticks, 1), 1),
+        "queries_per_s": round(args.ticks * batch / max(sum(lat), 1e-9), 1),
+        "query_p50_us": round(float(np.percentile(lat, 50)) * 1e6, 1),
+        "query_p99_us": round(float(np.percentile(lat, 99)) * 1e6, 1),
+        "sim": sim.stats(),
+        "engine": engine.stats(),
+    }
+    print(json.dumps(stats, indent=2))
+    return stats
+
+
 def serve_knn(args) -> dict:
     """kNN serving loop: batched queries + staged updates on a QueryEngine."""
     from repro import knn
@@ -95,6 +145,12 @@ def serve_knn(args) -> dict:
     t0 = time.perf_counter()
     bn = knn.build_bngraph(g)
     t_bn = time.perf_counter() - t0
+    if args.workload == "fleet":
+        if args.artifact:
+            # the fleet engine's object set must equal the sim's vehicle
+            # positions, which a saved artifact cannot know about
+            raise SystemExit("--artifact cannot be combined with --workload fleet")
+        return serve_knn_fleet(args, g, bn, k, min(batch, 4096), t_bn)
     t0 = time.perf_counter()
     if args.artifact:
         # The artifact must come from the same (grid, seed) network: the
@@ -176,6 +232,12 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ops", type=int, default=50_000)
     ap.add_argument("--update-frac", type=float, default=0.05)
+    ap.add_argument("--workload", choices=("random", "fleet"), default="random",
+                    help="knn update traffic: random insert/delete churn or the "
+                         "moving-fleet stage_move workload")
+    ap.add_argument("--fleet-size", type=int, default=96)
+    ap.add_argument("--ticks", type=int, default=50,
+                    help="fleet workload: serving ticks (one flush per tick)")
     ap.add_argument("--artifact", default=None, help="serve a knn_build --out npz")
     ap.add_argument("--use-pallas", action="store_true")
     args = ap.parse_args()

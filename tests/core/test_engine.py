@@ -12,7 +12,7 @@ import pytest
 
 from repro import knn
 from repro.core.reference import knn_index_cons_plus
-from repro.core.updates import delete_object, insert_object
+from repro.core.updates import delete_object, insert_object, move_object
 from repro.graph.generators import pick_objects, random_connected_graph, road_network
 
 
@@ -107,9 +107,95 @@ def test_insert_then_delete_coalesces_to_noop():
     assert engine.queue_depth == 2
     stats = engine.flush_updates()
     assert stats["inserts"] == 0 and stats["deletes"] == 0
+    assert stats["moves"] == 0 and stats["coalesced"] == 2
     after = engine.to_index()
     assert np.array_equal(before.ids, after.ids)
     assert np.array_equal(before.dists, after.dists)
+
+
+def test_delete_then_insert_coalesces_to_noop():
+    """del u then ins u: the final object set is unchanged, so the flush is a
+    no-op (the index is a pure function of the object set)."""
+    g, objects, bn, idx, engine = _setup()
+    before = engine.to_index()
+    present = int(objects[0])
+    engine.stage_delete(present)
+    engine.stage_insert(present)
+    stats = engine.flush_updates()
+    assert stats["inserts"] == 0 and stats["deletes"] == 0
+    assert stats["moves"] == 0 and stats["coalesced"] == 2
+    after = engine.to_index()
+    assert np.array_equal(before.ids, after.ids)
+    assert np.array_equal(before.dists, after.dists)
+
+
+def test_move_chain_collapses_to_endpoint():
+    """a->b then b->c coalesces to one net move a->c; the tables match a
+    rebuild on the final object set and the stats report the folding."""
+    g, objects, bn, idx, engine = _setup(mu=0.2)
+    mset = set(objects.tolist())
+    a = int(objects[0])
+    outside = np.setdiff1d(np.arange(g.n), objects)
+    b, c = int(outside[0]), int(outside[1])
+    engine.stage_move(a, b)
+    engine.stage_move(b, c)
+    assert engine.queue_depth == 2
+    stats = engine.flush_updates()
+    assert stats["moves"] == 1 and stats["coalesced"] == 1
+    assert stats["inserts"] == 0 and stats["deletes"] == 0
+    mset.discard(a)
+    mset.add(c)
+    assert set(engine.objects.tolist()) == mset
+    fresh = knn_index_cons_plus(bn, np.array(sorted(mset)), engine.k)
+    assert knn.indices_equivalent(fresh, engine.to_index())
+
+
+def test_move_chain_returning_home_is_noop():
+    g, objects, bn, idx, engine = _setup()
+    before = engine.to_index()
+    a = int(objects[0])
+    b = int(np.setdiff1d(np.arange(g.n), objects)[0])
+    engine.stage_move(a, b)
+    engine.stage_move(b, a)
+    stats = engine.flush_updates()
+    assert stats["inserts"] == stats["deletes"] == stats["moves"] == 0
+    assert stats["coalesced"] == 2
+    after = engine.to_index()
+    assert np.array_equal(before.ids, after.ids)
+    assert np.array_equal(before.dists, after.dists)
+
+
+def test_stage_move_matches_oracle():
+    g, objects, bn, idx, engine = _setup(mu=0.2)
+    oracle = idx.copy()
+    src = int(objects[3])
+    dst = int(np.setdiff1d(np.arange(g.n), objects)[0])
+    engine.stage_move(src, dst)
+    stats = engine.flush_updates()
+    assert stats["moves"] == 1 and stats["coalesced"] == 0
+    move_object(bn, oracle, src, dst)
+    assert knn.indices_equivalent(oracle, engine.to_index())
+    assert engine.stats()["moves_applied"] == 1
+
+
+def test_stage_move_validation():
+    g, objects, bn, idx, engine = _setup()
+    present, present2 = int(objects[0]), int(objects[1])
+    absent = int(np.setdiff1d(np.arange(g.n), objects)[0])
+    with pytest.raises(ValueError):
+        engine.stage_move(absent, present)   # source must be present
+    with pytest.raises(ValueError):
+        engine.stage_move(present, present2)  # destination must be absent
+    with pytest.raises(ValueError):
+        engine.stage_move(present, present)   # no self-move
+    with pytest.raises(ValueError):
+        engine.stage_move(present, g.n + 3)   # destination in range
+    # staging state is what validation sees: after a move the source is
+    # stageable as a destination and vice versa
+    engine.stage_move(present, absent)
+    engine.stage_move(present2, present)
+    assert engine.queue_depth == 2
+    engine.flush_updates()
 
 
 def test_stage_validation():
@@ -156,10 +242,87 @@ def test_save_load_roundtrip(tmp_path):
 
 
 def test_save_refuses_pending_queue(tmp_path):
+    """Documented policy: save with staged updates raises (no silent flush)."""
     g, objects, bn, idx, engine = _setup()
     engine.stage_insert(int(np.setdiff1d(np.arange(g.n), objects)[0]))
     with pytest.raises(RuntimeError):
         engine.save(os.path.join(tmp_path, "index.npz"))
+
+
+def test_save_refuses_pending_move_queue(tmp_path):
+    g, objects, bn, idx, engine = _setup()
+    engine.stage_move(int(objects[0]), int(np.setdiff1d(np.arange(g.n), objects)[0]))
+    with pytest.raises(RuntimeError):
+        engine.save(os.path.join(tmp_path, "index.npz"))
+
+
+def test_save_load_roundtrip_immediately_after_flush(tmp_path):
+    """Flush-then-save round-trips bit-identically, and the loaded engine
+    keeps serving and updating from exactly the flushed state."""
+    g, objects, bn, idx, engine = _setup(mu=0.2)
+    src = int(objects[2])
+    dst = int(np.setdiff1d(np.arange(g.n), objects)[0])
+    engine.stage_move(src, dst)
+    with pytest.raises(RuntimeError):
+        engine.save(os.path.join(tmp_path, "index.npz"))  # still pending
+    engine.flush_updates()
+    path = os.path.join(tmp_path, "index.npz")
+    engine.save(path)
+    loaded = knn.load_engine(path, bn=bn)
+    a, b = engine.to_index(), loaded.to_index()
+    assert np.array_equal(a.ids, b.ids)
+    assert np.array_equal(a.dists, b.dists)
+    assert np.array_equal(loaded.objects, engine.objects)
+    mset = set(loaded.objects.tolist())
+    fresh = knn_index_cons_plus(bn, np.array(sorted(mset)), engine.k)
+    assert knn.indices_equivalent(fresh, b)
+
+
+def test_save_load_empty_object_set(tmp_path):
+    """No objects: all-pad tables survive the round trip and the loaded
+    engine can bootstrap the object set through staged inserts."""
+    from repro.core.index import index_from_lists
+
+    g = road_network(8, 8, seed=1)
+    bn = knn.build_bngraph(g)
+    k = 3
+    empty = index_from_lists(g.n, k, [[] for _ in range(g.n)])
+    engine = knn.QueryEngine.from_index(empty, np.array([], np.int32), bn=bn)
+    ids, d = engine.query_batch(np.arange(g.n, dtype=np.int32))
+    assert (np.asarray(ids) == -1).all() and np.isinf(np.asarray(d)).all()
+    path = os.path.join(tmp_path, "empty.npz")
+    engine.save(path)
+    loaded = knn.load_engine(path, bn=bn)
+    assert loaded.objects.size == 0
+    assert np.array_equal(loaded.to_index().ids, empty.ids)
+    # inserts into an empty index: kth is +inf everywhere, so the checkIns
+    # frontier is the whole graph and every row gains the new object
+    loaded.stage_insert(5)
+    stats = loaded.flush_updates()
+    assert stats["inserts"] == 1 and stats["rows_merged"] == g.n
+    fresh = knn_index_cons_plus(bn, np.array([5]), k)
+    assert knn.indices_equivalent(fresh, loaded.to_index())
+
+
+def test_save_load_k1(tmp_path):
+    """k=1: the smallest legal index round-trips and keeps updating."""
+    g = road_network(8, 8, seed=2)
+    objects = pick_objects(g.n, 0.15, seed=2)
+    bn = knn.build_bngraph(g)
+    engine = knn.build_engine(bn, objects, 1)
+    path = os.path.join(tmp_path, "k1.npz")
+    engine.save(path)
+    loaded = knn.load_engine(path, bn=bn)
+    assert loaded.k == 1
+    a, b = engine.to_index(), loaded.to_index()
+    assert np.array_equal(a.ids, b.ids)
+    src = int(objects[0])
+    dst = int(np.setdiff1d(np.arange(g.n), objects)[0])
+    loaded.stage_move(src, dst)
+    loaded.flush_updates()
+    mset = set(objects.tolist()) - {src} | {dst}
+    fresh = knn_index_cons_plus(bn, np.array(sorted(mset)), 1)
+    assert knn.indices_equivalent(fresh, loaded.to_index())
 
 
 def test_load_legacy_artifact_infers_objects(tmp_path):

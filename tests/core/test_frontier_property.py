@@ -1,0 +1,142 @@
+"""Update frontiers vs a brute-force multi-source Dijkstra oracle.
+
+``insert_affected_set`` (the checkIns frontier, shared by the host oracle and
+the engine's batched flush) and the delete frontier (the oracle's checkDel
+search and the engine's ``ops.rows_containing`` device scan) were previously
+tested only transitively, through whole-index equivalence after updates.
+These properties pin them down directly: on random road networks with
+*continuous* edge weights (ties have probability zero, so every set below is
+exact, not a superset), the brute-force oracle recomputes all object->vertex
+distances with one Dijkstra per object per update and derives the ground
+truth:
+
+* insert u:  affected == {w : dist(w, u) < kth(w)} | {u}, with exact
+  distances, and it covers every row the brute-force index changes;
+* delete u:  the checkDel frontier == the rows naming u == the rows the
+  brute-force index changes == the engine's ``rows_containing`` scan.
+"""
+import heapq
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.bngraph import build_bngraph
+from repro.core.index import PAD_ID, KNNIndex, index_from_lists
+from repro.core.updates import _affected_set, insert_affected_set
+from repro.graph.csr import Graph
+from repro.graph.generators import pick_objects, road_network
+from repro.kernels import ops
+
+
+def _sssp(g: Graph, src: int) -> np.ndarray:
+    """Plain single-source Dijkstra over the road network; (n,) distances."""
+    dist = np.full(g.n, np.inf)
+    dist[src] = 0.0
+    heap = [(0.0, src)]
+    while heap:
+        d, v = heapq.heappop(heap)
+        if d > dist[v]:
+            continue
+        nbrs, ws = g.neighbors(v)
+        for nb, w in zip(nbrs.tolist(), ws.tolist()):
+            nd = d + w
+            if nd < dist[nb]:
+                dist[nb] = nd
+                heapq.heappush(heap, (nd, nb))
+    return dist
+
+
+def _brute_knn(g: Graph, objects: np.ndarray, k: int) -> KNNIndex:
+    """Ground-truth index: one Dijkstra per object, top-k per vertex."""
+    dmat = np.stack([_sssp(g, int(o)) for o in objects], axis=1)  # (n, |M|)
+    rows = []
+    for v in range(g.n):
+        order = np.lexsort((objects, dmat[v]))[:k]
+        rows.append([(int(objects[j]), float(dmat[v, j])) for j in order
+                     if np.isfinite(dmat[v, j])])
+    return index_from_lists(g.n, k, rows)
+
+
+def _kth(index: KNNIndex, v: int) -> float:
+    return np.inf if index.ids[v, -1] == PAD_ID else float(index.dists[v, -1])
+
+
+def _changed_rows(a: KNNIndex, b: KNNIndex) -> set:
+    return {
+        v
+        for v in range(a.n)
+        if not (
+            np.array_equal(a.ids[v], b.ids[v])
+            and np.allclose(
+                np.where(np.isinf(a.dists[v]), -1, a.dists[v]),
+                np.where(np.isinf(b.dists[v]), -1, b.dists[v]),
+            )
+        )
+    }
+
+
+params = st.tuples(
+    st.integers(min_value=3, max_value=6),   # grid nx
+    st.integers(min_value=3, max_value=6),   # grid ny
+    st.integers(min_value=0, max_value=10_000),
+    st.integers(min_value=1, max_value=4),   # k
+)
+
+
+def _setup(nx, ny, seed, k):
+    # continuous weights: distance ties are measure-zero, every assertion
+    # below is an exact set equality instead of a tie-tolerant inclusion
+    g = road_network(nx, ny, seed=seed, integer_weights=False)
+    objects = pick_objects(g.n, 0.35, seed=seed)
+    bn = build_bngraph(g)
+    return g, objects, bn, _brute_knn(g, objects, k)
+
+
+@settings(max_examples=12, deadline=None)
+@given(params)
+def test_insert_frontier_matches_brute_force(p):
+    nx, ny, seed, k = p
+    g, objects, bn, idx = _setup(nx, ny, seed, k)
+    outside = np.setdiff1d(np.arange(g.n), objects)
+    if outside.size == 0:
+        return
+    u = int(outside[np.random.default_rng(seed).integers(0, outside.size)])
+
+    dist_u = _sssp(g, u)
+    affected = insert_affected_set(bn, lambda v: _kth(idx, v), u)
+
+    expected = {w for w in range(g.n) if dist_u[w] < _kth(idx, w)} | {u}
+    assert set(affected) == expected
+    for w, d in affected.items():  # BN-Graph preserves exact distances
+        assert np.isclose(d, dist_u[w])
+
+    # every row the ground-truth index changes is in the frontier
+    after = _brute_knn(g, np.sort(np.append(objects, u)), k)
+    assert _changed_rows(idx, after) <= set(affected)
+
+
+@settings(max_examples=12, deadline=None)
+@given(params)
+def test_delete_frontier_matches_brute_force(p):
+    nx, ny, seed, k = p
+    g, objects, bn, idx = _setup(nx, ny, seed, k)
+    u = int(objects[np.random.default_rng(seed).integers(0, len(objects))])
+
+    naming_u = {w for w in range(g.n) if u in idx.ids[w]}
+
+    # the oracle's checkDel frontier explores exactly the rows naming u
+    affected = _affected_set(bn, idx, u, for_delete=True)
+    assert set(affected) == naming_u
+    dist_u = _sssp(g, u)
+    for w, d in affected.items():
+        assert np.isclose(d, dist_u[w])
+
+    # the engine's device scan finds the same delete frontier
+    tables = np.concatenate([idx.ids, np.full((1, k), PAD_ID, np.int32)])
+    hit = np.asarray(ops.rows_containing(tables, np.array([u], np.int32)))
+    assert set(np.flatnonzero(hit).tolist()) == naming_u
+
+    # and the ground-truth index changes exactly on those rows
+    after = _brute_knn(g, objects[objects != u], k)
+    assert _changed_rows(idx, after) == naming_u

@@ -1,12 +1,14 @@
-"""Algorithms 4/5 (object insert/delete) vs rebuild-from-scratch.
+"""Algorithms 4/5 (object insert/delete/move) vs rebuild-from-scratch.
 
 The property covers both update paths: the scalar host oracle
-(insert_object/delete_object, one op at a time) AND the QueryEngine's
-batched staged equivalents (stage_* + flush_updates at random points) must
-land indices_equivalent to a fresh knn_index_cons_plus rebuild on the final
-object set — and therefore to each other.
+(insert_object/delete_object/move_object, one op at a time) AND the
+QueryEngine's batched staged equivalents (stage_* + flush_updates at random
+points, moves included in the interleaving) must land indices_equivalent to
+a fresh knn_index_cons_plus rebuild on the final object set — and therefore
+to each other.
 """
 import numpy as np
+import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
@@ -14,7 +16,7 @@ from repro.core.bngraph import build_bngraph
 from repro.core.engine import QueryEngine
 from repro.core.index import indices_equivalent
 from repro.core.reference import knn_index_cons_plus
-from repro.core.updates import delete_object, insert_object
+from repro.core.updates import delete_object, insert_object, move_object
 from repro.graph.generators import pick_objects, random_connected_graph, road_network
 
 params = st.tuples(
@@ -41,7 +43,17 @@ def test_mixed_updates_match_rebuild(p):
     engine = QueryEngine.from_index(idx, obj0, bn=bn)
     for _ in range(n_updates):
         u = int(rng.integers(0, n))
-        if u in objects:
+        r = rng.random()
+        outside = [v for v in range(n) if v not in objects]
+        if r < 0.35 and objects and outside:
+            # a move: a present object relocates to an absent vertex
+            src = int(rng.choice(sorted(objects)))
+            dst = int(rng.choice(outside))
+            move_object(bn, idx, src, dst)
+            engine.stage_move(src, dst)
+            objects.discard(src)
+            objects.add(dst)
+        elif u in objects:
             if len(objects) <= k + 1:
                 continue
             delete_object(bn, idx, u)
@@ -71,3 +83,29 @@ def test_insert_then_delete_roundtrip():
     delete_object(bn, idx, outside)
     assert indices_equivalent(before, idx)
     assert np.array_equal(before.ids, idx.ids)
+
+
+def test_move_there_and_back_roundtrip():
+    g = road_network(10, 10, seed=3)
+    objects = pick_objects(g.n, 0.3, seed=3)
+    bn = build_bngraph(g)
+    idx = knn_index_cons_plus(bn, objects, 4)
+    before = idx.copy()
+    src = int(objects[0])
+    dst = [v for v in range(g.n) if v not in set(objects.tolist())][0]
+    move_object(bn, idx, src, dst)
+    fresh = knn_index_cons_plus(
+        bn, np.array(sorted(set(objects.tolist()) - {src} | {dst})), 4
+    )
+    assert indices_equivalent(fresh, idx)
+    move_object(bn, idx, dst, src)
+    assert indices_equivalent(before, idx)
+
+
+def test_move_to_same_vertex_raises():
+    g = road_network(6, 6, seed=0)
+    objects = pick_objects(g.n, 0.3, seed=0)
+    bn = build_bngraph(g)
+    idx = knn_index_cons_plus(bn, objects, 3)
+    with pytest.raises(ValueError):
+        move_object(bn, idx, int(objects[0]), int(objects[0]))
