@@ -1,0 +1,138 @@
+"""CI schema/floor assertions over a ``benchmarks.run --json`` file.
+
+    python -m benchmarks.check_schema bench.json --require exp11 exp12
+    python -m benchmarks.check_schema bench.json --require exp13 --min-devices 8
+
+One checker per experiment family, shared by every CI job so the assertions
+cannot drift between workflow legs. Each check validates the machine-readable
+schema (the keys downstream perf-trajectory tooling diffs) AND the
+experiment's acceptance floor:
+
+* exp11 — engine serving stats present; batched path >= 5x the scalar loop.
+* exp12 — fleet stats present; fused stage_move flushes >= 1.2x split.
+* exp13 — per-device-count queries/s, ticks/s and row-padding overhead
+  present for every measured device count; the sharded engine at ONE shard
+  within >= 0.8x of the scalar engine on both metrics. ``--min-devices N``
+  additionally demands the sweep actually reached N devices (the
+  multi-device CI job passes 8, so a silently single-device run fails
+  instead of skipping the scaling coverage).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+EXP13_PARITY_FLOOR = 0.8
+
+
+def _need(meta: dict, key: str):
+    assert key in meta, f"missing {key} in bench meta"
+    return meta[key]
+
+
+def check_exp11(data: dict) -> str:
+    meta = data["meta"]
+    for key in ("exp11.engine.batch_size", "exp11.engine.queries_per_s",
+                "exp11.engine.staged_queue_depth",
+                "exp11.engine.speedup_vs_scalar"):
+        _need(meta, key)
+    stats = _need(meta, "exp11.engine.stats")
+    for key in ("n", "k", "queries_served", "query_batches", "flushes",
+                "staged_queue_depth"):
+        assert key in stats, f"missing engine stat {key}"
+    names = {r["name"] for r in data["rows"]}
+    assert "exp11.serve.scalar_query_loop" in names
+    assert any(n.startswith("exp11.serve.engine_query_batch.") for n in names)
+    assert "exp11.serve.engine_mixed_bua" in names
+    # acceptance floor: the batched path must stay an order of magnitude
+    # ahead of the scalar loop (measured 17-32x; 5x absorbs runner noise)
+    assert meta["exp11.engine.speedup_vs_scalar"] >= 5.0, meta
+    return (f"exp11 OK: {meta['exp11.engine.queries_per_s']} q/s, "
+            f"x{meta['exp11.engine.speedup_vs_scalar']} vs scalar")
+
+
+def check_exp12(data: dict, floor: float) -> str:
+    meta = data["meta"]
+    for key in ("exp12.fleet.size", "exp12.fleet.ticks_per_s_fused",
+                "exp12.fleet.ticks_per_s_split", "exp12.fleet.fused_speedup",
+                "exp12.fleet.query_p50_us", "exp12.fleet.query_p99_us",
+                "exp12.fleet.moves_per_tick"):
+        _need(meta, key)
+    fstats = _need(meta, "exp12.fleet.engine_stats")
+    for key in ("moves_applied", "coalesced", "rows_repaired"):
+        assert key in fstats, f"missing fleet engine stat {key}"
+    # acceptance: fused stage_move flushes beat the split delete+insert
+    # flushes (steady-state measured 2.8x; the floor absorbs runner noise —
+    # the tier-1 job holds 1.5x, the x64 leg the default 1.2x)
+    assert meta["exp12.fleet.fused_speedup"] >= floor, meta
+    return (f"exp12 OK: {meta['exp12.fleet.ticks_per_s_fused']} ticks/s, "
+            f"x{meta['exp12.fleet.fused_speedup']} vs split flushes")
+
+
+def check_exp13(data: dict, min_devices: int | None) -> str:
+    meta = data["meta"]
+    devices = _need(meta, "exp13.devices")
+    assert devices and devices[0] == 1, f"exp13 device counts start at 1: {devices}"
+    if min_devices:
+        assert max(devices) >= min_devices, (
+            f"exp13 swept only {devices}; the multi-device job requires "
+            f"{min_devices} (is XLA_FLAGS/--devices set?)"
+        )
+        # the grid must cover at least the prefix up to min_devices; a run
+        # with even more devices visible is fine (it only extends the sweep)
+        expect = [c for c in (1, 2, 4, 8) if c <= min_devices]
+        assert devices[: len(expect)] == expect, (
+            f"exp13 device grid {devices} does not cover {expect}"
+        )
+    for key in ("exp13.grid", "exp13.k", "exp13.query_batch_size",
+                "exp13.plain.queries_per_s", "exp13.plain.ticks_per_s",
+                "exp13.parity.queries_1shard_vs_plain",
+                "exp13.parity.ticks_1shard_vs_plain"):
+        _need(meta, key)
+    qps = _need(meta, "exp13.shard.queries_per_s")
+    ticks = _need(meta, "exp13.shard.ticks_per_s")
+    pad = _need(meta, "exp13.shard.row_padding_overhead")
+    names = {r["name"] for r in data["rows"]}
+    for d in devices:
+        for table in (qps, ticks, pad):
+            assert str(d) in table, f"exp13 missing device count {d} in {table}"
+        assert f"exp13.shard.d{d}.query_batch" in names
+        assert f"exp13.shard.d{d}.fleet_tick" in names
+    # acceptance floor: sharding may not tax the degenerate 1-shard case
+    q_par = meta["exp13.parity.queries_1shard_vs_plain"]
+    t_par = meta["exp13.parity.ticks_1shard_vs_plain"]
+    assert q_par >= EXP13_PARITY_FLOOR, f"1-shard query parity {q_par} < 0.8x plain"
+    assert t_par >= EXP13_PARITY_FLOOR, f"1-shard fleet parity {t_par} < 0.8x plain"
+    return (f"exp13 OK: devices {devices}, 1-shard parity "
+            f"q={q_par}x t={t_par}x, q/s per device {qps}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("json_path")
+    ap.add_argument("--require", nargs="+", required=True,
+                    choices=("exp11", "exp12", "exp13"))
+    ap.add_argument("--min-devices", type=int, default=None,
+                    help="exp13: demand the sweep reached this device count")
+    ap.add_argument("--exp12-floor", type=float, default=1.2,
+                    help="exp12 fused-speedup acceptance floor")
+    args = ap.parse_args()
+
+    with open(args.json_path) as f:
+        data = json.load(f)
+    assert data.get("status") == "ok", f"bench run status={data.get('status')}"
+
+    for exp in args.require:
+        if exp == "exp11":
+            print(check_exp11(data))
+        elif exp == "exp12":
+            print(check_exp12(data, args.exp12_floor))
+        else:
+            print(check_exp13(data, args.min_devices))
+    print(f"schema OK: {args.json_path} ({', '.join(args.require)})",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -8,7 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import row, time_us
-from repro.kernels import ops, ref
+from repro.kernels import ops
 
 
 def bench_topk_merge() -> None:

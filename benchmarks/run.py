@@ -2,16 +2,21 @@
 
     PYTHONPATH=src python -m benchmarks.run [--only exp1,exp4] [--skip-kernels]
                                             [--json out/BENCH_cpu.json]
+                                            [--devices 8]
 
 Prints ``name,us_per_call,derived`` CSV rows. With ``--json PATH`` the same
 rows plus the non-timing stats recorded via ``common.meta`` (sweep occupancy,
 XLA compile counts, ...) are written as a machine-readable perf-trajectory
-file so successive PRs can be diffed.
+file so successive PRs can be diffed. ``--devices N`` forces N host CPU
+devices (the multi-device grid exp13 sweeps) — it must take effect before
+jax initializes, which is why it is a run.py flag and not something an
+experiment can set for itself.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import platform
 import sys
 import time
@@ -23,7 +28,19 @@ def main() -> None:
     ap.add_argument("--skip-kernels", action="store_true")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write results as machine-readable JSON")
+    ap.add_argument("--devices", type=int, default=None, metavar="N",
+                    help="force N host platform devices via XLA_FLAGS "
+                         "(applied before jax import; exp13 then scales "
+                         "across shard counts up to N)")
     args = ap.parse_args()
+
+    if args.devices:
+        if "jax" in sys.modules:
+            raise SystemExit("--devices must be applied before jax initializes")
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.devices}"
+        ).strip()
 
     from benchmarks import common, kernel_bench, paper_experiments
 

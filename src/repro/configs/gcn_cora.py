@@ -1,6 +1,5 @@
 """gcn-cora [arXiv:1609.02907]. 2 layers, d_hidden=16, mean/sym-norm
 aggregation. Per-shape d_feat/classes follow the assigned shape set."""
-import dataclasses
 
 from repro.configs.common import GNN_SHAPE_META, ArchSpec, gnn_shapes
 from repro.models.gnn.gcn import GCNConfig

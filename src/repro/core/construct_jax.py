@@ -44,7 +44,6 @@ order the paper's total rank refines.
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -296,6 +295,7 @@ def build_knn_tables_jax(
     *,
     use_pallas: bool = True,
     plans: tuple[SweepPlan, SweepPlan] | None = None,
+    mesh=None,
 ) -> tuple[jax.Array, jax.Array]:
     """Algorithm 3, fused device sweeps: V_k^< up, then V_k down, no host sync.
 
@@ -305,6 +305,12 @@ def build_knn_tables_jax(
     tables (dummy row last) — the layout ``QueryEngine`` serves from.
     ``plans`` lets a caller that already ran ``prepare_sweep`` (e.g. to report
     schedule stats) reuse the uploaded (up, down) schedules.
+
+    With ``mesh`` (a 1-D ``jax.sharding.Mesh``), the result is re-laid into
+    the vertex-sharded layout ``ShardedQueryEngine`` serves from — contiguous
+    vertex ranges per device, padded to equal shard rows, one dummy gather
+    row per shard — still without reading the tables back to the host (see
+    ``repro.core.sharded.shard_tables``).
     """
     ex_ids, ex_d = object_extras(bn.n, objects, k)
     plan_up, plan_down = plans or (prepare_sweep(bn, "up"), prepare_sweep(bn, "down"))
@@ -312,7 +318,12 @@ def build_knn_tables_jax(
     # ---- bottom-up: V_k^< (Lemma 5.12) ----
     vkl_ids, vkl_d = run_sweep(plan_up, ex_ids, ex_d, k, use_pallas=use_pallas)
     # ---- top-down: V_k (Lemma 5.21), extras = own V_k^< rows, still on device ----
-    return run_sweep(plan_down, vkl_ids, vkl_d, k, use_pallas=use_pallas)
+    vk_ids, vk_d = run_sweep(plan_down, vkl_ids, vkl_d, k, use_pallas=use_pallas)
+    if mesh is None:
+        return vk_ids, vk_d
+    from repro.core.sharded import shard_tables
+
+    return shard_tables(vk_ids, vk_d, bn.n, mesh)
 
 
 def build_knn_index_jax(

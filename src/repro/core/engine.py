@@ -53,7 +53,8 @@ jitted form:
   not hold here.
 
 * ``save`` / ``load`` — one ``.npz`` artifact (ids, dists, k, object set,
-  format version) shared by ``knn_build.py --out`` and the serving loop.
+  format version + shard meta) shared by ``knn_build.py --out`` and the
+  serving loop.
 
 Queries always see the last *flushed* state: the staged queue is invisible
 until ``flush_updates``, which is exactly the paper's batch-update-arrival
@@ -65,6 +66,16 @@ up; a changed-row mask per repair round (which narrows the next round's
 frontier) and one (n,) k-th-distance column (the checkIns pruning bound)
 come back. Queries move only the query ids up and the (B, k) result tiles
 back.
+
+Everything above that is *layout-independent* — the staged queue and its
+coalescing, query stat bookkeeping, the flush orchestration (delete scan ->
+checkIns frontier -> fused purge+merge -> breadth-first repair with its
+changed-row frontier narrowing), persistence and the stats surface — lives
+in ``EngineCore``. ``QueryEngine`` supplies the single-device table layout
+and device ops; ``repro.core.sharded.ShardedQueryEngine`` supplies the
+vertex-sharded multi-device layout on top of the same core, which is what
+keeps the two engines drop-in interchangeable (and exactly equivalent, see
+tests/core/test_sharded.py).
 """
 from __future__ import annotations
 
@@ -82,7 +93,7 @@ from repro.core.updates import insert_affected_set
 from repro.kernels import ops
 
 _FORMAT = "repro-knn-index"
-_FORMAT_VERSION = 1
+_FORMAT_VERSION = 2  # v2 adds shard meta; load accepts v1 artifacts unchanged
 _MAX_REPAIR_ROUNDS = 256
 
 
@@ -91,42 +102,37 @@ def _pow2_pad(x: int, lo: int = 8) -> int:
     return max(lo, 1 << (max(1, x) - 1).bit_length())
 
 
-class QueryEngine:
-    """Batched kNN serving over device-resident index tables (see module doc)."""
+class EngineCore:
+    """Layout-independent serving core shared by the scalar and sharded engines.
 
-    def __init__(
-        self,
-        ids: np.ndarray | jax.Array,
-        dists: np.ndarray | jax.Array,
-        k: int,
-        objects,
-        *,
-        bn: BNGraph | None = None,
-        use_pallas: bool = False,
-    ):
-        ids = jnp.asarray(ids, jnp.int32)
-        dists = jnp.asarray(dists, jnp.float32)
-        if ids.ndim != 2 or ids.shape != dists.shape or ids.shape[1] != k:
-            raise ValueError(f"tables must be (n, k)={ids.shape} with k={k}")
+    Subclasses own the table storage and implement the device hooks:
+
+    * ``_gather_batch(us, ks)`` — the batched row gather behind
+      ``query_batch`` (full index-k width; the core applies stats and the
+      per-query width slice).
+    * ``_scan_delete_rows(deletes)`` — global row ids naming any deleted
+      object (the vectorized checkDel membership scan).
+    * ``_table_kth()`` — the (n,) k-th-distance column (float64 host array),
+      the checkIns pruning bound.
+    * ``_purge_merge(rows, deletes, cand_ids, cand_d)`` — the fused
+      purge + candidate merge over one (unpadded) global row batch.
+    * ``_repair_part(part)`` — one Jacobi re-merge of ``part`` rows against
+      their bridge neighborhoods; returns the per-row changed mask.
+    * ``_host_tables()`` — the logical (n, k) id/dist tables for ``save``.
+    * ``to_index()`` — readback into the host ``KNNIndex`` view.
+
+    The flush pipeline, the repair rounds' frontier narrowing and all
+    validation/coalescing/stat bookkeeping run here, once, so a sharded
+    engine cannot drift from the scalar one in anything but the device
+    layout.
+    """
+
+    def __init__(self, k: int, objects, *, bn: BNGraph | None, use_pallas: bool):
+        # subclasses set ``self.n`` (and their tables) before calling super()
         self.k = int(k)
         self.use_pallas = bool(use_pallas)
         self.bn = bn
         obj = {int(o) for o in np.asarray(objects).ravel()}
-        if bn is not None and ids.shape[0] not in (bn.n, bn.n + 1):
-            raise ValueError(f"tables have {ids.shape[0]} rows but graph has n={bn.n}")
-        if bn is not None and ids.shape[0] == bn.n + 1:
-            # device tables straight from the sweeps, dummy row already there
-            self.n = ids.shape[0] - 1
-            self._vk_ids, self._vk_d = ids, dists
-        else:
-            # host (n, k) tables: append the dummy gather row the kernels use
-            self.n = int(ids.shape[0])
-            self._vk_ids = jnp.concatenate(
-                [ids, jnp.full((1, k), PAD_ID, jnp.int32)], axis=0
-            )
-            self._vk_d = jnp.concatenate(
-                [dists, jnp.full((1, k), jnp.inf, jnp.float32)], axis=0
-            )
         self._objects = obj
         self._pending = set(obj)
         self._staged: list[tuple[str, int]] = []
@@ -147,52 +153,32 @@ class QueryEngine:
             "repair_rounds_last": 0,
         }
 
-    # ------------------------------------------------------------------
-    # construction / conversion
-    # ------------------------------------------------------------------
+    @staticmethod
+    def normalize_tables(
+        ids, dists, k: int, bn: BNGraph | None
+    ) -> tuple[int, jax.Array, jax.Array]:
+        """Validate and normalize constructor tables to the engine layout.
 
-    @classmethod
-    def build(
-        cls,
-        bn: BNGraph,
-        objects: np.ndarray,
-        k: int,
-        *,
-        use_pallas: bool = False,
-    ) -> "QueryEngine":
-        """Construct on device (Algorithm 3 fused sweeps) and serve in place:
-        the sweep result tables become the engine's live tables, no readback."""
-        vk_ids, vk_d = build_knn_tables_jax(bn, objects, k, use_pallas=use_pallas)
-        return cls(vk_ids, vk_d, k, objects, bn=bn, use_pallas=use_pallas)
-
-    @classmethod
-    def from_index(
-        cls,
-        index: KNNIndex,
-        objects,
-        *,
-        bn: BNGraph | None = None,
-        use_pallas: bool = False,
-    ) -> "QueryEngine":
-        """Upload a host ``KNNIndex`` (e.g. an oracle-built one)."""
-        dists = np.where(index.ids >= 0, index.dists, np.inf).astype(np.float32)
-        return cls(index.ids, dists, index.k, objects, bn=bn, use_pallas=use_pallas)
-
-    def to_index(self) -> KNNIndex:
-        """Read the tables back into the host ``KNNIndex`` view (oracle dtype)."""
-        ids = np.array(self._vk_ids[: self.n])
-        dists = np.where(ids >= 0, np.asarray(self._vk_d[: self.n], np.float64), np.inf)
-        return KNNIndex(ids=ids, dists=dists, k=self.k)
-
-    @property
-    def objects(self) -> np.ndarray:
-        """The flushed candidate-object set M (staged updates not included)."""
-        return np.array(sorted(self._objects), dtype=np.int32)
-
-    @property
-    def tables(self) -> tuple[jax.Array, jax.Array]:
-        """The live device (n+1, k) id/dist tables (dummy row last)."""
-        return self._vk_ids, self._vk_d
+        Accepts host/device (n, k) tables or (n+1, k) tables straight from
+        the construction sweeps (dummy gather row already last, only
+        recognized when ``bn`` pins down n); returns ``(n, ids, dists)``
+        with the dummy row (PAD_ID, +inf) guaranteed present. One shared
+        normalizer so the scalar and sharded constructors cannot drift.
+        """
+        ids = jnp.asarray(ids, jnp.int32)
+        dists = jnp.asarray(dists, jnp.float32)
+        if ids.ndim != 2 or ids.shape != dists.shape or ids.shape[1] != k:
+            raise ValueError(f"tables must be (n, k)={ids.shape} with k={k}")
+        if bn is not None and ids.shape[0] not in (bn.n, bn.n + 1):
+            raise ValueError(f"tables have {ids.shape[0]} rows but graph has n={bn.n}")
+        if bn is not None and ids.shape[0] == bn.n + 1:
+            return ids.shape[0] - 1, ids, dists
+        n = int(ids.shape[0])
+        ids = jnp.concatenate([ids, jnp.full((1, k), PAD_ID, jnp.int32)], axis=0)
+        dists = jnp.concatenate(
+            [dists, jnp.full((1, k), jnp.inf, jnp.float32)], axis=0
+        )
+        return n, ids, dists
 
     # ------------------------------------------------------------------
     # queries
@@ -212,6 +198,12 @@ class QueryEngine:
             raise ValueError(f"per-query k max={int(ks.max())} exceeds index k={self.k}")
         return jnp.asarray(ks), self.k
 
+    def _gather_batch(self, us: np.ndarray, ks: jax.Array):
+        """Batched row gather at full index-k width; ``us`` is a host array
+        so a sharded engine can route queries by owner before the device
+        roundtrip."""
+        raise NotImplementedError
+
     def query_batch(self, us, k=None) -> tuple[jax.Array, jax.Array]:
         """Batched kNN: (B,) vertices -> ((B, k') ids, (B, k') dists).
 
@@ -219,11 +211,11 @@ class QueryEngine:
         traffic; columns past a query's k hold the pad sentinel (-1, +inf).
         Raises ValueError when any requested k exceeds the index's k.
         """
-        us = jnp.asarray(np.asarray(us, dtype=np.int32))
+        us = np.asarray(us, dtype=np.int32)
         if us.ndim != 1:
             raise ValueError(f"queries must be a 1-D vertex array, got {us.shape}")
         ks, width = self._ks_array(us.shape[0], k)
-        ids, d = ops.serve_gather(self._vk_ids, self._vk_d, us, ks)
+        ids, d = self._gather_batch(us, ks)
         self._stats["queries_served"] += int(us.shape[0])
         self._stats["query_batches"] += 1
         self._stats["last_batch_size"] = int(us.shape[0])
@@ -299,8 +291,13 @@ class QueryEngine:
     def queue_depth(self) -> int:
         return len(self._staged)
 
+    @property
+    def objects(self) -> np.ndarray:
+        """The flushed candidate-object set M (staged updates not included)."""
+        return np.array(sorted(self._objects), dtype=np.int32)
+
     def _nbr_tables(self) -> None:
-        """Combined BNS^< + BNS^> adjacency, uploaded once, width-bucketed.
+        """Combined BNS^< + BNS^> adjacency (host side), width-compacted.
 
         Valid neighbors are compacted to the front of each row so that a row
         with degree d is fully described by the first d columns; repair
@@ -322,6 +319,14 @@ class QueryEngine:
             self._nbr_ids = nbr
             self._nbr_w = w
 
+    def _t_bucket(self, rows: np.ndarray) -> int:
+        """Smallest pow4 width (>= 8) covering the rows' max BNS degree."""
+        t_max = int(self._nbr_deg[rows].max())
+        t = 8
+        while t < t_max:
+            t *= 4
+        return min(t, self._nbr_ids.shape[1])
+
     def _nbr_slice(self, t: int) -> tuple[jax.Array, jax.Array]:
         """Device (n+1, t) adjacency slice for one width bucket, cached."""
         if t not in self._nbr_by_t:
@@ -330,14 +335,6 @@ class QueryEngine:
                 jax.device_put(self._nbr_w[:, :t]),
             )
         return self._nbr_by_t[t]
-
-    def _t_bucket(self, rows: np.ndarray) -> int:
-        """Smallest pow4 width (>= 8) covering the rows' max BNS degree."""
-        t_max = int(self._nbr_deg[rows].max())
-        t = 8
-        while t < t_max:
-            t *= 4
-        return min(t, self._nbr_ids.shape[1])
 
     def _pad_rows(self, rows: np.ndarray) -> jax.Array:
         """Pad a row batch to a pow2 length with the dummy row id n.
@@ -350,6 +347,30 @@ class QueryEngine:
         out[: len(rows)] = rows
         return jnp.asarray(out)
 
+    # hooks the flush pipeline drives -----------------------------------
+
+    def _padded_deletes(self, deletes: list[int]) -> np.ndarray:
+        """Deleted-object ids pow2-padded with the dummy id n (never an
+        object id, so never a hit): bounds the distinct jit signatures
+        across flush sizes."""
+        if not deletes:
+            return np.full(1, self.n, np.int32)
+        padded = np.full(_pow2_pad(len(deletes)), self.n, np.int32)
+        padded[: len(deletes)] = deletes
+        return padded
+
+    def _scan_delete_rows(self, deletes: list[int]) -> np.ndarray:
+        raise NotImplementedError
+
+    def _table_kth(self) -> np.ndarray:
+        raise NotImplementedError
+
+    def _purge_merge(self, rows, deletes, cand_ids, cand_d) -> None:
+        raise NotImplementedError
+
+    def _repair_part(self, part: np.ndarray) -> np.ndarray:
+        raise NotImplementedError
+
     def _repair(self, rows: np.ndarray) -> int:
         """Jacobi repair rounds over the purged rows; returns the round count.
 
@@ -359,6 +380,9 @@ class QueryEngine:
         The frontier collapses fast, so later rounds are tiny batches.
         Within a round, rows are split by BNS-degree width bucket so the
         candidate tensor is sized to the batch, not to the global tau'.
+        Only the frontier's *vertex ids* survive a round boundary — the row
+        data itself never leaves the owning table (or, sharded, the owning
+        shard) between rounds.
         """
         self._nbr_tables()
         active = rows
@@ -373,11 +397,8 @@ class QueryEngine:
                 prev = t
                 if part.size == 0:
                     continue
-                nbr_tab, w_tab = self._nbr_slice(self._t_bucket(part))
-                self._vk_ids, self._vk_d, changed_mask = _repair_round(
-                    nbr_tab, w_tab, self._pad_rows(part), self._vk_ids, self._vk_d
-                )
-                changed_parts.append(part[np.asarray(changed_mask)[: part.size]])
+                changed_mask = self._repair_part(part)
+                changed_parts.append(part[changed_mask[: part.size]])
             rounds += 1
             changed_rows = (
                 np.concatenate(changed_parts) if changed_parts else np.empty(0, np.int32)
@@ -452,15 +473,8 @@ class QueryEngine:
 
         # -- delete side: which rows name a deleted object (device scan) --
         purged_rows = np.empty(0, np.int32)
-        del_arr = None
         if deletes:
-            # pow2-pad with the dummy id n (never an object id, so never a
-            # hit): bounds the distinct jit signatures across flush sizes.
-            padded = np.full(_pow2_pad(len(deletes)), self.n, np.int32)
-            padded[: len(deletes)] = deletes
-            del_arr = jnp.asarray(padded)
-            hit = np.asarray(ops.rows_containing(self._vk_ids, del_arr))
-            purged_rows = np.flatnonzero(hit).astype(np.int32)
+            purged_rows = self._scan_delete_rows(deletes)
 
         # -- insert side: checkIns frontier, insert-first semantics --
         # The frontier prunes against the CURRENT (pre-update) k-th bounds,
@@ -474,7 +488,7 @@ class QueryEngine:
         # unpruned sweep a post-purge (unbounded) k-th would trigger.
         per_row: dict[int, list[tuple[int, float]]] = {}
         if inserts:
-            kth = np.asarray(self._vk_d[: self.n, -1], np.float64)
+            kth = self._table_kth()
             for u in inserts:
                 affected = insert_affected_set(self.bn, lambda v: float(kth[v]), u)
                 for v, d in affected.items():
@@ -486,22 +500,15 @@ class QueryEngine:
             frows = np.fromiter(per_row.keys(), np.int32, len(per_row))
             rows = np.union1d(purged_rows, frows).astype(np.int32)
             p = _pow2_pad(max((len(c) for c in per_row.values()), default=1), lo=4)
-            r_pad = _pow2_pad(len(rows), lo=64)  # must match _pad_rows
-            cand_ids = np.full((r_pad, p), -1, np.int32)
-            cand_d = np.full((r_pad, p), np.inf, np.float32)
+            cand_ids = np.full((len(rows), p), -1, np.int32)
+            cand_d = np.full((len(rows), p), np.inf, np.float32)
             row_slot = {int(v): i for i, v in enumerate(rows)}
             for v, cands in per_row.items():
                 i = row_slot[int(v)]
                 for j, (u, d) in enumerate(cands):
                     cand_ids[i, j] = u
                     cand_d[i, j] = d
-            if del_arr is None:
-                del_arr = jnp.asarray(np.full(1, self.n, np.int32))
-            self._vk_ids, self._vk_d = ops.rows_purge_merge(
-                self._vk_ids, self._vk_d, self._pad_rows(rows), del_arr,
-                jnp.asarray(cand_ids), jnp.asarray(cand_d), self.k,
-                use_pallas=self.use_pallas,
-            )
+            self._purge_merge(rows, deletes, cand_ids, cand_d)
             # -- breadth-first repair of the deletion holes (shared frontier) --
             if purged_rows.size:
                 rounds = self._repair(purged_rows)
@@ -530,6 +537,12 @@ class QueryEngine:
     # persistence / stats
     # ------------------------------------------------------------------
 
+    def _host_tables(self) -> tuple[np.ndarray, np.ndarray]:
+        raise NotImplementedError
+
+    def _save_meta(self) -> dict:
+        return {"shards": 1}
+
     def save(self, path) -> None:
         """Write the index artifact: one npz shared by build and serving.
 
@@ -539,39 +552,34 @@ class QueryEngine:
         the engine was serving at save time. Call ``flush_updates()`` first;
         the tables are then exactly the flushed state and round-trip
         bit-identically through ``load``.
+
+        The stored tables are always the *logical* (n, k) layout in vertex
+        order — shard padding is stripped — so an artifact saved by a
+        sharded engine at N shards loads into a scalar engine or a sharded
+        engine at M shards (reshard-on-load); the writer's shard count is
+        recorded in the meta as provenance.
         """
         if self._staged:
             raise RuntimeError("flush_updates() before save(): staged updates pending")
-        meta = {"format": _FORMAT, "version": _FORMAT_VERSION, "n": self.n, "k": self.k}
+        ids, dists = self._host_tables()
+        meta = {
+            "format": _FORMAT,
+            "version": _FORMAT_VERSION,
+            "n": self.n,
+            "k": self.k,
+            **self._save_meta(),
+        }
         np.savez_compressed(
             path,
-            ids=np.asarray(self._vk_ids[: self.n]),
-            dists=np.asarray(self._vk_d[: self.n]),
+            ids=ids,
+            dists=dists,
             k=np.int64(self.k),
             objects=self.objects,
             meta=np.bytes_(json.dumps(meta).encode()),
         )
 
-    @classmethod
-    def load(
-        cls, path, *, bn: BNGraph | None = None, use_pallas: bool = False
-    ) -> "QueryEngine":
-        """Load a ``save``/``knn_build --out`` artifact. ``bn`` enables updates.
-
-        Accepts the pre-engine ``knn_build`` npz too (no object set stored):
-        M is recovered as the distance-0 entries — every object is its own
-        0-th nearest neighbor, so exactly the objects appear at distance 0.
-        """
-        with np.load(path) as z:
-            ids = z["ids"]
-            dists = z["dists"]
-            k = int(z["k"])
-            if "objects" in z.files:
-                objects = z["objects"]
-            else:
-                objects = np.unique(ids[dists == 0.0])
-                objects = objects[objects >= 0]
-        return cls(ids, dists.astype(np.float32), k, objects, bn=bn, use_pallas=use_pallas)
+    def _extra_stats(self) -> dict:
+        return {}
 
     def stats(self) -> dict:
         """Serving counters (merged into benchmark/serve JSON output)."""
@@ -580,8 +588,138 @@ class QueryEngine:
             "k": self.k,
             "num_objects": len(self._objects),
             "staged_queue_depth": len(self._staged),
+            **self._extra_stats(),
             **self._stats,
         }
+
+
+def load_artifact(path) -> tuple[np.ndarray, np.ndarray, int, np.ndarray, dict]:
+    """Read a ``save``/``knn_build --out`` npz: (ids, dists, k, objects, meta).
+
+    Accepts the pre-engine ``knn_build`` npz too (no object set stored):
+    M is recovered as the distance-0 entries — every object is its own
+    0-th nearest neighbor, so exactly the objects appear at distance 0.
+    """
+    with np.load(path) as z:
+        ids = z["ids"]
+        dists = z["dists"]
+        k = int(z["k"])
+        if "objects" in z.files:
+            objects = z["objects"]
+        else:
+            objects = np.unique(ids[dists == 0.0])
+            objects = objects[objects >= 0]
+        meta = json.loads(bytes(z["meta"])) if "meta" in z.files else {}
+    return ids, dists, k, objects, meta
+
+
+class QueryEngine(EngineCore):
+    """Batched kNN serving over device-resident index tables (see module doc)."""
+
+    def __init__(
+        self,
+        ids: np.ndarray | jax.Array,
+        dists: np.ndarray | jax.Array,
+        k: int,
+        objects,
+        *,
+        bn: BNGraph | None = None,
+        use_pallas: bool = False,
+    ):
+        self.n, self._vk_ids, self._vk_d = self.normalize_tables(ids, dists, k, bn)
+        super().__init__(k, objects, bn=bn, use_pallas=use_pallas)
+
+    # ------------------------------------------------------------------
+    # construction / conversion
+    # ------------------------------------------------------------------
+
+    @classmethod
+    def build(
+        cls,
+        bn: BNGraph,
+        objects: np.ndarray,
+        k: int,
+        *,
+        use_pallas: bool = False,
+    ) -> "QueryEngine":
+        """Construct on device (Algorithm 3 fused sweeps) and serve in place:
+        the sweep result tables become the engine's live tables, no readback."""
+        vk_ids, vk_d = build_knn_tables_jax(bn, objects, k, use_pallas=use_pallas)
+        return cls(vk_ids, vk_d, k, objects, bn=bn, use_pallas=use_pallas)
+
+    @classmethod
+    def from_index(
+        cls,
+        index: KNNIndex,
+        objects,
+        *,
+        bn: BNGraph | None = None,
+        use_pallas: bool = False,
+    ) -> "QueryEngine":
+        """Upload a host ``KNNIndex`` (e.g. an oracle-built one)."""
+        dists = np.where(index.ids >= 0, index.dists, np.inf).astype(np.float32)
+        return cls(index.ids, dists, index.k, objects, bn=bn, use_pallas=use_pallas)
+
+    def to_index(self) -> KNNIndex:
+        """Read the tables back into the host ``KNNIndex`` view (oracle dtype)."""
+        ids = np.array(self._vk_ids[: self.n])
+        dists = np.where(ids >= 0, np.asarray(self._vk_d[: self.n], np.float64), np.inf)
+        return KNNIndex(ids=ids, dists=dists, k=self.k)
+
+    @property
+    def tables(self) -> tuple[jax.Array, jax.Array]:
+        """The live device (n+1, k) id/dist tables (dummy row last)."""
+        return self._vk_ids, self._vk_d
+
+    # ------------------------------------------------------------------
+    # device hooks (single-device layout)
+    # ------------------------------------------------------------------
+
+    def _gather_batch(self, us: np.ndarray, ks: jax.Array):
+        return ops.serve_gather(self._vk_ids, self._vk_d, jnp.asarray(us), ks)
+
+    def _scan_delete_rows(self, deletes: list[int]) -> np.ndarray:
+        del_arr = jnp.asarray(self._padded_deletes(deletes))
+        hit = np.asarray(ops.rows_containing(self._vk_ids, del_arr))
+        return np.flatnonzero(hit).astype(np.int32)
+
+    def _table_kth(self) -> np.ndarray:
+        return np.asarray(self._vk_d[: self.n, -1], np.float64)
+
+    def _purge_merge(self, rows, deletes, cand_ids, cand_d) -> None:
+        r_pad = _pow2_pad(len(rows), lo=64)  # must match _pad_rows
+        pad = ((0, r_pad - len(rows)), (0, 0))
+        cand_ids = np.pad(cand_ids, pad, constant_values=-1)
+        cand_d = np.pad(cand_d, pad, constant_values=np.inf)
+        self._vk_ids, self._vk_d = ops.rows_purge_merge(
+            self._vk_ids, self._vk_d, self._pad_rows(rows),
+            jnp.asarray(self._padded_deletes(deletes)),
+            jnp.asarray(cand_ids), jnp.asarray(cand_d), self.k,
+            use_pallas=self.use_pallas,
+        )
+
+    def _repair_part(self, part: np.ndarray) -> np.ndarray:
+        nbr_tab, w_tab = self._nbr_slice(self._t_bucket(part))
+        self._vk_ids, self._vk_d, changed_mask = _repair_round(
+            nbr_tab, w_tab, self._pad_rows(part), self._vk_ids, self._vk_d
+        )
+        return np.asarray(changed_mask)
+
+    def _host_tables(self) -> tuple[np.ndarray, np.ndarray]:
+        return np.asarray(self._vk_ids[: self.n]), np.asarray(self._vk_d[: self.n])
+
+    @classmethod
+    def load(
+        cls, path, *, bn: BNGraph | None = None, use_pallas: bool = False
+    ) -> "QueryEngine":
+        """Load a ``save``/``knn_build --out`` artifact. ``bn`` enables updates.
+
+        Accepts v1 artifacts and the pre-engine ``knn_build`` npz (see
+        ``load_artifact``); shard meta from a sharded writer is ignored —
+        the stored tables are always the logical vertex-order layout.
+        """
+        ids, dists, k, objects, _ = load_artifact(path)
+        return cls(ids, dists.astype(np.float32), k, objects, bn=bn, use_pallas=use_pallas)
 
 
 @jax.jit

@@ -1,0 +1,476 @@
+"""Vertex-sharded multi-device serving engine over row-partitioned tables.
+
+KNN-Index's core asset is a flat, size-bounded (n+1, k) table — embarrassingly
+partitionable by vertex, unlike the hierarchical indexes it replaces (PAPER.md
+Section 4). ``ShardedQueryEngine`` exploits exactly that: the id/dist tables
+are split row-wise across a 1-D ``jax.sharding.Mesh`` into contiguous vertex
+ranges, padded to equal shard rows, and the full ``QueryEngine`` surface
+(batched queries, progressive prefixes, staged updates with the fused
+purge+merge flush and Jacobi repair, save/load) is served on the partitioned
+layout. The shared serving core (``repro.core.engine.EngineCore``) supplies
+the layout-independent logic, so the two engines cannot drift.
+
+Layout
+------
+Shard ``s`` of ``S`` owns the contiguous vertex range ``[s*R, (s+1)*R)`` with
+``R = ceil(n / S)`` rows per shard, plus one local dummy gather row — a local
+``(R+1, k)`` block per device, stored as one global ``(S*(R+1), k)`` array
+with ``NamedSharding(mesh, P("shard"))``. Vertex ``v`` lives at global padded
+row ``(v // R) * (R + 1) + v % R``. Rows past ``n`` in the last shard and the
+per-shard dummy rows hold the pad sentinel (-1, +inf); they cost
+``S*(R+1) - n`` wasted rows (reported as ``row_padding_overhead`` in
+``stats()`` and the exp13 benchmark, so scaling numbers stay honest about the
+memory cost).
+
+Execution model
+---------------
+* Queries: the host routes each query to its owner shard (one stable argsort
+  per batch), pads the per-shard batches to a shared pow2 width, and a single
+  ``shard_map``-ped gather serves all shards in one device roundtrip; the
+  results are scattered back to the caller's batch order inside the same
+  jitted program. Bit-identical to the scalar engine's ``query_batch``.
+* Flush: the delete scan and the fused ``rows_purge_merge`` pass run
+  per-shard via ``shard_map`` (``ops.shard_rows_*`` variants, which localize
+  the global row ids against the shard's row offset on device); the checkIns
+  frontier and coalescing are the shared host logic.
+* Repair rounds: each round, the rows under repair re-merge against their
+  bridge neighbors' rows. Neighbor rows may live on other shards, so each
+  round first fetches the (unique) neighbor rows through the same routed
+  gather — the boundary-vertex exchange of distributed moving-object kNN
+  serving (arXiv 2512.23399) — then applies a per-shard merge. Between
+  rounds only the changed-row frontier's *vertex ids* cross shard
+  boundaries (host-side), never row data.
+
+The engine is drop-in for ``QueryEngine``: same constructor shape, same
+staged-update API, same artifact format. Artifacts always store the logical
+(n, k) vertex-order tables, so an index saved at N shards loads at M shards
+(or unsharded) — reshard-on-load.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.bngraph import BNGraph
+from repro.core.construct_jax import build_knn_tables_jax
+from repro.core.engine import EngineCore, _pow2_pad, load_artifact
+from repro.core.index import KNNIndex
+from repro.kernels import ops
+
+
+def make_mesh(shards: int | None = None) -> Mesh:
+    """A 1-D device mesh over the first ``shards`` local devices.
+
+    ``shards=None`` uses every visible device. On the CPU backend the device
+    count is set at process start via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+    """
+    devs = jax.devices()
+    if shards is None:
+        shards = len(devs)
+    if not 1 <= shards <= len(devs):
+        raise ValueError(
+            f"shards={shards} but only {len(devs)} devices are visible "
+            f"(set XLA_FLAGS=--xla_force_host_platform_device_count)"
+        )
+    return Mesh(np.array(devs[:shards]), ("shard",))
+
+
+def shard_tables(
+    vk_ids: jax.Array, vk_d: jax.Array, n: int, mesh: Mesh
+) -> tuple[jax.Array, jax.Array]:
+    """Re-lay single-device (n+1, k) tables into the sharded global layout.
+
+    Stays on device: one gather through the padded-row -> source-row index
+    map, then a resharding ``device_put`` — the construction sweeps' result
+    feeds the sharded engine with no host readback.
+    """
+    shards = mesh.devices.size
+    rows = -(-n // shards)  # ceil
+    src = np.full(shards * (rows + 1), n, np.int64)  # pads read the dummy row
+    v = np.arange(n, dtype=np.int64)
+    src[(v // rows) * (rows + 1) + v % rows] = v
+    spec = NamedSharding(mesh, P("shard", None))
+    src_dev = jnp.asarray(src)
+    return (
+        jax.device_put(vk_ids[src_dev], spec),
+        jax.device_put(vk_d[src_dev], spec),
+    )
+
+
+_DEVICE_FN_CACHE: dict[tuple, dict] = {}
+
+
+def _device_fns(mesh: Mesh, block: int, k: int) -> dict:
+    """The jitted shard_map programs for one (mesh, block-rows, k) layout.
+
+    Cached at module level keyed by the device ids so every engine on the
+    same layout shares one compile cache (the scalar engine gets this for
+    free from its module-level jitted ops).
+    """
+    key = (tuple(d.id for d in mesh.devices.flat), block, k)
+    if key in _DEVICE_FN_CACHE:
+        return _DEVICE_FN_CACHE[key]
+
+    spec2 = P("shard", None)
+
+    def gather(ids_g, d_g, qglob, fidx, ks):
+        def blk(ti, td, q):
+            off = jax.lax.axis_index("shard") * block
+            gi, gd = ops.shard_gather_rows(ti, td, q[0], off)
+            return gi[None], gd[None]
+
+        gi, gd = shard_map(
+            blk, mesh=mesh,
+            in_specs=(spec2, spec2, spec2),
+            out_specs=(P("shard", None, None), P("shard", None, None)),
+        )(ids_g, d_g, qglob)
+        gi = gi.reshape(-1, k)[fidx]
+        gd = gd.reshape(-1, k)[fidx]
+        mask = jax.lax.broadcasted_iota(jnp.int32, gi.shape, 1) < ks[:, None]
+        return jnp.where(mask, gi, -1), jnp.where(mask & (gi >= 0), gd, jnp.inf)
+
+    def scan(ids_g, del_arr):
+        def blk(ti, dl):
+            return ops.shard_rows_containing(ti, dl)[None]
+
+        return shard_map(
+            blk, mesh=mesh, in_specs=(spec2, P(None)), out_specs=spec2
+        )(ids_g, del_arr)
+
+    def purge(ids_g, d_g, rglob, del_arr, ci, cd):
+        def blk(ti, td, rq, dl, bci, bcd):
+            off = jax.lax.axis_index("shard") * block
+            ni, nd, ch = ops.shard_rows_purge_merge(
+                ti, td, rq[0], off, dl, bci[0], bcd[0], k,
+                use_pallas=False,  # XLA merge form inside shard_map, as in repair
+            )
+            return ni, nd, ch[None]
+
+        return shard_map(
+            blk, mesh=mesh,
+            in_specs=(spec2, spec2, spec2, P(None),
+                      P("shard", None, None), P("shard", None, None)),
+            out_specs=(spec2, spec2, spec2),
+        )(ids_g, d_g, rglob, del_arr, ci, cd)
+
+    _DEVICE_FN_CACHE[key] = {
+        "gather": jax.jit(gather),
+        "scan": jax.jit(scan),
+        "purge": jax.jit(purge),
+        "kth": jax.jit(lambda d_g: d_g[:, -1]),
+    }
+    return _DEVICE_FN_CACHE[key]
+
+
+class ShardedQueryEngine(EngineCore):
+    """Row-sharded multi-device drop-in for ``QueryEngine`` (see module doc)."""
+
+    def __init__(
+        self,
+        ids,
+        dists,
+        k: int,
+        objects,
+        *,
+        bn: BNGraph | None = None,
+        shards: int | None = None,
+        mesh: Mesh | None = None,
+        use_pallas: bool = False,
+    ):
+        self.mesh = mesh if mesh is not None else make_mesh(shards)
+        self.num_shards = int(self.mesh.devices.size)
+        self.n, ids, dists = EngineCore.normalize_tables(ids, dists, k, bn)
+        self._init_layout(int(k))
+        self._ids_g, self._d_g = shard_tables(ids, dists, self.n, self.mesh)
+        super().__init__(k, objects, bn=bn, use_pallas=use_pallas)
+
+    def _init_layout(self, k: int) -> None:
+        """Derive the host side of the partitioned layout (shard_rows, the
+        vertex -> global-padded-row map) and bind the shared device programs.
+        Requires ``self.mesh``, ``self.num_shards`` and ``self.n`` to be set;
+        the single source of the layout arithmetic for every constructor."""
+        if self.num_shards > max(self.n, 1):
+            raise ValueError(f"cannot split n={self.n} rows into {self.num_shards} shards")
+        self.shard_rows = -(-self.n // self.num_shards)
+        v = np.arange(self.n, dtype=np.int64)
+        self._g_of_v = (v // self.shard_rows) * (self.shard_rows + 1) + v % self.shard_rows
+        self._make_device_fns(k)
+
+    # ------------------------------------------------------------------
+    # construction / conversion
+    # ------------------------------------------------------------------
+
+    @classmethod
+    def build(
+        cls,
+        bn: BNGraph,
+        objects: np.ndarray,
+        k: int,
+        *,
+        shards: int | None = None,
+        use_pallas: bool = False,
+    ) -> "ShardedQueryEngine":
+        """Construct on device (Algorithm 3 fused sweeps) and serve sharded:
+        the sweep result tables are re-laid into the partitioned layout with
+        no host readback (``build_knn_tables_jax(..., mesh=)``)."""
+        eng = cls.__new__(cls)  # skip __init__: the tables are born sharded
+        eng.mesh = make_mesh(shards)
+        eng.num_shards = int(eng.mesh.devices.size)
+        eng.n = bn.n
+        eng._init_layout(int(k))
+        eng._ids_g, eng._d_g = build_knn_tables_jax(
+            bn, objects, k, use_pallas=use_pallas, mesh=eng.mesh
+        )
+        EngineCore.__init__(eng, k, objects, bn=bn, use_pallas=use_pallas)
+        return eng
+
+    @classmethod
+    def from_index(
+        cls,
+        index: KNNIndex,
+        objects,
+        *,
+        bn: BNGraph | None = None,
+        shards: int | None = None,
+        use_pallas: bool = False,
+    ) -> "ShardedQueryEngine":
+        """Upload a host ``KNNIndex`` (e.g. an oracle-built one), sharded."""
+        dists = np.where(index.ids >= 0, index.dists, np.inf).astype(np.float32)
+        return cls(
+            index.ids, dists, index.k, objects,
+            bn=bn, shards=shards, use_pallas=use_pallas,
+        )
+
+    @classmethod
+    def load(
+        cls,
+        path,
+        *,
+        bn: BNGraph | None = None,
+        shards: int | None = None,
+        use_pallas: bool = False,
+    ) -> "ShardedQueryEngine":
+        """Load a ``save`` artifact into a sharded engine — reshard-on-load.
+
+        The artifact stores the logical vertex-order tables, so the writer's
+        shard count does not constrain the reader: ``shards=None`` re-shards
+        across the saved count capped at the visible device count (an
+        artifact saved at 8 shards still loads on a 2-device host), and an
+        explicit ``shards=M`` overrides it entirely.
+        """
+        ids, dists, k, objects, meta = load_artifact(path)
+        if shards is None:
+            shards = min(int(meta.get("shards", 1)), len(jax.devices()))
+        return cls(
+            ids, dists.astype(np.float32), k, objects,
+            bn=bn, shards=shards, use_pallas=use_pallas,
+        )
+
+    def to_index(self) -> KNNIndex:
+        """Read the sharded tables back into the host ``KNNIndex`` view."""
+        ids = np.asarray(self._ids_g)[self._g_of_v]
+        d = np.asarray(self._d_g)[self._g_of_v]
+        dists = np.where(ids >= 0, d.astype(np.float64), np.inf)
+        return KNNIndex(ids=ids, dists=dists, k=self.k)
+
+    @property
+    def tables(self) -> tuple[jax.Array, jax.Array]:
+        """The live sharded (S*(R+1), k) global id/dist tables."""
+        return self._ids_g, self._d_g
+
+    # ------------------------------------------------------------------
+    # device programs (cached per (device set, block, k) at module level —
+    # engines built on the same mesh/layout share one jit compile cache, so
+    # rebuilding an engine never recompiles; jit then caches per shape)
+    # ------------------------------------------------------------------
+
+    def _make_device_fns(self, k: int) -> None:
+        fns = _device_fns(self.mesh, self.shard_rows + 1, k)
+        self._gather_fn = fns["gather"]
+        self._scan_fn = fns["scan"]
+        self._purge_fn = fns["purge"]
+        self._kth_fn = fns["kth"]
+
+    # ------------------------------------------------------------------
+    # host-side routing (queries batched per shard, one roundtrip)
+    # ------------------------------------------------------------------
+
+    def _group_by_owner(
+        self, owner: np.ndarray
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+        """Stable group-by-owner-shard used by both query routing and the
+        flush's row batching: (input order permutation, owner per sorted
+        entry, slot within the owner's group, max group size)."""
+        order = np.argsort(owner, kind="stable")
+        counts = np.bincount(owner, minlength=self.num_shards)
+        starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+        o_sorted = owner[order]
+        slot = np.arange(len(owner)) - starts[o_sorted]
+        return order, o_sorted, slot, int(counts.max()) if len(owner) else 1
+
+    def _route(self, vs: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Group vertices by owner shard: ((S, Bmax) global padded rows with
+        -1 padding, (B,) flat result positions restoring the input order).
+
+        Out-of-range ids get the scalar gather's jnp indexing semantics, so
+        the bit-identical contract holds even for garbage queries: negative
+        ids wrap once from the end of the (n+1)-row table (so -1 is the
+        dummy row -> pad sentinel), everything still outside clamps into
+        [0, n], and ids >= n read a dummy row -> pad sentinel (-1, +inf).
+        """
+        r = self.shard_rows
+        vs = np.asarray(vs, np.int64)
+        vs = np.where(vs < 0, vs + self.n + 1, vs)  # jnp negative wraparound
+        vs = np.clip(vs, 0, self.n)                 # then the XLA gather clamp
+        oob = vs >= self.n
+        owner = np.minimum(vs // r, self.num_shards - 1)
+        order, o_sorted, slot, bmax = self._group_by_owner(owner)
+        bmax = _pow2_pad(bmax, lo=8)
+        qglob = np.full((self.num_shards, bmax), -1, np.int32)
+        qglob[o_sorted, slot] = np.where(
+            oob[order], -1, o_sorted * (r + 1) + vs[order] % r
+        )
+        fidx = np.empty(len(vs), dtype=np.int64)
+        fidx[order] = o_sorted * bmax + slot
+        return qglob, fidx
+
+    def _gather_batch(self, us: np.ndarray, ks: jax.Array):
+        if self.num_shards == 1:
+            # one shard: the global layout IS the scalar (n+1, k) layout and
+            # routing is the identity, so serve through the scalar gather
+            # (same jitted program the plain engine runs — 1-shard parity)
+            return ops.serve_gather(self._ids_g, self._d_g, jnp.asarray(us), ks)
+        qglob, fidx = self._route(us)
+        return self._gather_fn(
+            self._ids_g, self._d_g, jnp.asarray(qglob), jnp.asarray(fidx), ks
+        )
+
+    def _fetch_rows(self, vs: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Routed raw-row fetch (host result) for the repair halo exchange.
+
+        The fetch count is pow2-padded (duplicate fetches of vertex 0 are
+        free) so the gather's jit signature set stays bounded even though
+        every repair round asks for a different number of halo rows.
+        """
+        m = len(vs)
+        m_pad = _pow2_pad(m, lo=64)
+        vs_p = np.zeros(m_pad, np.int32)
+        vs_p[:m] = vs
+        qglob, fidx = self._route(vs_p)
+        ks = jnp.full((m_pad,), self.k, jnp.int32)
+        gi, gd = self._gather_fn(
+            self._ids_g, self._d_g, jnp.asarray(qglob), jnp.asarray(fidx), ks
+        )
+        return np.asarray(gi)[:m], np.asarray(gd)[:m]
+
+    # ------------------------------------------------------------------
+    # flush hooks (per-shard application)
+    # ------------------------------------------------------------------
+
+    def _scan_delete_rows(self, deletes: list[int]) -> np.ndarray:
+        del_arr = jnp.asarray(self._padded_deletes(deletes))
+        hits = np.asarray(self._scan_fn(self._ids_g, del_arr)).reshape(-1)
+        rows = np.flatnonzero(hits).astype(np.int32)
+        return rows[rows < self.n]  # guard: pad rows are all-pad, never hit
+
+    def _table_kth(self) -> np.ndarray:
+        kth = np.asarray(self._kth_fn(self._d_g))
+        return kth[self._g_of_v].astype(np.float64)
+
+    def _apply_rows(
+        self, rows: np.ndarray, deletes: list[int],
+        cand_ids: np.ndarray, cand_d: np.ndarray,
+    ) -> np.ndarray:
+        """Split a global row batch by owner shard and run the per-shard
+        fused purge+merge; returns the per-row changed mask (input order)."""
+        s, r = self.num_shards, self.shard_rows
+        b = len(rows)
+        order, o_sorted, slot, rmax = self._group_by_owner(rows // r)
+        rmax = _pow2_pad(rmax, lo=16)
+        p = cand_ids.shape[1]
+        rglob = np.full((s, rmax), -1, np.int32)
+        ci = np.full((s, rmax, p), -1, np.int32)
+        cd = np.full((s, rmax, p), np.inf, np.float32)
+        rglob[o_sorted, slot] = o_sorted * (r + 1) + rows[order] % r
+        ci[o_sorted, slot] = cand_ids[order]
+        cd[o_sorted, slot] = cand_d[order]
+        self._ids_g, self._d_g, changed = self._purge_fn(
+            self._ids_g, self._d_g, jnp.asarray(rglob),
+            jnp.asarray(self._padded_deletes(deletes)),
+            jnp.asarray(ci), jnp.asarray(cd),
+        )
+        changed = np.asarray(changed)
+        out = np.zeros(b, dtype=bool)
+        out[order] = changed[o_sorted, slot]
+        return out
+
+    def _purge_merge(self, rows, deletes, cand_ids, cand_d) -> None:
+        self._apply_rows(rows, deletes, cand_ids, cand_d)
+
+    def _repair_part(self, part: np.ndarray) -> np.ndarray:
+        """One per-shard Jacobi re-merge of ``part`` against its bridge
+        neighborhoods: fetch the unique neighbor rows (cross-shard halo,
+        one routed gather), build the shifted candidate lists on host, and
+        apply the shard-local merge. Identical candidate multisets to the
+        scalar engine's repair round, so the merged rows are bit-identical.
+
+        At one shard there is no boundary to exchange across — every
+        neighbor row is local — so the round degenerates to the scalar
+        engine's device-resident repair (the 1-shard global layout IS the
+        scalar (n+1, k) layout), sharing its jitted program; that is what
+        keeps the exp13 single-shard parity floor honest.
+        """
+        if self.num_shards == 1:
+            from repro.core.engine import _repair_round
+
+            nbr_tab, w_tab = self._nbr_slice(self._t_bucket(part))
+            self._ids_g, self._d_g, changed = _repair_round(
+                nbr_tab, w_tab, self._pad_rows(part), self._ids_g, self._d_g
+            )
+            return np.asarray(changed)
+        k = self.k
+        t = self._t_bucket(part)
+        nbr = self._nbr_ids[part, :t]
+        w = self._nbr_w[part, :t]
+        valid = nbr >= 0
+        uniq, inv = np.unique(nbr[valid], return_inverse=True)
+        f_ids, f_d = self._fetch_rows(uniq)
+        f_ids = np.concatenate([f_ids, np.full((1, k), -1, np.int32)])
+        f_d = np.concatenate([f_d, np.full((1, k), np.inf, np.float32)])
+        slot_idx = np.full(nbr.shape, len(uniq), dtype=np.int64)
+        slot_idx[valid] = inv
+        g_ids = f_ids[slot_idx]                    # (B, t, k)
+        g_d = w[..., None] + f_d[slot_idx]         # float32 + float32
+        cand_ids = g_ids.reshape(len(part), t * k)
+        cand_d = g_d.reshape(len(part), t * k).astype(np.float32)
+        cand_d = np.where(cand_ids < 0, np.float32(np.inf), cand_d)
+        return self._apply_rows(part, [], cand_ids, cand_d)
+
+    # ------------------------------------------------------------------
+    # persistence / stats
+    # ------------------------------------------------------------------
+
+    def _host_tables(self) -> tuple[np.ndarray, np.ndarray]:
+        # always the logical vertex-order (n, k) layout: shard padding is a
+        # runtime concern, not an artifact concern (enables reshard-on-load)
+        return (
+            np.asarray(self._ids_g)[self._g_of_v],
+            np.asarray(self._d_g)[self._g_of_v],
+        )
+
+    def _save_meta(self) -> dict:
+        return {"shards": self.num_shards, "shard_rows": self.shard_rows}
+
+    def _extra_stats(self) -> dict:
+        padded = self.num_shards * (self.shard_rows + 1)
+        return {
+            "num_shards": self.num_shards,
+            "shard_rows": self.shard_rows,
+            "padded_rows": padded,
+            "row_padding_overhead": round((padded - self.n) / max(self.n, 1), 4),
+        }

@@ -9,7 +9,6 @@ automatic psum cannot change the wire format).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -53,7 +52,6 @@ def make_compressed_grad_reduce(mesh, axis_names: tuple[str, ...]):
     def reduce_tree(grads, residuals):
         return jax.tree.map(reduce_one, grads, residuals)
 
-    spec = P()
 
     def wrapped(grads, residuals):
         flat_g, treedef = jax.tree_util.tree_flatten(grads)

@@ -19,10 +19,8 @@ Recovery contract (1000+-node posture):
 """
 from __future__ import annotations
 
-import math
 from typing import Sequence
 
-import jax
 from jax.sharding import Mesh
 
 

@@ -219,6 +219,91 @@ def rows_purge_merge(
     return vk_ids.at[rows].set(m_ids), vk_d.at[rows].set(m_d)
 
 
+# ----------------------------------------------------------------------
+# Shard-local variants (for use inside ``shard_map`` blocks).
+#
+# The sharded engine (core/sharded.py) stores the (n+1, k) tables row-sharded
+# across a 1-D mesh: shard ``s`` owns the contiguous vertex range
+# [s*R, (s+1)*R) as a local (R+1, k) block whose last row is that shard's own
+# dummy gather row. These variants are trace-level functions called from
+# inside a ``shard_map`` body: they take the shard's *global* row ids plus the
+# shard's ``row_offset`` (= s*R) and localize on device, so the host routes
+# work by owner without rewriting indices per shard. Padded slots use global
+# row id -1 (-> the local dummy row).
+# ----------------------------------------------------------------------
+
+
+def shard_local_rows(block_rows: int, rows: jax.Array, row_offset) -> jax.Array:
+    """Global row ids -> local block rows; -1 (padding) -> the local dummy."""
+    return jnp.where(rows < 0, block_rows - 1, rows - row_offset)
+
+
+def shard_gather_rows(
+    vk_ids: jax.Array,   # (R+1, k) int32 shard-local table block (dummy row last)
+    vk_d: jax.Array,     # (R+1, k) float32
+    rows: jax.Array,     # (B,) int32 GLOBAL row ids owned by this shard, -1 pad
+    row_offset,          # scalar int32: first global row owned by this shard
+) -> tuple[jax.Array, jax.Array]:
+    """Shard-local ``serve_gather``: one row gather out of this shard's block.
+
+    Padded query slots (-1) read the shard's dummy row and come back as the
+    pad sentinel (-1, +inf); the caller drops them when reassembling the
+    per-shard result tiles into the original batch order.
+    """
+    loc = shard_local_rows(vk_ids.shape[0], rows, row_offset)
+    return vk_ids[loc], vk_d[loc]
+
+
+def shard_rows_containing(
+    vk_ids: jax.Array,   # (R+1, k) int32 shard-local table block
+    obj_ids: jax.Array,  # (D,) int32 deleted object ids (global, replicated)
+) -> jax.Array:
+    """(R,) bool: which of this shard's rows hold any of ``obj_ids``.
+
+    The per-shard half of ``rows_containing``: each shard scans only its own
+    block and the host concatenates the per-shard hit masks back into global
+    vertex ids (rows past n in the last shard are all-pad, so never hit).
+    """
+    return (vk_ids[:-1, :, None] == obj_ids[None, None, :]).any(axis=(1, 2))
+
+
+def shard_rows_purge_merge(
+    vk_ids: jax.Array,    # (R+1, k) int32 shard-local table block
+    vk_d: jax.Array,      # (R+1, k) float32
+    rows: jax.Array,      # (B,) int32 GLOBAL row ids owned by this shard, -1 pad
+    row_offset,           # scalar int32: first global row owned by this shard
+    del_ids: jax.Array,   # (D,) int32 deleted object ids (global, replicated)
+    cand_ids: jax.Array,  # (B, P) int32 new candidates per row, -1 = padding
+    cand_d: jax.Array,    # (B, P) float32
+    k: int,
+    *,
+    use_pallas: bool = False,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Shard-local ``rows_purge_merge`` + per-row changed mask.
+
+    Identical math to the global op (gather own rows, drop deleted entries,
+    merge candidates, recompact, scatter back into the block) over this
+    shard's slice of the row batch; additionally returns the (B,) changed
+    mask the repair rounds use to narrow the next round's frontier, so one
+    op serves both the flush's purge+merge pass and each Jacobi repair round.
+    Object ids in the table are global vertex ids, so the purge membership
+    test needs no localization — only the row indices do.
+    """
+    loc = shard_local_rows(vk_ids.shape[0], rows, row_offset)
+    own_ids = vk_ids[loc]
+    own_d = vk_d[loc]
+    hit = (own_ids[:, :, None] == del_ids[None, None, :]).any(axis=-1)
+    pid = jnp.where(hit, -1, own_ids)
+    pd = jnp.where(hit, jnp.inf, own_d)
+    cat_ids = jnp.concatenate([pid, cand_ids], axis=1)
+    cat_d = jnp.concatenate([pd, cand_d.astype(vk_d.dtype)], axis=1)
+    cat_d = jnp.where(cat_ids < 0, jnp.inf, cat_d)
+    m_ids, m_d = topk_merge(cat_ids, cat_d, k, use_pallas=use_pallas, interpret=interpret)
+    changed = jnp.any((m_ids != own_ids) | (m_d != own_d), axis=1)
+    return vk_ids.at[loc].set(m_ids), vk_d.at[loc].set(m_d), changed
+
+
 @functools.partial(jax.jit, static_argnames=("k", "use_pallas", "interpret"))
 def rows_purge(
     vk_ids: jax.Array,   # (n+1, k) int32 live table

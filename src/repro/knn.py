@@ -20,9 +20,12 @@ Moving-fleet serving (see ``repro.workloads``): ``FleetSim`` drives vehicles
 along shortest-path trips and each ``sim.tick()`` yields the (src, dst) moves
 to stage; ``flush_updates`` applies them as one fused device batch.
 
-Later scaling PRs (sharding, caching, async serving) build on this module;
-everything re-exported here is covered by the equivalence tests, so internal
-layouts may change under it without breaking callers.
+Multi-device serving: ``build_sharded_engine`` (and ``load_engine(...,
+shards=N)``) returns a ``ShardedQueryEngine`` — the same surface served from
+vertex-sharded tables on a 1-D device mesh, exactly equivalent to the scalar
+engine (tests/core/test_sharded.py). Everything re-exported here is covered
+by the equivalence tests, so internal layouts may change under it without
+breaking callers.
 """
 from __future__ import annotations
 
@@ -33,6 +36,7 @@ from repro.core.construct_jax import build_knn_index_jax, build_knn_tables_jax
 from repro.core.engine import QueryEngine
 from repro.core.index import KNNIndex, indices_equivalent
 from repro.core.reference import knn_index_cons_plus
+from repro.core.sharded import ShardedQueryEngine, make_mesh
 from repro.core.updates import delete_object, insert_object, move_object
 from repro.graph.csr import Graph
 from repro.graph.generators import pick_objects, road_network
@@ -44,16 +48,19 @@ __all__ = [
     "Graph",
     "KNNIndex",
     "QueryEngine",
+    "ShardedQueryEngine",
     "build_bngraph",
     "build_engine",
     "build_index",
     "build_knn_index_jax",
     "build_knn_tables_jax",
+    "build_sharded_engine",
     "delete_object",
     "indices_equivalent",
     "insert_object",
     "knn_index_cons_plus",
     "load_engine",
+    "make_mesh",
     "move_object",
     "pick_objects",
     "road_network",
@@ -85,23 +92,64 @@ def build_index(
     return build_knn_index_jax(bn, objects, k, use_pallas=use_pallas)
 
 
+def build_sharded_engine(
+    graph: Graph | BNGraph,
+    objects: np.ndarray,
+    k: int,
+    *,
+    shards: int | None = None,
+    use_pallas: bool = False,
+) -> ShardedQueryEngine:
+    """Road network -> vertex-sharded multi-device serving engine.
+
+    ``shards=None`` spans every visible device (on CPU, set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before process
+    start). The sharded engine serves the exact same results as the scalar
+    one; see ``repro.core.sharded`` for the partitioned layout.
+    """
+    bn = graph if isinstance(graph, BNGraph) else build_bngraph(graph)
+    return ShardedQueryEngine.build(bn, objects, k, shards=shards, use_pallas=use_pallas)
+
+
 def load_engine(
-    path, *, bn: BNGraph | None = None, use_pallas: bool = False
-) -> QueryEngine:
-    """Load a ``QueryEngine.save`` / ``knn_build --out`` artifact."""
+    path,
+    *,
+    bn: BNGraph | None = None,
+    shards: int | None = None,
+    use_pallas: bool = False,
+) -> QueryEngine | ShardedQueryEngine:
+    """Load a ``QueryEngine.save`` / ``knn_build --out`` artifact.
+
+    ``shards=N`` loads into a ``ShardedQueryEngine`` at N shards regardless
+    of how many shards wrote the artifact (reshard-on-load: the artifact
+    stores the logical vertex-order tables). ``shards=None`` keeps the
+    scalar engine.
+    """
+    if shards is not None:
+        return ShardedQueryEngine.load(path, bn=bn, shards=shards, use_pallas=use_pallas)
     return QueryEngine.load(path, bn=bn, use_pallas=use_pallas)
 
 
-def stage_random_updates(engine: QueryEngine, mset: set, rng, count: int) -> int:
+def stage_random_updates(engine: QueryEngine, mset: set, rng=None, count: int = 1) -> int:
     """Stage ``count`` random net object updates (the benchmark workload mix).
 
-    Draws uniform vertices: a present one is staged for deletion (skipped
-    while |M| <= k+1 so rows stay full through the churn), an absent one for
-    insertion. ``mset`` is the caller's membership mirror and is kept in
-    sync. Returns the number staged — possibly fewer than ``count`` when the
-    draw budget runs out (e.g. every vertex is an object but |M| <= k+1, so
+    Draws uniform vertices from the engine's *global* vertex set
+    ``[0, engine.n)`` (a sharded engine is driven identically — routing by
+    owner happens at flush time): a present one is staged for deletion
+    (skipped while |M| <= k+1 so rows stay full through the churn), an
+    absent one for insertion. ``mset`` is the caller's membership mirror and
+    is kept in sync.
+
+    ``rng`` may be a ``numpy.random.Generator``, an int seed, or None — the
+    default is a fresh ``np.random.default_rng(0)``, so repeated runs that
+    rely on the default draw the SAME update sequence (reproducible
+    benchmarks; pass ``serve.py --seed`` / your own generator to vary it).
+    Returns the number staged — possibly fewer than ``count`` when the draw
+    budget runs out (e.g. every vertex is an object but |M| <= k+1, so
     nothing is stageable); the caller decides when to flush.
     """
+    if rng is None or isinstance(rng, (int, np.integer)):
+        rng = np.random.default_rng(0 if rng is None else int(rng))
     staged = 0
     for _ in range(max(16, 16 * count)):
         if staged >= count:

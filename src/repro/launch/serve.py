@@ -24,6 +24,19 @@ batches interleave. Reports sustained ticks/s and query p50/p99:
 
   PYTHONPATH=src python -m repro.launch.serve --arch knn-index --smoke \
       --workload fleet --fleet-size 96 --ticks 50 --batch 256
+
+``--shards N`` serves from the vertex-sharded multi-device engine
+(``ShardedQueryEngine``) instead — same results, tables row-partitioned
+across N devices. On CPU, force the device count first:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python -m repro.launch.serve --arch knn-index --smoke \
+      --shards 8 --batch 1024 --ops 20000
+
+``--seed`` seeds everything host-side — the network, the object draw, the
+query stream AND the staged-update stream (it threads into
+``knn.stage_random_updates`` / ``FleetSim``), so two runs with the same seed
+serve the identical op sequence; the default seed is 0.
 """
 from __future__ import annotations
 
@@ -88,6 +101,18 @@ def serve_lm(args) -> np.ndarray:
     return out
 
 
+def _build_knn_engine(args, bn, objects, k: int):
+    """Scalar or sharded engine, per ``--shards`` (the serving loops are
+    engine-agnostic: both expose the same query/stage/flush surface)."""
+    from repro import knn
+
+    if args.shards:
+        return knn.build_sharded_engine(
+            bn, objects, k, shards=args.shards, use_pallas=args.use_pallas
+        )
+    return knn.QueryEngine.build(bn, objects, k, use_pallas=args.use_pallas)
+
+
 def serve_knn_fleet(args, g, bn, k: int, batch: int, t_bn: float) -> dict:
     """Moving-fleet serving loop: fused ``stage_move`` flushes per tick."""
     from repro import knn
@@ -95,7 +120,7 @@ def serve_knn_fleet(args, g, bn, k: int, batch: int, t_bn: float) -> dict:
 
     sim = knn.FleetSim(g, fleet_size=args.fleet_size, seed=args.seed)
     t0 = time.perf_counter()
-    engine = knn.QueryEngine.build(bn, sim.positions, k, use_pallas=args.use_pallas)
+    engine = _build_knn_engine(args, bn, sim.positions, k)
     t_build = time.perf_counter() - t0
 
     rng = np.random.default_rng(args.seed + 1)
@@ -155,14 +180,18 @@ def serve_knn(args) -> dict:
     if args.artifact:
         # The artifact must come from the same (grid, seed) network: the
         # engine stores tables + objects, the BN-Graph supplies adjacency.
-        engine = knn.load_engine(args.artifact, bn=bn, use_pallas=args.use_pallas)
+        # --shards reshards it on load (the artifact layout is shard-free).
+        engine = knn.load_engine(
+            args.artifact, bn=bn, shards=args.shards or None,
+            use_pallas=args.use_pallas,
+        )
         if engine.n != g.n or engine.k != k:
             raise SystemExit(
                 f"artifact shape (n={engine.n}, k={engine.k}) does not match "
                 f"--grid/--k (n={g.n}, k={k})"
             )
     else:
-        engine = knn.QueryEngine.build(bn, objects, k, use_pallas=args.use_pallas)
+        engine = _build_knn_engine(args, bn, objects, k)
     t_build = time.perf_counter() - t0
 
     rng = np.random.default_rng(args.seed + 1)
@@ -229,7 +258,10 @@ def main():
     ap.add_argument("--grid", type=int, default=None, help="grid side; n = grid^2")
     ap.add_argument("--k", type=int, default=None)
     ap.add_argument("--mu", type=float, default=0.02)
-    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="seeds the network, object draw, query stream and "
+                         "the staged-update stream (stage_random_updates / "
+                         "FleetSim), so equal seeds replay identical traffic")
     ap.add_argument("--ops", type=int, default=50_000)
     ap.add_argument("--update-frac", type=float, default=0.05)
     ap.add_argument("--workload", choices=("random", "fleet"), default="random",
@@ -239,6 +271,11 @@ def main():
     ap.add_argument("--ticks", type=int, default=50,
                     help="fleet workload: serving ticks (one flush per tick)")
     ap.add_argument("--artifact", default=None, help="serve a knn_build --out npz")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="serve from the vertex-sharded multi-device engine "
+                         "with this many shards (0 = scalar engine); needs "
+                         ">= N visible devices, e.g. "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=N")
     ap.add_argument("--use-pallas", action="store_true")
     args = ap.parse_args()
 

@@ -11,7 +11,6 @@ import argparse
 import time
 
 import jax
-import numpy as np
 
 from repro.checkpoint import manager as ckpt
 from repro.configs.registry import get_arch

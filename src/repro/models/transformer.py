@@ -121,7 +121,6 @@ def param_specs(cfg: TransformerConfig, rules) -> dict:
     heads_tp = tp if (tp and cfg.n_heads % rules.tp_size == 0) else None
     kv_tp = tp if (tp and cfg.n_kv_heads % rules.tp_size == 0) else None
     vocab_tp = rules.ax(tp, cfg.vocab)
-    vocab_fsdp = rules.ax(rules.fsdp, cfg.vocab)
     L = None  # stacked layer dim is never sharded
 
     def dense_s(a, b, bias):

@@ -159,11 +159,17 @@ class FleetSim:
 
 def drive_fleet_ticks(engine, tick_moves, *, batch: int, rng, split: bool = False) -> dict:
     """The moving-fleet serving loop shared by serve.py, the road-service
-    example and exp12: for every tick's move batch, stage the movement
+    example and exp12/exp13: for every tick's move batch, stage the movement
     (fused ``stage_move``, or — ``split=True``, the benchmark baseline — a
     delete flush followed by staged inserts), serve one timed query batch,
     then flush. ``tick_moves`` is any iterable of (src, dst) move lists:
     live ``FleetSim.tick()`` calls or a pre-generated trace being replayed.
+
+    The loop is engine-agnostic: ``engine`` is anything exposing the
+    ``EngineCore`` serving surface (``stage_move``/``stage_delete``/
+    ``stage_insert``, ``flush_updates``, ``query_batch``, ``n``) — the
+    scalar ``QueryEngine`` and the multi-device ``ShardedQueryEngine`` are
+    driven identically, which is how exp13 compares them on one trace.
 
     Returns ``{"wall_s", "ticks", "moves", "lat"}`` with ``lat`` the
     per-tick query-batch latencies in seconds (percentile material).

@@ -1,5 +1,4 @@
 """TEN-Index-lite baseline: correct kNN + H2H-dominated size profile."""
-import numpy as np
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

@@ -1,12 +1,16 @@
 """Algorithms 4/5 (object insert/delete/move) vs rebuild-from-scratch.
 
-The property covers both update paths: the scalar host oracle
-(insert_object/delete_object/move_object, one op at a time) AND the
+The property covers every update path, four ways: the scalar host oracle
+(insert_object/delete_object/move_object, one op at a time), the
 QueryEngine's batched staged equivalents (stage_* + flush_updates at random
-points, moves included in the interleaving) must land indices_equivalent to
-a fresh knn_index_cons_plus rebuild on the final object set — and therefore
-to each other.
+points, moves included in the interleaving) AND the multi-device
+ShardedQueryEngine replaying the identical staged script must all land
+indices_equivalent to a fresh knn_index_cons_plus rebuild on the final
+object set — and therefore to each other. The two engines are additionally
+held to *exact* table equivalence after every flush (the sharded flush is
+the same math, only partitioned by vertex owner).
 """
+import jax
 import numpy as np
 import pytest
 from hypothesis import given, settings
@@ -16,6 +20,7 @@ from repro.core.bngraph import build_bngraph
 from repro.core.engine import QueryEngine
 from repro.core.index import indices_equivalent
 from repro.core.reference import knn_index_cons_plus
+from repro.core.sharded import ShardedQueryEngine
 from repro.core.updates import delete_object, insert_object, move_object
 from repro.graph.generators import pick_objects, random_connected_graph, road_network
 
@@ -41,6 +46,10 @@ def test_mixed_updates_match_rebuild(p):
     obj0 = np.array(sorted(objects))
     idx = knn_index_cons_plus(bn, obj0, k)
     engine = QueryEngine.from_index(idx, obj0, bn=bn)
+    # the fourth party: the same staged script through the sharded engine
+    # (multi-shard when the device pool allows it, see the CI device matrix)
+    shards = min(2, len(jax.devices()), n)
+    sharded = ShardedQueryEngine.from_index(idx, obj0, bn=bn, shards=shards)
     for _ in range(n_updates):
         u = int(rng.integers(0, n))
         r = rng.random()
@@ -51,6 +60,7 @@ def test_mixed_updates_match_rebuild(p):
             dst = int(rng.choice(outside))
             move_object(bn, idx, src, dst)
             engine.stage_move(src, dst)
+            sharded.stage_move(src, dst)
             objects.discard(src)
             objects.add(dst)
         elif u in objects:
@@ -58,18 +68,28 @@ def test_mixed_updates_match_rebuild(p):
                 continue
             delete_object(bn, idx, u)
             engine.stage_delete(u)
+            sharded.stage_delete(u)
             objects.discard(u)
         else:
             insert_object(bn, idx, u)
             engine.stage_insert(u)
+            sharded.stage_insert(u)
             objects.add(u)
         if rng.random() < 0.3:  # flush at random interleaving points
-            engine.flush_updates()
+            assert engine.flush_updates() == sharded.flush_updates()
+            a, b = engine.to_index(), sharded.to_index()
+            assert np.array_equal(a.ids, b.ids)  # exact, not just equivalent
+            assert np.array_equal(a.dists, b.dists)
     engine.flush_updates()
+    sharded.flush_updates()
     fresh = knn_index_cons_plus(bn, np.array(sorted(objects)), k)
     assert indices_equivalent(fresh, idx)
     assert indices_equivalent(fresh, engine.to_index())
     assert indices_equivalent(idx, engine.to_index())
+    assert indices_equivalent(fresh, sharded.to_index())
+    a, b = engine.to_index(), sharded.to_index()
+    assert np.array_equal(a.ids, b.ids)
+    assert np.array_equal(a.dists, b.dists)
 
 
 def test_insert_then_delete_roundtrip():

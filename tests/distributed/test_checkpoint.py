@@ -1,5 +1,4 @@
 """Checkpoint manager: atomic commit, resume, pruning."""
-import json
 import os
 
 import jax

@@ -1,7 +1,5 @@
 """Distributed-semantics tests under 8 fake CPU devices (subprocesses, so the
 main pytest process keeps its single real device)."""
-import numpy as np
-import pytest
 
 from conftest import run_devices_subprocess
 

@@ -1,11 +1,8 @@
 """Launcher-level tests: dry-run machinery on a small mesh, HLO parsing,
 end-to-end train driver with checkpoint resume."""
-import re
 import subprocess
 import sys
 
-import numpy as np
-import pytest
 
 from conftest import REPO, run_devices_subprocess
 from repro.launch.hlo_analysis import _shape_bytes, collective_stats
