@@ -122,6 +122,32 @@ def main():
     print(f"reshard-on-load equivalent: "
           f"{indices_equivalent(sharded.to_index(), resharded.to_index())}")
 
+    print("\n== 9. batched checkIns frontier (device-resident insert flushes) ==")
+    # A flush with many staged inserts runs Algorithm 4's checkIns frontier
+    # for the WHOLE batch as one multi-source pruned-relaxation program on
+    # device: round r relaxes the BNS edges of every vertex whose tentative
+    # distance changed in round r-1, pruned by the live k-th-distance column
+    # (which never leaves the device — only changed-row masks and the final
+    # affected rows' distances come back). The pre-batching pipeline — one
+    # host heap search per object fed by an (n,) kth readback — survives as
+    # engine.frontier = "host"; both produce identical tables, so the choice
+    # is purely a throughput knob (exp14: device >= 1.3x at batch 512).
+    batch_engine = knn.build_engine(bn, objects, k)
+    absent = np.setdiff1d(np.arange(g.n), objects)[:64]
+    for v in absent:
+        batch_engine.stage_insert(int(v))
+    flush = batch_engine.flush_updates()
+    print(f"staged {len(absent)} inserts -> one flush: "
+          f"{flush['rows_merged']} rows merged in "
+          f"{flush['frontier_rounds']} frontier rounds")
+    st = batch_engine.stats()
+    # per-phase flush timings (cumulative): where a flush actually spends
+    # its time — frontier search vs fused purge+merge vs delete repair
+    print("per-phase flush seconds: "
+          f"frontier={st['t_frontier_s']:.4f} "
+          f"purge_merge={st['t_purge_merge_s']:.4f} "
+          f"repair={st['t_repair_s']:.4f}")
+
 
 if __name__ == "__main__":
     main()

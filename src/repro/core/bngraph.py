@@ -28,7 +28,7 @@ import heapq
 
 import numpy as np
 
-from repro.graph.csr import Graph
+from repro.graph.csr import Graph, PaddedCSR, padded_csr
 
 
 @dataclasses.dataclass
@@ -100,6 +100,28 @@ class BNGraph:
 
     def bns(self, v: int) -> list[tuple[int, float]]:
         return self.bns_lower(v) + self.bns_higher(v)
+
+    def bns_packed(self) -> PaddedCSR:
+        """Combined BNS^< + BNS^> adjacency as one ``PaddedCSR`` (cached).
+
+        The padded ``(n+1, t)`` tables (valid-first compacted, dummy row
+        last, float32 weights) are the layout every batched device pass over
+        BNS neighborhoods gathers from — the engine repair rounds and the
+        batched checkIns frontier upload per-width-bucket column slices of
+        them once and reuse them across flushes, replacing the per-vertex
+        host ``bns()`` walk. The CSR triple serves host-side set algebra
+        (e.g. expanding a changed-vertex frontier to its receiver set).
+        Built on first use and memoized on the instance; treat the BNGraph
+        as immutable once handed to an engine.
+        """
+        packed = getattr(self, "_bns_packed", None)
+        if packed is None:
+            packed = padded_csr(
+                np.concatenate([self.lo_ids, self.hi_ids], axis=1),
+                np.concatenate([self.lo_w, self.hi_w], axis=1),
+            )
+            self._bns_packed = packed
+        return packed
 
     def adjacency(self) -> list[dict[int, float]]:
         adj: list[dict[int, float]] = [dict() for _ in range(self.n)]

@@ -28,12 +28,16 @@ jitted form:
 
   Application is a single fused pipeline, not a delete pass chased by an
   insert pass: one device scan finds every row naming a deleted object
-  (``ops.rows_containing``); the checkIns frontier
-  (``updates.insert_affected_set``, shared with the host oracle) runs against
-  the pre-update k-th distances — insert-first semantics, the same order the
-  scalar ``move_object`` oracle uses; any insert-affected row the pruning
-  misses lost an entry to the deletions and is repaired as part of the purge
-  set (see ``flush_updates``); then one ``ops.rows_purge_merge`` over
+  (``ops.rows_containing``); the checkIns frontier for ALL staged inserts
+  runs as one jitted multi-source pruned-relaxation program on device
+  (``ops.frontier_relax`` rounds with changed-frontier narrowing — see
+  ``EngineCore._insert_frontier``; the host ``updates.insert_affected_set``
+  heap search survives as the per-object oracle and as the ``frontier =
+  "host"`` baseline pipeline) against the pre-update k-th distances —
+  insert-first semantics, the same order the scalar ``move_object`` oracle
+  uses; any insert-affected row the pruning misses lost an entry to the
+  deletions and is repaired as part of the purge set (see
+  ``flush_updates``); then one ``ops.rows_purge_merge`` over
   the union of the hit rows and the frontier drops the deleted entries,
   merges the insert candidates and recompacts every affected row in a single
   gather/merge/scatter. Jacobi rounds of the construction merge
@@ -62,15 +66,19 @@ until ``flush_updates``, which is exactly the paper's batch-update-arrival
 with periodic update batches without locking.
 
 Host/device traffic per flush: the update script and affected-row indices go
-up; a changed-row mask per repair round (which narrows the next round's
-frontier) and one (n,) k-th-distance column (the checkIns pruning bound)
-come back. Queries move only the query ids up and the (B, k) result tiles
-back.
+up; a changed-row mask per frontier/repair round (which narrows the next
+round's receiver set) and, once the frontier converges, the affected rows'
+distance tiles come back. The (n,) k-th-distance column — the checkIns
+pruning bound — never leaves the device: the frontier rounds read it
+straight off the live distance table, so per-flush readback is proportional
+to the affected set, not to n. Queries move only the query ids up and the
+(B, k) result tiles back.
 
 Everything above that is *layout-independent* — the staged queue and its
 coalescing, query stat bookkeeping, the flush orchestration (delete scan ->
-checkIns frontier -> fused purge+merge -> breadth-first repair with its
-changed-row frontier narrowing), persistence and the stats surface — lives
+batched device checkIns frontier -> fused purge+merge -> breadth-first
+repair with its changed-row frontier narrowing), persistence and the stats
+surface (including the per-phase flush timings) — lives
 in ``EngineCore``. ``QueryEngine`` supplies the single-device table layout
 and device ops; ``repro.core.sharded.ShardedQueryEngine`` supplies the
 vertex-sharded multi-device layout on top of the same core, which is what
@@ -79,7 +87,9 @@ tests/core/test_sharded.py).
 """
 from __future__ import annotations
 
+import functools
 import json
+import time
 from typing import Iterator
 
 import jax
@@ -112,16 +122,26 @@ class EngineCore:
       per-query width slice).
     * ``_scan_delete_rows(deletes)`` — global row ids naming any deleted
       object (the vectorized checkDel membership scan).
-    * ``_table_kth()`` — the (n,) k-th-distance column (float64 host array),
-      the checkIns pruning bound.
     * ``_purge_merge(rows, deletes, cand_ids, cand_d)`` — the fused
       purge + candidate merge over one (unpadded) global row batch.
     * ``_repair_part(part)`` — one Jacobi re-merge of ``part`` rows against
       their bridge neighborhoods; returns the per-row changed mask.
+    * the frontier provider seam — ``_frontier_init(src)`` allocates the
+      multi-source tentative-distance state for one staged insert batch,
+      ``_frontier_part(state, part)`` runs one pruned-relaxation round over
+      a receiver-row bucket (returning the new state + changed mask), and
+      ``_frontier_extract(state, rows, src)`` reads back the affected mask
+      and distances for the touched rows. The round loop, receiver-set
+      expansion, bucketing and candidate compaction run here
+      (``_insert_frontier``), so the scalar and sharded frontiers share one
+      trajectory and cannot drift.
+    * ``_table_kth()`` — the (n,) k-th-distance column (float64 host
+      array). Only the ``frontier = "host"`` baseline pipeline reads it;
+      the device frontier keeps the column on device end to end.
     * ``_host_tables()`` — the logical (n, k) id/dist tables for ``save``.
     * ``to_index()`` — readback into the host ``KNNIndex`` view.
 
-    The flush pipeline, the repair rounds' frontier narrowing and all
+    The flush pipeline, the frontier/repair rounds' narrowing and all
     validation/coalescing/stat bookkeeping run here, once, so a sharded
     engine cannot drift from the scalar one in anything but the device
     layout.
@@ -132,6 +152,7 @@ class EngineCore:
         self.k = int(k)
         self.use_pallas = bool(use_pallas)
         self.bn = bn
+        self.frontier = "device"  # validated setter, see the property below
         obj = {int(o) for o in np.asarray(objects).ravel()}
         self._objects = obj
         self._pending = set(obj)
@@ -151,7 +172,29 @@ class EngineCore:
             "coalesced": 0,
             "rows_repaired": 0,
             "repair_rounds_last": 0,
+            "frontier_rounds_last": 0,
+            "t_frontier_s": 0.0,
+            "t_purge_merge_s": 0.0,
+            "t_repair_s": 0.0,
         }
+
+    @property
+    def frontier(self) -> str:
+        """Which checkIns pipeline ``flush_updates`` runs: ``"device"``
+        (default) is the batched multi-source ``ops.frontier_relax`` rounds;
+        ``"host"`` replays the per-object ``insert_affected_set`` heap
+        search (kept as the measurable baseline — see benchmarks exp14 —
+        and as the oracle's twin). A plain attribute rather than a
+        constructor knob: flipping pipelines mid-life is safe (both produce
+        identical tables); anything but the two known modes raises so a
+        typo cannot silently select the wrong pipeline."""
+        return self._frontier
+
+    @frontier.setter
+    def frontier(self, mode: str) -> None:
+        if mode not in ("device", "host"):
+            raise ValueError(f"frontier must be 'device' or 'host', got {mode!r}")
+        self._frontier = mode
 
     @staticmethod
     def normalize_tables(
@@ -297,27 +340,23 @@ class EngineCore:
         return np.array(sorted(self._objects), dtype=np.int32)
 
     def _nbr_tables(self) -> None:
-        """Combined BNS^< + BNS^> adjacency (host side), width-compacted.
+        """Bind the BN-Graph's combined BNS adjacency (``bns_packed``).
 
         Valid neighbors are compacted to the front of each row so that a row
-        with degree d is fully described by the first d columns; repair
-        rounds then run on the (n+1, t) column slice of the smallest pow4
-        bucket t >= the batch rows' max degree instead of the global tau',
-        mirroring the construction sweeps' shape bucketing.
+        with degree d is fully described by the first d columns; frontier and
+        repair rounds then run on the (n+1, t) column slice of the smallest
+        pow4 bucket t >= the batch rows' max degree instead of the global
+        tau', mirroring the construction sweeps' shape bucketing. The padded
+        host tables are built once per BNGraph and shared across engines;
+        the per-width device slices are cached per engine (``_nbr_slice``).
         """
         if self._nbr_ids is None:
-            bn = self.bn
-            nbr = np.concatenate([bn.lo_ids, bn.hi_ids], axis=1).astype(np.int32)
-            w = np.concatenate([bn.lo_w, bn.hi_w], axis=1).astype(np.float32)
-            w[nbr < 0] = np.inf
-            order = np.argsort(nbr < 0, axis=1, kind="stable")  # valid first
-            nbr = np.take_along_axis(nbr, order, axis=1)
-            w = np.take_along_axis(w, order, axis=1)
-            nbr = np.concatenate([nbr, np.full((1, nbr.shape[1]), -1, np.int32)])
-            w = np.concatenate([w, np.full((1, w.shape[1]), np.inf, np.float32)])
-            self._nbr_deg = (nbr >= 0).sum(axis=1).astype(np.int32)
-            self._nbr_ids = nbr
-            self._nbr_w = w
+            packed = self.bn.bns_packed()
+            self._nbr_ids = packed.ids
+            self._nbr_w = packed.w
+            self._nbr_deg = packed.deg
+            self._nbr_indptr = packed.indptr
+            self._nbr_indices = packed.indices
 
     def _t_bucket(self, rows: np.ndarray) -> int:
         """Smallest pow4 width (>= 8) covering the rows' max BNS degree."""
@@ -371,6 +410,33 @@ class EngineCore:
     def _repair_part(self, part: np.ndarray) -> np.ndarray:
         raise NotImplementedError
 
+    def _frontier_init(self, src: np.ndarray):
+        raise NotImplementedError
+
+    def _frontier_part(self, state, part: np.ndarray):
+        raise NotImplementedError
+
+    def _frontier_extract(self, state, rows: np.ndarray, src: np.ndarray):
+        raise NotImplementedError
+
+    def _bucket_parts(self, rows: np.ndarray):
+        """Split a row batch by BNS-degree width bucket (8/32/128/tau').
+
+        Shared by the repair and frontier rounds: each part runs against the
+        (n+1, t) adjacency slice of its bucket so the per-round candidate
+        work is sized to the batch, not to the global tau'. The split is a
+        pure function of the row ids, so the scalar and sharded engines
+        partition identically (their round trajectories must match).
+        """
+        deg = self._nbr_deg[rows]
+        cap = self._nbr_ids.shape[1]
+        prev = 0
+        for t in [b for b in (8, 32, 128) if b < cap] + [cap]:
+            part = rows[(deg > prev) & (deg <= t)]
+            prev = t
+            if part.size:
+                yield part
+
     def _repair(self, rows: np.ndarray) -> int:
         """Jacobi repair rounds over the purged rows; returns the round count.
 
@@ -389,14 +455,7 @@ class EngineCore:
         rounds = 0
         while active.size and rounds < _MAX_REPAIR_ROUNDS:
             changed_parts = []
-            deg = self._nbr_deg[active]
-            cap = self._nbr_ids.shape[1]
-            prev = 0
-            for t in [b for b in (8, 32, 128) if b < cap] + [cap]:
-                part = active[(deg > prev) & (deg <= t)]
-                prev = t
-                if part.size == 0:
-                    continue
+            for part in self._bucket_parts(active):
                 changed_mask = self._repair_part(part)
                 changed_parts.append(part[changed_mask[: part.size]])
             rounds += 1
@@ -419,6 +478,131 @@ class EngineCore:
                     f"{_MAX_REPAIR_ROUNDS} rounds"
                 )
         return rounds
+
+    def _frontier_pad_src(self, src: np.ndarray) -> np.ndarray:
+        """Pad the staged-insert sources to a pow2 column count (-1 pads).
+
+        Bounds the distinct jit signatures across flush sizes, exactly like
+        ``_pad_rows`` does for row batches; the Pallas relax kernel wants a
+        lane-aligned column count, so that path pads to 128 columns.
+        """
+        b = _pow2_pad(len(src), lo=(128 if self.use_pallas else 8))
+        out = np.full(b, -1, np.int32)
+        out[: len(src)] = src
+        return out
+
+    def _insert_frontier(
+        self, inserts: list[int]
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+        """Batched checkIns frontier on device: Algorithm 4 lines 1-8 for
+        ALL staged inserts as one multi-source pruned-relaxation program.
+
+        Round r relaxes the BNS edges of every vertex whose tentative
+        distance changed in round r-1 (round 1: the sources themselves),
+        pruned on device by the live k-th-distance column — the checkIns
+        test ``d < kth[w]``. Only changed-row masks and, after convergence,
+        the affected rows' distance tiles cross the host boundary; the
+        (n,) kth column never does. Returns ``(rows, cand_ids, cand_d,
+        rounds)``: the affected rows (sorted) with their per-row compacted
+        (inserted object, exact distance) candidate lists — the same
+        contract as the ``frontier = "host"`` pipeline, which it is
+        property-tested exact-set-equal against (the pruned-relaxation
+        fixpoint is schedule-independent, so the Dijkstra oracle and these
+        Jacobi rounds land on identical sets and distances).
+        """
+        self._nbr_tables()
+        src = np.asarray(inserts, np.int32)
+        state = self._frontier_init(src)
+        active = np.unique(src)
+        touched = [active]
+        rounds = 0
+        while active.size and rounds < _MAX_REPAIR_ROUNDS:
+            nbrs = self._expand_receivers(active)
+            changed_parts = []
+            for part in self._bucket_parts(nbrs):
+                state, changed_mask = self._frontier_part(state, part)
+                changed_parts.append(part[changed_mask[: part.size]])
+            rounds += 1
+            active = (
+                np.concatenate(changed_parts)
+                if changed_parts
+                else np.empty(0, np.int32)
+            )
+            if active.size:
+                touched.append(active)
+        if active.size:
+            raise RuntimeError(
+                f"checkIns frontier did not reach a fixpoint in "
+                f"{_MAX_REPAIR_ROUNDS} rounds"
+            )
+        rows = np.unique(np.concatenate(touched)).astype(np.int32)
+        aff, dvals = self._frontier_extract(state, rows, src)
+        return (*self._compact_candidates(rows, aff, dvals, src), rounds)
+
+    def _expand_receivers(self, active: np.ndarray) -> np.ndarray:
+        """Next round's receiver set: the union of BNS neighborhoods of the
+        changed vertices, via the packed adjacency's CSR triple (touches
+        exactly the live edges, no padded columns)."""
+        starts = self._nbr_indptr[active]
+        counts = self._nbr_indptr[active + 1] - starts
+        total = int(counts.sum())
+        if total == 0:
+            return np.empty(0, np.int32)
+        exc = np.concatenate([[0], np.cumsum(counts)[:-1]])
+        idx = np.repeat(starts - exc, counts) + np.arange(total)
+        return np.unique(self._nbr_indices[idx]).astype(np.int32)
+
+    @staticmethod
+    def _compact_candidates(
+        rows: np.ndarray, aff: np.ndarray, dvals: np.ndarray, src: np.ndarray
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(touched rows, (R, B) affected mask + distances) -> the flush's
+        per-row candidate arrays: affected columns compacted to the front in
+        source order, width pow2-padded — the exact layout the host frontier
+        builds, so ``_purge_merge`` sees identical inputs either way."""
+        keep = aff.any(axis=1)
+        rows, aff, dvals = rows[keep], aff[keep], dvals[keep]
+        if rows.size == 0:
+            return rows, np.empty((0, 1), np.int32), np.empty((0, 1), np.float32)
+        p = _pow2_pad(int(aff.sum(axis=1).max()), lo=4)
+        if p > aff.shape[1]:
+            pad = ((0, 0), (0, p - aff.shape[1]))
+            aff = np.pad(aff, pad)
+            dvals = np.pad(dvals, pad, constant_values=np.inf)
+            src = np.pad(src, (0, p - len(src)), constant_values=-1)
+        order = np.argsort(~aff, axis=1, kind="stable")[:, :p]
+        taken = np.take_along_axis(aff, order, axis=1)
+        cand_ids = np.where(taken, src[order], -1).astype(np.int32)
+        cand_d = np.where(
+            taken, np.take_along_axis(dvals, order, axis=1), np.inf
+        ).astype(np.float32)
+        return rows, cand_ids, cand_d
+
+    def _insert_frontier_host(
+        self, inserts: list[int]
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+        """The pre-batching checkIns pipeline: one sequential host heap
+        search per staged insert (``insert_affected_set``, shared with the
+        scalar oracle) fed by a full (n,) k-th-distance readback. Kept as
+        the ``frontier = "host"`` baseline the exp14 benchmark measures the
+        device pipeline against, and as the property tests' twin."""
+        kth = self._table_kth()
+        per_row: dict[int, list[tuple[int, float]]] = {}
+        for u in inserts:
+            affected = insert_affected_set(self.bn, lambda v: float(kth[v]), u)
+            for v, d in affected.items():
+                per_row.setdefault(v, []).append((u, d))
+        rows = np.fromiter(sorted(per_row), np.int32, len(per_row))
+        if rows.size == 0:
+            return rows, np.empty((0, 1), np.int32), np.empty((0, 1), np.float32), 0
+        p = _pow2_pad(max(len(c) for c in per_row.values()), lo=4)
+        cand_ids = np.full((len(rows), p), -1, np.int32)
+        cand_d = np.full((len(rows), p), np.inf, np.float32)
+        for i, v in enumerate(rows.tolist()):
+            for j, (u, d) in enumerate(per_row[v]):
+                cand_ids[i, j] = u
+                cand_d[i, j] = d
+        return rows, cand_ids, cand_d, 0
 
     def _coalesced_moves(self, deletes: set, inserts: set) -> list[tuple[int, int]]:
         """Fold the staged queue's move chains to (origin, endpoint) pairs.
@@ -454,13 +638,17 @@ class EngineCore:
         pure function of the final object set — Theorems 6.2/6.4 make the
         sequential replay land on the same tables; see the module docstring
         for the per-object folding rules). Application: find the delete-hit
-        rows, run the checkIns frontier for the insertions against the
-        pre-update k-th distances (insert-first semantics — see the inline
-        comment), purge + merge the union of both row sets
-        in one ``rows_purge_merge`` pass, then repair the deletion holes with
-        breadth-first Jacobi rounds that source- and destination-side work
-        share. Returns the per-flush stats dict (net insert/delete/move
-        counts plus ``coalesced``, the staged ops the folding eliminated).
+        rows, run the batched device checkIns frontier for ALL insertions at
+        once against the pre-update k-th distances (insert-first semantics —
+        see the inline comment; ``self.frontier = "host"`` selects the
+        per-object baseline pipeline instead), purge + merge the union of
+        both row sets in one ``rows_purge_merge`` pass, then repair the
+        deletion holes with breadth-first Jacobi rounds that source- and
+        destination-side work share. Returns the per-flush stats dict (net
+        insert/delete/move counts plus ``coalesced``, the staged ops the
+        folding eliminated, and the frontier/repair round counts); the
+        cumulative per-phase wall times land in ``stats()`` as
+        ``t_frontier_s`` / ``t_purge_merge_s`` / ``t_repair_s``.
         """
         staged = len(self._staged)
         del_set = self._objects - self._pending
@@ -476,7 +664,7 @@ class EngineCore:
         if deletes:
             purged_rows = self._scan_delete_rows(deletes)
 
-        # -- insert side: checkIns frontier, insert-first semantics --
+        # -- insert side: batched checkIns frontier, insert-first semantics --
         # The frontier prunes against the CURRENT (pre-update) k-th bounds,
         # exactly Algorithm 4 run before Algorithm 5 (the same order the
         # scalar ``move_object`` oracle uses). A row the pruning misses that
@@ -484,34 +672,41 @@ class EngineCore:
         # k-th distance raised by the deletions — i.e. it lost an entry, so
         # it is in the purge set and the repair rounds rebuild it from its
         # bridge neighbors anyway. Keeping the pre-update bounds keeps the
-        # host frontier search as small as the oracle's, instead of the
-        # unpruned sweep a post-purge (unbounded) k-th would trigger.
-        per_row: dict[int, list[tuple[int, float]]] = {}
+        # frontier as tight as the oracle's, instead of the unpruned sweep a
+        # post-purge (unbounded) k-th would trigger.
+        t0 = time.perf_counter()
+        f_rounds = 0
+        frows = np.empty(0, np.int32)
+        fc_ids = fc_d = None
         if inserts:
-            kth = self._table_kth()
-            for u in inserts:
-                affected = insert_affected_set(self.bn, lambda v: float(kth[v]), u)
-                for v, d in affected.items():
-                    per_row.setdefault(v, []).append((u, d))
+            provider = (
+                self._insert_frontier_host
+                if self.frontier == "host"
+                else self._insert_frontier
+            )
+            frows, fc_ids, fc_d, f_rounds = provider(inserts)
+        t_frontier = time.perf_counter() - t0
 
         # -- one fused purge + merge over the union of both row sets --
         rounds = 0
-        if purged_rows.size or per_row:
-            frows = np.fromiter(per_row.keys(), np.int32, len(per_row))
+        t_purge = t_repair = 0.0
+        if purged_rows.size or frows.size:
+            t0 = time.perf_counter()
             rows = np.union1d(purged_rows, frows).astype(np.int32)
-            p = _pow2_pad(max((len(c) for c in per_row.values()), default=1), lo=4)
+            p = fc_ids.shape[1] if frows.size else 1
             cand_ids = np.full((len(rows), p), -1, np.int32)
             cand_d = np.full((len(rows), p), np.inf, np.float32)
-            row_slot = {int(v): i for i, v in enumerate(rows)}
-            for v, cands in per_row.items():
-                i = row_slot[int(v)]
-                for j, (u, d) in enumerate(cands):
-                    cand_ids[i, j] = u
-                    cand_d[i, j] = d
+            if frows.size:
+                pos = np.searchsorted(rows, frows)
+                cand_ids[pos] = fc_ids
+                cand_d[pos] = fc_d
             self._purge_merge(rows, deletes, cand_ids, cand_d)
+            t_purge = time.perf_counter() - t0
             # -- breadth-first repair of the deletion holes (shared frontier) --
             if purged_rows.size:
+                t0 = time.perf_counter()
                 rounds = self._repair(purged_rows)
+                t_repair = time.perf_counter() - t0
 
         self._objects = set(self._pending)
         self._staged.clear()
@@ -520,8 +715,12 @@ class EngineCore:
         self._stats["deletes_applied"] += n_pure_del
         self._stats["moves_applied"] += len(moves)
         self._stats["coalesced"] += staged - (n_pure_ins + n_pure_del + len(moves))
-        self._stats["rows_repaired"] += int(purged_rows.size) + len(per_row)
+        self._stats["rows_repaired"] += int(purged_rows.size) + int(frows.size)
         self._stats["repair_rounds_last"] = rounds
+        self._stats["frontier_rounds_last"] = f_rounds
+        self._stats["t_frontier_s"] += t_frontier
+        self._stats["t_purge_merge_s"] += t_purge
+        self._stats["t_repair_s"] += t_repair
         return {
             "staged": staged,
             "inserts": n_pure_ins,
@@ -529,8 +728,9 @@ class EngineCore:
             "moves": len(moves),
             "coalesced": staged - (n_pure_ins + n_pure_del + len(moves)),
             "rows_purged": int(purged_rows.size),
-            "rows_merged": len(per_row),
+            "rows_merged": int(frows.size),
             "repair_rounds": rounds,
+            "frontier_rounds": f_rounds,
         }
 
     # ------------------------------------------------------------------
@@ -705,6 +905,28 @@ class QueryEngine(EngineCore):
         )
         return np.asarray(changed_mask)
 
+    # frontier provider (single-device layout): the multi-source tentative
+    # distance state is one (n+1, B) device matrix; the pruning column is
+    # read straight off the live table inside the jitted round program, so
+    # no kth values ever cross the host boundary.
+
+    def _frontier_init(self, src: np.ndarray) -> jax.Array:
+        self._fsrc = jnp.asarray(self._frontier_pad_src(src))
+        return _frontier_init_prog(self._fsrc, self._vk_ids.shape[0])
+
+    def _frontier_part(self, state, part: np.ndarray):
+        nbr_tab, w_tab = self._nbr_slice(self._t_bucket(part))
+        state, changed = _frontier_round(
+            nbr_tab, w_tab, self._pad_rows(part), state, self._vk_d,
+            self._fsrc, self.use_pallas,
+        )
+        return state, np.asarray(changed)
+
+    def _frontier_extract(self, state, rows: np.ndarray, src: np.ndarray):
+        aff, d = _frontier_affected(self._pad_rows(rows), state, self._vk_d, self._fsrc)
+        b = len(src)
+        return np.asarray(aff)[: len(rows), :b], np.asarray(d)[: len(rows), :b]
+
     def _host_tables(self) -> tuple[np.ndarray, np.ndarray]:
         return np.asarray(self._vk_ids[: self.n]), np.asarray(self._vk_d[: self.n])
 
@@ -720,6 +942,46 @@ class QueryEngine(EngineCore):
         """
         ids, dists, k, objects, _ = load_artifact(path)
         return cls(ids, dists.astype(np.float32), k, objects, bn=bn, use_pallas=use_pallas)
+
+
+@functools.partial(jax.jit, static_argnames=("n1",))
+def _frontier_init_prog(src, n1: int):
+    """Allocate the (n+1, B) multi-source tentative-distance matrix: +inf
+    everywhere except 0 at (src[i], i). Padded source columns (src = -1)
+    park their zero on the dummy row, which is +inf by convention and never
+    read unclamped, so they stay inert."""
+    b = src.shape[0]
+    dist = jnp.full((n1, b), jnp.inf, jnp.float32)
+    rows = jnp.where(src >= 0, src, n1 - 1)
+    vals = jnp.where(src >= 0, 0.0, jnp.inf).astype(jnp.float32)
+    return dist.at[rows, jnp.arange(b)].set(vals)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def _frontier_round(nbr_tab, w_tab, rows, dist, vk_d, src, use_pallas: bool):
+    """One jitted frontier round: gather the receiver rows' BNS slices, run
+    ``ops.frontier_relax`` against the live table's k-th column (device
+    resident — sliced inside the program), and derive the changed mask that
+    narrows the next round's receiver set. Distances only ever decrease, so
+    ``new < old`` is exactly "changed"."""
+    nbr = nbr_tab[rows]
+    w = w_tab[rows]
+    kth = vk_d[:, -1]
+    new = ops.frontier_relax(nbr, rows, w, dist, kth, src, use_pallas=use_pallas)
+    changed = jnp.any(new[rows] < dist[rows], axis=1)
+    return new, changed
+
+
+@jax.jit
+def _frontier_affected(rows, dist, vk_d, src):
+    """Affected test for the touched rows after convergence: checkIns
+    against the k-th column, plus the source rows themselves (Algorithm 4
+    admits the inserted object unconditionally). Returns the (R, B) mask
+    and the distance tile — the only frontier data read back to host."""
+    kth = vk_d[:, -1]
+    d = dist[rows]
+    aff = (d < kth[rows][:, None]) | (rows[:, None] == src[None, :])
+    return aff, d
 
 
 @jax.jit

@@ -31,8 +31,15 @@ Execution model
   jitted program. Bit-identical to the scalar engine's ``query_batch``.
 * Flush: the delete scan and the fused ``rows_purge_merge`` pass run
   per-shard via ``shard_map`` (``ops.shard_rows_*`` variants, which localize
-  the global row ids against the shard's row offset on device); the checkIns
-  frontier and coalescing are the shared host logic.
+  the global row ids against the shard's row offset on device); coalescing
+  and the flush orchestration are the shared host logic.
+* checkIns frontier: the staged inserts' multi-source tentative-distance
+  matrix is row-sharded exactly like the tables, and each pruned-relaxation
+  round runs shard-locally — the owner of a frontier vertex gates its
+  distance row by its own k-th column (the checkIns test) before the row is
+  exchanged, so the pruning bound never leaves its shard and only frontier
+  *vertex ids + tentative distances* cross shard boundaries between rounds,
+  through the same routed halo path the repair rounds use.
 * Repair rounds: each round, the rows under repair re-merge against their
   bridge neighbors' rows. Neighbor rows may live on other shards, so each
   round first fetches the (unique) neighbor rows through the same routed
@@ -158,11 +165,87 @@ def _device_fns(mesh: Mesh, block: int, k: int) -> dict:
             out_specs=(spec2, spec2, spec2),
         )(ids_g, d_g, rglob, del_arr, ci, cd)
 
+    # -- batched checkIns frontier (shard-local pruned relaxation) ---------
+    # The multi-source tentative-distance matrix lives row-sharded exactly
+    # like the tables: shard s owns the distance rows of its vertex range.
+    # Each round the OWNER computes gated "send" rows (dist gated by its own
+    # k-th column — the checkIns test), so the pruning bound never leaves
+    # its shard; only frontier vertex ids and those tentative-distance rows
+    # cross shard boundaries, through the same routed-gather halo path the
+    # repair rounds use.
+
+    def finit(src_grow):
+        """(B,) global padded source rows (-1 pad) -> sharded dist matrix."""
+        b = src_grow.shape[0]
+        dist = jnp.full((mesh.devices.size * block, b), jnp.inf, jnp.float32)
+        rows = jnp.where(src_grow >= 0, src_grow, block - 1)
+        vals = jnp.where(src_grow >= 0, 0.0, jnp.inf).astype(jnp.float32)
+        return dist.at[rows, jnp.arange(b)].set(vals)
+
+    def fsend(d_g, dist_g, qglob, fidx, src_grow):
+        """Routed gather of GATED distance rows: each owner applies the
+        checkIns gate (dist < own kth, or the row is the column's source)
+        before its rows leave the shard."""
+        def blk(td, fd, q, sg):
+            off = jax.lax.axis_index("shard") * block
+            loc = ops.shard_local_rows(block, q[0], off)
+            own = fd[loc]
+            kth = td[loc][:, -1]
+            gate = (own < kth[:, None]) | (q[0][:, None] == sg[None, :])
+            return jnp.where(gate, own, jnp.inf)[None]
+
+        out = shard_map(
+            blk, mesh=mesh,
+            in_specs=(spec2, spec2, spec2, P(None)),
+            out_specs=P("shard", None, None),
+        )(d_g, dist_g, qglob, src_grow)
+        return out.reshape(-1, dist_g.shape[1])[fidx]
+
+    def fmin(dist_g, rglob, vals):
+        """Shard-local min-update of the receiver rows + changed mask."""
+        def blk(fd, rq, v):
+            off = jax.lax.axis_index("shard") * block
+            loc = ops.shard_local_rows(block, rq[0], off)
+            own = fd[loc]
+            new = jnp.minimum(own, v[0])
+            ch = jnp.any(new < own, axis=1)
+            return fd.at[loc].set(new), ch[None]
+
+        return shard_map(
+            blk, mesh=mesh,
+            in_specs=(spec2, spec2, P("shard", None, None)),
+            out_specs=(spec2, spec2),
+        )(dist_g, rglob, vals)
+
+    def faff(d_g, dist_g, qglob, fidx, src_grow):
+        """Post-convergence affected test, per owner shard: checkIns against
+        the shard's k-th column plus the source rows themselves. Returns the
+        (R, B) mask and distance tile in the caller's row order."""
+        def blk(td, fd, q, sg):
+            off = jax.lax.axis_index("shard") * block
+            loc = ops.shard_local_rows(block, q[0], off)
+            dd = fd[loc]
+            kth = td[loc][:, -1]
+            aff = (dd < kth[:, None]) | (q[0][:, None] == sg[None, :])
+            return aff[None], dd[None]
+
+        affs, ds = shard_map(
+            blk, mesh=mesh,
+            in_specs=(spec2, spec2, spec2, P(None)),
+            out_specs=(P("shard", None, None), P("shard", None, None)),
+        )(d_g, dist_g, qglob, src_grow)
+        b = dist_g.shape[1]
+        return affs.reshape(-1, b)[fidx], ds.reshape(-1, b)[fidx]
+
     _DEVICE_FN_CACHE[key] = {
         "gather": jax.jit(gather),
         "scan": jax.jit(scan),
         "purge": jax.jit(purge),
         "kth": jax.jit(lambda d_g: d_g[:, -1]),
+        "finit": jax.jit(finit, out_shardings=NamedSharding(mesh, P("shard", None))),
+        "fsend": jax.jit(fsend),
+        "fmin": jax.jit(fmin),
+        "faff": jax.jit(faff),
     }
     return _DEVICE_FN_CACHE[key]
 
@@ -295,6 +378,10 @@ class ShardedQueryEngine(EngineCore):
         self._scan_fn = fns["scan"]
         self._purge_fn = fns["purge"]
         self._kth_fn = fns["kth"]
+        self._finit_fn = fns["finit"]
+        self._fsend_fn = fns["fsend"]
+        self._fmin_fn = fns["fmin"]
+        self._faff_fn = fns["faff"]
 
     # ------------------------------------------------------------------
     # host-side routing (queries batched per shard, one roundtrip)
@@ -450,6 +537,119 @@ class ShardedQueryEngine(EngineCore):
         cand_d = g_d.reshape(len(part), t * k).astype(np.float32)
         cand_d = np.where(cand_ids < 0, np.float32(np.inf), cand_d)
         return self._apply_rows(part, [], cand_ids, cand_d)
+
+    # ------------------------------------------------------------------
+    # frontier provider (shard-local checkIns)
+    # ------------------------------------------------------------------
+
+    def _frontier_init(self, src: np.ndarray):
+        srcp = self._frontier_pad_src(src)
+        self._fsrc = jnp.asarray(srcp)  # vertex ids (the 1-shard scalar path)
+        grow = np.full(srcp.shape, -1, np.int64)
+        m = srcp >= 0
+        grow[m] = self._g_of_v[srcp[m]]
+        self._fsrc_g = jnp.asarray(grow.astype(np.int32))
+        if self.num_shards == 1:
+            from repro.core.engine import _frontier_init_prog
+
+            return _frontier_init_prog(self._fsrc, self._ids_g.shape[0])
+        return self._finit_fn(self._fsrc_g)
+
+    def _frontier_part(self, state, part: np.ndarray):
+        """One shard-local frontier round over one receiver bucket: fetch
+        the gated neighbor send rows (cross-shard halo, one routed gather —
+        the owner applies the checkIns gate before its tentative distances
+        leave the shard, so the k-th column itself never moves), fold the
+        edge shift + min over neighbors on host, and apply the per-shard
+        min-update. Identical candidate values to the scalar engine's
+        ``ops.frontier_relax`` round, so the dist trajectories — and hence
+        the affected sets and candidate distances — are bit-identical.
+
+        At one shard every neighbor row is local and the global layout IS
+        the scalar (n+1, B) layout, so the round degenerates to the scalar
+        engine's device-resident program (shared jit cache, exp14 parity).
+        """
+        if self.num_shards == 1:
+            from repro.core.engine import _frontier_round
+
+            nbr_tab, w_tab = self._nbr_slice(self._t_bucket(part))
+            state, changed = _frontier_round(
+                nbr_tab, w_tab, self._pad_rows(part), state, self._d_g,
+                self._fsrc, self.use_pallas,
+            )
+            return state, np.asarray(changed)
+        t = self._t_bucket(part)
+        nbr = self._nbr_ids[part, :t]
+        w = self._nbr_w[part, :t]
+        valid = nbr >= 0
+        uniq, inv = np.unique(nbr[valid], return_inverse=True)
+        send = self._fetch_send(state, uniq)               # (U, B) float32
+        b = send.shape[1]
+        send = np.concatenate([send, np.full((1, b), np.inf, np.float32)])
+        slot = np.full(nbr.shape, len(uniq), dtype=np.int64)
+        slot[valid] = inv
+        # fold the min over the neighbor columns one at a time — (P, B)
+        # intermediates, never the (P, t, B) candidate tensor (the same
+        # memory discipline as ops.frontier_relax's fori_loop form; min is
+        # fold-order-insensitive, so the values stay bit-identical)
+        cand = np.full((len(part), b), np.inf, np.float32)
+        for j in range(t):
+            np.minimum(cand, w[:, j, None] + send[slot[:, j]], out=cand)
+        return self._apply_fmin(state, part, cand)
+
+    def _fetch_send(self, state, vs: np.ndarray) -> np.ndarray:
+        """Routed gated-row fetch (host result) for the frontier halo.
+
+        pow2-padded fetch count, same signature-bounding trick as
+        ``_fetch_rows`` (duplicate fetches of vertex 0 are free)."""
+        m = len(vs)
+        m_pad = _pow2_pad(m, lo=64)
+        vs_p = np.zeros(m_pad, np.int32)
+        vs_p[:m] = vs
+        qglob, fidx = self._route(vs_p)
+        out = self._fsend_fn(
+            self._d_g, state, jnp.asarray(qglob), jnp.asarray(fidx), self._fsrc_g
+        )
+        return np.asarray(out)[:m]
+
+    def _apply_fmin(self, state, rows: np.ndarray, vals: np.ndarray):
+        """Split a receiver batch by owner shard and run the per-shard
+        min-update; returns (new state, per-row changed mask) with the mask
+        reordered back to the caller's row order."""
+        s, r = self.num_shards, self.shard_rows
+        order, o_sorted, slot, rmax = self._group_by_owner(rows // r)
+        rmax = _pow2_pad(rmax, lo=16)
+        b = vals.shape[1]
+        rglob = np.full((s, rmax), -1, np.int32)
+        vv = np.full((s, rmax, b), np.inf, np.float32)
+        rglob[o_sorted, slot] = o_sorted * (r + 1) + rows[order] % r
+        vv[o_sorted, slot] = vals[order]
+        state, changed = self._fmin_fn(state, jnp.asarray(rglob), jnp.asarray(vv))
+        changed = np.asarray(changed)
+        out = np.zeros(len(rows), dtype=bool)
+        out[order] = changed[o_sorted, slot]
+        return state, out
+
+    def _frontier_extract(self, state, rows: np.ndarray, src: np.ndarray):
+        if self.num_shards == 1:
+            from repro.core.engine import _frontier_affected
+
+            aff, d = _frontier_affected(
+                self._pad_rows(rows), state, self._d_g, self._fsrc
+            )
+            return (
+                np.asarray(aff)[: len(rows), : len(src)],
+                np.asarray(d)[: len(rows), : len(src)],
+            )
+        m = len(rows)
+        m_pad = _pow2_pad(m, lo=64)
+        vs_p = np.zeros(m_pad, np.int32)
+        vs_p[:m] = rows
+        qglob, fidx = self._route(vs_p)
+        aff, d = self._faff_fn(
+            self._d_g, state, jnp.asarray(qglob), jnp.asarray(fidx), self._fsrc_g
+        )
+        return np.asarray(aff)[:m, : len(src)], np.asarray(d)[:m, : len(src)]
 
     # ------------------------------------------------------------------
     # persistence / stats

@@ -65,6 +65,60 @@ class Graph:
         return nbr, wts, deg
 
 
+@dataclasses.dataclass(frozen=True)
+class PaddedCSR:
+    """Dual padded-dense + CSR view of a (possibly non-simple) adjacency.
+
+    The padded form is what device gathers consume: ``ids``/``w`` are
+    ``(n+1, t)`` with valid neighbors compacted to the front of each row
+    (a row of degree d is fully described by its first d columns), ``-1`` /
+    ``+inf`` pads behind them, and a trailing all-pad dummy row so batched
+    row gathers can clamp padding to row ``n``. The CSR triple
+    (``indptr``, ``indices``, ``weights``) is the same adjacency without
+    padding, for host-side set algebra (frontier expansion, audits).
+    Weights are float32 — the dtype the device pipelines run in.
+    """
+
+    n: int
+    indptr: np.ndarray   # (n+1,) int64
+    indices: np.ndarray  # (nnz,) int32
+    weights: np.ndarray  # (nnz,) float32
+    ids: np.ndarray      # (n+1, t) int32, -1 padded, valid-first per row
+    w: np.ndarray        # (n+1, t) float32, +inf on pads
+    deg: np.ndarray      # (n+1,) int32 per-row valid count (dummy row: 0)
+
+
+def padded_csr(ids: np.ndarray, w: np.ndarray) -> PaddedCSR:
+    """Build a ``PaddedCSR`` from raw padded ``(n, t)`` id/weight tables.
+
+    Input rows may hold ``-1`` pads anywhere; the output compacts valid
+    entries to the front (stable, preserving input column order), derives
+    the CSR triple from the compacted rows and appends the dummy row.
+    """
+    ids = np.asarray(ids, dtype=np.int32)
+    w = np.asarray(w, dtype=np.float32).copy()
+    n = ids.shape[0]
+    w[ids < 0] = np.inf
+    order = np.argsort(ids < 0, axis=1, kind="stable")  # valid entries first
+    ids = np.take_along_axis(ids, order, axis=1)
+    w = np.take_along_axis(w, order, axis=1)
+    deg = (ids >= 0).sum(axis=1).astype(np.int32)
+    valid = ids >= 0
+    indptr = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(deg, out=indptr[1:])
+    ids_p = np.concatenate([ids, np.full((1, ids.shape[1]), -1, np.int32)])
+    w_p = np.concatenate([w, np.full((1, w.shape[1]), np.inf, np.float32)])
+    return PaddedCSR(
+        n=n,
+        indptr=indptr,
+        indices=ids[valid].ravel(),
+        weights=w[valid].ravel(),
+        ids=ids_p,
+        w=w_p,
+        deg=np.concatenate([deg, np.zeros(1, np.int32)]),
+    )
+
+
 def from_edges(n: int, edges: Iterable[tuple[int, int, float]]) -> Graph:
     """Build a Graph from an iterable of (u, v, w); parallel edges keep min w."""
     best: dict[tuple[int, int], float] = {}

@@ -1,0 +1,115 @@
+"""Fused Pallas TPU kernel for one batched checkIns frontier round.
+
+The batched insert frontier (Algorithm 4's checkIns search, run for a whole
+staged batch of inserted objects at once) keeps a multi-source tentative
+distance matrix ``dist`` of shape (n+1, B) on device — row v holds, per
+source column i, the best known pruned distance from inserted object
+``src[i]`` to vertex v. One round relaxes every *receiver* row v (a BNS
+neighbor of last round's changed vertices) against its bridge neighbors:
+
+    new[v, i] = min(dist[v, i],
+                    min over u in BNS(v), gate(u, i) of  w(v, u) + dist[u, i])
+    gate(u, i) = dist[u, i] < kth[u]  or  u == src[i]        (checkIns)
+
+The XLA form (kernels/ops.py) runs a fori_loop over the neighbor columns to
+avoid the (R, T, B) candidate tensor; this kernel fuses the whole round the
+same way sweep_merge fuses a construction step: the neighbor table ``nbr``
+(R, T) and receiver rows (R,) are scalar-prefetched, the grid is (R, T), and
+each grid step DMAs exactly one (1, B) neighbor distance row (plus its kth
+scalar) into VMEM, accumulating the running minimum in a VMEM scratch row.
+At the last neighbor column the accumulator is scattered back into the
+aliased ``dist`` output via the receiver-row index map.
+
+Jacobi discipline: receiver rows frequently neighbor each other, so neighbor
+distance rows are read from a separate, NON-aliased ``dist`` operand — reads
+always see the pre-round values even though receiver rows are being written
+in place through the aliased operand (XLA copies the donated buffer when the
+read operand still needs the old value). That keeps the kernel bit-identical
+to the pure-Jacobi reference for any receiver set, which the exactness
+contract of the engine (scalar vs sharded table equality) relies on.
+
+Padded receiver rows use vertex id n (the dummy row: all-pad neighbors, +inf
+distances — the round writes +inf back). Padded neighbor slots use -1 with
++inf weight and are clamped to the dummy row by the index map; padded source
+columns use src = -1 (matching no vertex) with all-+inf distance columns.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _frontier_relax_kernel(
+    nbr_ref, rows_ref,                   # scalar-prefetch
+    w_ref, kth_ref, src_ref, dn_ref, do_ref,
+    out_ref,
+    acc_ref,                             # VMEM (1, B) running-minimum scratch
+):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    nt = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init_acc():
+        acc_ref[...] = do_ref[...]       # receiver's own pre-round row
+
+    u = nbr_ref[i, j]
+    nd = dn_ref[...]                     # (1, B) neighbor distance row
+    gate = (nd < kth_ref[0, 0]) | (src_ref[...] == u)
+    cand = w_ref[0, 0] + nd
+    ok = (u >= 0) & gate
+    acc_ref[...] = jnp.minimum(acc_ref[...], jnp.where(ok, cand, jnp.inf))
+
+    @pl.when(j == nt - 1)
+    def _emit():
+        out_ref[...] = acc_ref[...]
+
+
+def frontier_relax_pallas(
+    nbr: jax.Array,   # (R, T) int32 neighbor ids, -1 = padded slot
+    rows: jax.Array,  # (R,)  int32 receiver rows, n = padded row (dummy)
+    w: jax.Array,     # (R, T) float32 edge weights, +inf on pads
+    dist: jax.Array,  # (n+1, B) float32 tentative distances (aliased output)
+    kth: jax.Array,   # (n+1,) float32 pruning bounds
+    src: jax.Array,   # (B,) int32 source vertex per column, -1 pad
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """One fused frontier round; returns the updated (n+1, B) dist matrix."""
+    chunk, t = nbr.shape
+    n1, b = dist.shape
+    kth2 = kth.reshape(n1, 1)
+    src2 = src.reshape(1, b)
+
+    def nbr_map(i, j, nbr_ref, rows_ref):
+        x = nbr_ref[i, j]
+        return (jnp.where(x >= 0, x, n1 - 1), 0)  # clamp pads to the dummy row
+
+    def vert_map(i, j, nbr_ref, rows_ref):
+        return (rows_ref[i], 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(chunk, t),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, n_, r_: (i, j)),  # w
+            pl.BlockSpec((1, 1), nbr_map),                       # kth gather
+            pl.BlockSpec((1, b), lambda i, j, n_, r_: (0, 0)),   # src (bcast)
+            pl.BlockSpec((1, b), nbr_map),                       # dist read
+            pl.BlockSpec((1, b), vert_map),                      # own row read
+        ],
+        out_specs=pl.BlockSpec((1, b), vert_map),                # dist scatter
+        scratch_shapes=[pltpu.VMEM((1, b), jnp.float32)],
+    )
+    return pl.pallas_call(
+        _frontier_relax_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n1, b), jnp.float32),
+        # operand indices count the two scalar-prefetch args; only the
+        # own-row/scatter operand aliases the output — the neighbor-read
+        # operand must keep the pre-round values (see module docstring)
+        input_output_aliases={6: 0},
+        interpret=interpret,
+    )(nbr, rows, w, kth2, src2, dist, dist)

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.frontier_relax import frontier_relax_pallas
 from repro.kernels.minplus import minplus_matmul_pallas
 from repro.kernels.retrieval_topk import retrieval_topk_pallas
 from repro.kernels.sweep_merge import kround_merge, sweep_merge_pallas
@@ -154,6 +155,55 @@ def rows_containing(vk_ids: jax.Array, obj_ids: jax.Array) -> jax.Array:
     object, and this finds them in one device pass over the table.
     """
     return (vk_ids[:-1, :, None] == obj_ids[None, None, :]).any(axis=(1, 2))
+
+
+def frontier_relax(
+    nbr: jax.Array,   # (R, T) int32 BNS neighbor ids per receiver, -1 pad
+    rows: jax.Array,  # (R,)  int32 receiver rows, n (dummy) = padding
+    w: jax.Array,     # (R, T) float32 BNS edge weights, +inf on pads
+    dist: jax.Array,  # (n+1, B) float32 multi-source tentative distances
+    kth: jax.Array,   # (n+1,) float32 k-th-distance pruning bounds
+    src: jax.Array,   # (B,) int32 source vertex per column, -1 pad
+    *,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """One batched pruned-relaxation round of the checkIns frontier.
+
+    Relaxes every receiver row's BNS edges for a whole batch of insert
+    sources at once: column i of ``dist`` is the tentative distance field of
+    source ``src[i]``, and a neighbor u only propagates into column i while
+    ``dist[u, i] < kth[u]`` (Algorithm 4's checkIns test — the insertion
+    still improves u's top-k) or u is the source itself. Returns the updated
+    ``dist``; the caller derives the changed-row mask that narrows the next
+    round's frontier (the same discipline the delete-repair rounds use).
+
+    Like ``sweep_merge`` this is a trace-level function meant to be called
+    inside an already-jitted round program; the caller guarantees the layout
+    invariants (pad conventions above, dummy row n all +inf). The XLA form
+    runs a fori_loop over neighbor columns so only (R, B) intermediates ever
+    materialise; the Pallas kernel fuses the gather/gate/min per neighbor
+    row (see kernels/frontier_relax.py). Both are pure Jacobi: every
+    neighbor read sees the pre-round ``dist``.
+    """
+    if not use_pallas:
+        n1 = dist.shape[0]
+
+        def body(t, acc):
+            nv = jax.lax.dynamic_index_in_dim(nbr, t, axis=1, keepdims=False)
+            wv = jax.lax.dynamic_index_in_dim(w, t, axis=1, keepdims=False)
+            valid = nv >= 0
+            nc = jnp.where(valid, nv, n1 - 1)
+            nd = dist[nc]                                        # (R, B)
+            gate = (nd < kth[nc][:, None]) | (nc[:, None] == src[None, :])
+            cand = wv[:, None] + nd
+            ok = valid[:, None] & gate
+            return jnp.minimum(acc, jnp.where(ok, cand, jnp.inf))
+
+        acc = jax.lax.fori_loop(0, nbr.shape[1], body, dist[rows])
+        return dist.at[rows].set(acc)
+    itp = (not _on_tpu()) if interpret is None else interpret
+    return frontier_relax_pallas(nbr, rows, w, dist, kth, src, interpret=itp)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "use_pallas", "interpret"))

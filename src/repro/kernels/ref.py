@@ -54,6 +54,37 @@ def sweep_merge_ref(
     return vk_ids.at[verts].set(m_ids), vk_d.at[verts].set(m_d)
 
 
+def frontier_relax_ref(
+    nbr: jax.Array,   # (R, T) int32 BNS neighbor ids per receiver row, -1 pad
+    rows: jax.Array,  # (R,)  int32 receiver vertex ids, n = dummy pad
+    w: jax.Array,     # (R, T) float  BNS edge weights, +inf on pads
+    dist: jax.Array,  # (n+1, B) tentative multi-source distance columns
+    kth: jax.Array,   # (n+1,) per-vertex k-th-distance pruning bound
+    src: jax.Array,   # (B,)  int32 source vertex per column, -1 pad
+):
+    """Unfused oracle for one batched pruned-relaxation (checkIns) round.
+
+    For every receiver row v and source column i:
+        new[v, i] = min(dist[v, i],
+                        min over u in BNS(v) with gate(u, i) of
+                            w(v, u) + dist[u, i])
+    where ``gate(u, i) = dist[u, i] < kth[u]  or  u == src[i]`` — Algorithm
+    4's checkIns test: a neighbor u propagates distance mass only while the
+    inserted object would enter u's top-k (or u is the source itself). Pure
+    Jacobi: every read sees the pre-round ``dist``. Materialises the full
+    (R, T, B) candidate tensor; the production forms in kernels/ops.py and
+    kernels/frontier_relax.py compute the same values without it.
+    """
+    n1 = dist.shape[0]
+    valid = nbr >= 0
+    nc = jnp.where(valid, nbr, n1 - 1)
+    nd = dist[nc]                                            # (R, T, B)
+    gate = (nd < kth[nc][..., None]) | (nc[..., None] == src[None, None, :])
+    cand = jnp.where(valid[..., None] & gate, w[..., None] + nd, jnp.inf)
+    acc = jnp.minimum(dist[rows], jnp.min(cand, axis=1))
+    return dist.at[rows].set(acc)
+
+
 def minplus_matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
     af = a.astype(jnp.float32)
     bf = b.astype(jnp.float32)

@@ -215,6 +215,128 @@ def test_stage_validation():
     engine.stage_insert(present)  # re-insert of the staged-deleted id is fine
 
 
+def test_flush_device_frontier_no_host_loop_no_kth_readback(monkeypatch):
+    """Traffic contract of the default flush pipeline: the checkIns frontier
+    runs as batched device relaxation rounds — no per-object host heap
+    search (``insert_affected_set``) and no (n,) k-th-column readback
+    (``_table_kth``) may happen. Both entry points are booby-trapped and a
+    mixed insert/delete/move flush must still land on the oracle tables."""
+    import repro.core.engine as engine_mod
+
+    g, objects, bn, idx, engine = _setup(mu=0.2)
+
+    def boom(*a, **kw):
+        raise AssertionError("host frontier path invoked by device pipeline")
+
+    monkeypatch.setattr(engine_mod, "insert_affected_set", boom)
+    monkeypatch.setattr(knn.QueryEngine, "_table_kth", boom)
+    mset = set(objects.tolist())
+    ins = [int(v) for v in np.setdiff1d(np.arange(g.n), objects)[:3]]
+    dels = [int(objects[0]), int(objects[1])]
+    mv_src, mv_dst = int(objects[2]), int(np.setdiff1d(np.arange(g.n), objects)[3])
+    for u in ins:
+        engine.stage_insert(u)
+    for u in dels:
+        engine.stage_delete(u)
+    engine.stage_move(mv_src, mv_dst)
+    stats = engine.flush_updates()
+    assert stats["frontier_rounds"] >= 1
+    mset = (mset | set(ins) | {mv_dst}) - set(dels) - {mv_src}
+    fresh = knn_index_cons_plus(bn, np.array(sorted(mset)), engine.k)
+    assert knn.indices_equivalent(fresh, engine.to_index())
+
+
+def test_host_and_device_frontier_pipelines_bit_identical():
+    """``engine.frontier = "host"`` replays the per-object oracle pipeline;
+    on integer-weight networks both pipelines must produce byte-identical
+    tables and the same flush accounting (minus the round counter)."""
+    g, objects, bn, idx, dev = _setup(mu=0.2)
+    host = knn.QueryEngine.from_index(idx, objects, bn=bn)
+    host.frontier = "host"
+    rng = np.random.default_rng(5)
+    mset = set(objects.tolist())
+    for step in range(24):
+        u = int(rng.integers(0, g.n))
+        if u in mset and len(mset) > dev.k + 1:
+            dev.stage_delete(u)
+            host.stage_delete(u)
+            mset.discard(u)
+        elif u not in mset:
+            dev.stage_insert(u)
+            host.stage_insert(u)
+            mset.add(u)
+        if step % 7 == 6:
+            sd, sh = dev.flush_updates(), host.flush_updates()
+            assert sh["frontier_rounds"] == 0 and sd.pop("frontier_rounds") >= 0
+            sh.pop("frontier_rounds")
+            assert sd == sh
+            a, b = dev.to_index(), host.to_index()
+            assert np.array_equal(a.ids, b.ids)
+            assert np.array_equal(a.dists, b.dists)
+
+
+def test_frontier_mode_validated():
+    """Only the two known pipelines are selectable; a typo must not
+    silently fall through to the device path."""
+    _, _, _, _, engine = _setup()
+    with pytest.raises(ValueError, match="frontier"):
+        engine.frontier = "Host"
+    engine.frontier = "host"
+    engine.frontier = "device"
+    assert engine.frontier == "device"
+
+
+def _both_engines():
+    from repro.core.sharded import ShardedQueryEngine
+
+    g, objects, bn, idx, engine = _setup()
+    sharded = ShardedQueryEngine.from_index(idx, objects, bn=bn, shards=1)
+    return g, objects, [engine, sharded]
+
+
+def test_stage_insert_of_existing_object_raises_eagerly():
+    """stage_insert of a present (or already-staged) object must fail AT
+    STAGING time with a clear error, on both engines — not surface at flush
+    or silently coalesce."""
+    g, objects, engines = _both_engines()
+    present = int(objects[0])
+    for engine in engines:
+        with pytest.raises(ValueError, match="already present"):
+            engine.stage_insert(present)
+        absent = int(np.setdiff1d(np.arange(g.n), objects)[0])
+        engine.stage_insert(absent)
+        with pytest.raises(ValueError, match="already present"):
+            engine.stage_insert(absent)  # staged-for-insert counts as present
+        assert engine.queue_depth == 1  # failed stagings left no trace
+
+
+def test_stage_delete_of_non_object_raises_eagerly():
+    g, objects, engines = _both_engines()
+    absent = int(np.setdiff1d(np.arange(g.n), objects)[0])
+    for engine in engines:
+        with pytest.raises(ValueError, match="absent"):
+            engine.stage_delete(absent)
+        present = int(objects[0])
+        engine.stage_delete(present)
+        with pytest.raises(ValueError, match="absent"):
+            engine.stage_delete(present)  # staged-for-delete counts as absent
+        assert engine.queue_depth == 1
+
+
+def test_stage_move_to_same_vertex_raises_eagerly():
+    g, objects, engines = _both_engines()
+    present = int(objects[0])
+    absent = int(np.setdiff1d(np.arange(g.n), objects)[0])
+    for engine in engines:
+        with pytest.raises(ValueError, match="source and destination"):
+            engine.stage_move(present, present)
+        # the self-move check fires even where membership checks would also
+        # fail, so the error names the real mistake
+        with pytest.raises(ValueError, match="source and destination"):
+            engine.stage_move(absent, absent)
+        assert engine.queue_depth == 0
+
+
 def test_updates_require_bngraph():
     g, objects, bn, idx, _ = _setup()
     engine = knn.QueryEngine.from_index(idx, objects)  # no bn

@@ -17,6 +17,8 @@ truth:
 """
 import heapq
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings
 from hypothesis import strategies as st
@@ -114,6 +116,85 @@ def test_insert_frontier_matches_brute_force(p):
     # every row the ground-truth index changes is in the frontier
     after = _brute_knn(g, np.sort(np.append(objects, u)), k)
     assert _changed_rows(idx, after) <= set(affected)
+
+
+def _relax_to_fixpoint(bn, kth: np.ndarray, srcs: np.ndarray):
+    """Drive ``ops.frontier_relax`` rounds to their fixpoint (the test-side
+    twin of ``EngineCore._insert_frontier``, without bucketing): returns the
+    converged (n+1, B) distance matrix. Runs in float64 when JAX x64 is on —
+    then every distance must EQUAL the host oracle's bit for bit — and in
+    float32 otherwise (the engine's serving dtype)."""
+    dtype = np.float64 if jax.config.jax_enable_x64 else np.float32
+    packed = bn.bns_packed()
+    n, b = bn.n, len(srcs)
+    kth_j = jnp.asarray(np.append(kth, np.inf).astype(dtype))
+    src_j = jnp.asarray(srcs.astype(np.int32))
+    dist0 = np.full((n + 1, b), np.inf, dtype)
+    dist0[srcs, np.arange(b)] = 0.0
+    dist = jnp.asarray(dist0)
+    active = np.unique(srcs)
+    for _ in range(300):
+        recv = np.unique(packed.ids[active])
+        recv = recv[recv >= 0].astype(np.int32)
+        rows = jnp.asarray(recv)
+        new = ops.frontier_relax(
+            jnp.asarray(packed.ids[recv]), rows,
+            jnp.asarray(packed.w[recv].astype(dtype)),
+            dist, kth_j, src_j, use_pallas=False,
+        )
+        changed = np.asarray(jnp.any(new[rows] < dist[rows], axis=1))
+        dist = new
+        active = recv[changed]
+        if not active.size:
+            return np.asarray(dist)
+    raise AssertionError("frontier relaxation did not converge")
+
+
+@settings(max_examples=12, deadline=None)
+@given(params)
+def test_frontier_relax_fixpoint_matches_insert_affected_set(p):
+    """ops.frontier_relax rounds, run for a BATCH of inserted objects at
+    once, land on exactly the per-source checkIns affected sets of the host
+    oracle — same sets, same distances (bit-equal under x64, float32-rounded
+    otherwise). Distances accumulate per column independently, so the batch
+    dimension must not couple sources."""
+    import dataclasses
+
+    nx, ny, seed, k = p
+    g, objects, bn, idx = _setup(nx, ny, seed, k)
+    outside = np.setdiff1d(np.arange(g.n), objects)
+    if outside.size < 2:
+        return
+    rng = np.random.default_rng(seed)
+    b = min(4, outside.size)
+    srcs = np.sort(rng.choice(outside, size=b, replace=False))
+
+    # pre-round the BNS weights and the pruning column to float32 so the
+    # oracle's host sums and the device relaxation see identical inputs
+    # (the serving tables and packed adjacency are float32; under x64 the
+    # sums themselves are then bit-equal too)
+    bn = dataclasses.replace(
+        bn,
+        lo_w=bn.lo_w.astype(np.float32).astype(np.float64),
+        hi_w=bn.hi_w.astype(np.float32).astype(np.float64),
+    )
+    kth = np.array([_kth(idx, v) for v in range(g.n)])
+    kth = kth.astype(np.float32).astype(np.float64)
+
+    dist = _relax_to_fixpoint(bn, kth, srcs)
+    exact = jax.config.jax_enable_x64
+    for i, u in enumerate(srcs.tolist()):
+        want = insert_affected_set(bn, lambda v: float(kth[v]), u)
+        got = {
+            v for v in range(g.n)
+            if dist[v, i] < kth[v] or v == u
+        }
+        assert got == set(want)
+        for v, d in want.items():
+            if exact:
+                assert float(dist[v, i]) == d
+            else:
+                assert np.isclose(float(dist[v, i]), d, rtol=2e-6, atol=0)
 
 
 @settings(max_examples=12, deadline=None)

@@ -138,6 +138,42 @@ def test_flush_exact_equivalence(shards):
     assert set(sharded.objects.tolist()) == mset
 
 
+@pytest.mark.parametrize("shards", SHARD_COUNTS)
+def test_sharded_device_frontier_matches_host_oracle(shards):
+    """The shard-local checkIns frontier (boundary-crossing sources pinned
+    to the first/last vertices of shard ranges) returns exactly the host
+    oracle's affected rows, candidate ids and distances — and bit-identical
+    output to the scalar engine's device frontier. Integer edge weights make
+    every comparison exact, not tolerance-based."""
+    g, objects, bn, plain, sharded = _setup(mu=0.2, shards=shards)
+    rng = np.random.default_rng(11)
+    outside = np.setdiff1d(np.arange(g.n), objects)
+    r = sharded.shard_rows
+    boundary = np.concatenate([np.arange(0, g.n, r), np.arange(r - 1, g.n, r)])
+    srcs = [int(v) for v in boundary if v in set(outside.tolist())][:4]
+    fill = [int(v) for v in rng.permutation(outside) if v not in srcs]
+    srcs = sorted(srcs + fill[: max(0, 6 - len(srcs))])
+
+    rows_p, ci_p, cd_p, rounds_p = plain._insert_frontier(srcs)
+    rows_s, ci_s, cd_s, rounds_s = sharded._insert_frontier(srcs)
+    assert rounds_p == rounds_s
+    np.testing.assert_array_equal(rows_p, rows_s)
+    np.testing.assert_array_equal(ci_p, ci_s)
+    np.testing.assert_array_equal(cd_p, cd_s)
+
+    from repro.core.updates import insert_affected_set
+
+    kth = np.asarray(plain.tables[1][: g.n, -1], np.float64)
+    per_row = {}
+    for u in srcs:
+        for v, d in insert_affected_set(bn, lambda x: float(kth[x]), u).items():
+            per_row.setdefault(v, []).append((u, d))
+    assert rows_s.tolist() == sorted(per_row)
+    for i, v in enumerate(rows_s.tolist()):
+        got = [(int(c), float(d)) for c, d in zip(ci_s[i], cd_s[i]) if c >= 0]
+        assert got == per_row[v]
+
+
 def test_reshard_on_load_roundtrip(tmp_path):
     """Save at 2 shards, load at 4 and at 1: all equivalent to the unsharded
     build, and the resharded engines keep serving and updating."""

@@ -8,7 +8,10 @@ ShardedQueryEngine replaying the identical staged script must all land
 indices_equivalent to a fresh knn_index_cons_plus rebuild on the final
 object set — and therefore to each other. The two engines are additionally
 held to *exact* table equivalence after every flush (the sharded flush is
-the same math, only partitioned by vertex owner).
+the same math, only partitioned by vertex owner), and a third engine replay
+runs the flush pipeline with ``frontier = "host"`` — pinning the batched
+device checkIns frontier (``ops.frontier_relax`` rounds) byte-for-byte
+against the per-object ``insert_affected_set`` pipeline on every flush.
 """
 import jax
 import numpy as np
@@ -50,6 +53,10 @@ def test_mixed_updates_match_rebuild(p):
     # (multi-shard when the device pool allows it, see the CI device matrix)
     shards = min(2, len(jax.devices()), n)
     sharded = ShardedQueryEngine.from_index(idx, obj0, bn=bn, shards=shards)
+    # the fifth party: the host-frontier pipeline (per-object
+    # insert_affected_set) — must stay byte-identical to the device frontier
+    hostf = QueryEngine.from_index(idx, obj0, bn=bn)
+    hostf.frontier = "host"
     for _ in range(n_updates):
         u = int(rng.integers(0, n))
         r = rng.random()
@@ -61,6 +68,7 @@ def test_mixed_updates_match_rebuild(p):
             move_object(bn, idx, src, dst)
             engine.stage_move(src, dst)
             sharded.stage_move(src, dst)
+            hostf.stage_move(src, dst)
             objects.discard(src)
             objects.add(dst)
         elif u in objects:
@@ -69,19 +77,26 @@ def test_mixed_updates_match_rebuild(p):
             delete_object(bn, idx, u)
             engine.stage_delete(u)
             sharded.stage_delete(u)
+            hostf.stage_delete(u)
             objects.discard(u)
         else:
             insert_object(bn, idx, u)
             engine.stage_insert(u)
             sharded.stage_insert(u)
+            hostf.stage_insert(u)
             objects.add(u)
         if rng.random() < 0.3:  # flush at random interleaving points
             assert engine.flush_updates() == sharded.flush_updates()
+            hostf.flush_updates()
             a, b = engine.to_index(), sharded.to_index()
             assert np.array_equal(a.ids, b.ids)  # exact, not just equivalent
             assert np.array_equal(a.dists, b.dists)
+            h = hostf.to_index()  # device frontier == host frontier, exactly
+            assert np.array_equal(a.ids, h.ids)
+            assert np.array_equal(a.dists, h.dists)
     engine.flush_updates()
     sharded.flush_updates()
+    hostf.flush_updates()
     fresh = knn_index_cons_plus(bn, np.array(sorted(objects)), k)
     assert indices_equivalent(fresh, idx)
     assert indices_equivalent(fresh, engine.to_index())
@@ -90,6 +105,9 @@ def test_mixed_updates_match_rebuild(p):
     a, b = engine.to_index(), sharded.to_index()
     assert np.array_equal(a.ids, b.ids)
     assert np.array_equal(a.dists, b.dists)
+    h = hostf.to_index()
+    assert np.array_equal(a.ids, h.ids)
+    assert np.array_equal(a.dists, h.dists)
 
 
 def test_insert_then_delete_roundtrip():

@@ -56,6 +56,86 @@ def test_minplus_with_inf_padding():
     assert got[0, 0] == 3.0 and np.isinf(got[1, 1])
 
 
+def _frontier_case(seed, n, r, t, b, n_src):
+    """Random frontier_relax instance with every pad convention exercised."""
+    rng = _rng(seed)
+    nbr = rng.integers(0, n, size=(r, t)).astype(np.int32)
+    nbr[rng.random((r, t)) < 0.3] = -1          # padded neighbor slots
+    rows = rng.choice(n, size=r, replace=False).astype(np.int32)
+    rows[-1] = n                                 # padded receiver row
+    w = np.where(nbr >= 0, rng.uniform(1, 9, size=nbr.shape), np.inf).astype(np.float32)
+    dist = rng.uniform(0, 30, size=(n + 1, b)).astype(np.float32)
+    dist[rng.random((n + 1, b)) < 0.4] = np.inf  # unreached entries
+    dist[n] = np.inf                             # dummy row
+    dist[:, n_src:] = np.inf                     # padded source columns
+    kth = rng.uniform(0, 35, size=n + 1).astype(np.float32)
+    kth[n] = np.inf
+    src = np.full(b, -1, np.int32)
+    src[:n_src] = rng.choice(n, size=n_src, replace=False)
+    for i in range(n_src):                       # sources sit at distance 0
+        dist[src[i], i] = 0.0
+    return nbr, rows, w, dist, kth, src
+
+
+@pytest.mark.parametrize("seed,n,r,t,b,n_src", [
+    (0, 40, 9, 6, 8, 5),
+    (1, 140, 9, 6, 128, 100),  # lane-aligned column count (TPU layout)
+    (2, 150, 40, 17, 16, 11),  # receivers neighboring each other
+    (3, 25, 6, 1, 8, 3),       # single neighbor column
+])
+def test_frontier_relax_pallas_vs_ref(seed, n, r, t, b, n_src):
+    """The fused kernel must be bit-identical to the pure-Jacobi oracle even
+    when receiver rows read each other: neighbor reads go through the
+    non-aliased operand, so in-place receiver writes stay invisible."""
+    args = [jnp.asarray(a) for a in _frontier_case(seed, n, r, t, b, n_src)]
+    want = np.asarray(ref.frontier_relax_ref(*args))
+    got_xla = np.asarray(ops.frontier_relax(*args, use_pallas=False))
+    got_pl = np.asarray(ops.frontier_relax(*args, use_pallas=True))
+    np.testing.assert_array_equal(got_xla, want)
+    np.testing.assert_array_equal(got_pl, want)
+
+
+def test_frontier_relax_gate_blocks_propagation():
+    """A neighbor at dist >= kth must not propagate (checkIns), unless it is
+    the column's source vertex — which always propagates."""
+    n = 4
+    nbr = np.array([[1]], np.int32)   # receiver 0 reads neighbor 1
+    rows = np.array([0], np.int32)
+    w = np.array([[2.0]], np.float32)
+    dist = np.full((n + 1, 8), np.inf, np.float32)
+    dist[1, 0] = 5.0                  # col 0: src elsewhere, 1 at 5.0
+    dist[1, 1] = 0.0                  # col 1: 1 IS the source (dist 0)
+    kth = np.full(n + 1, np.inf, np.float32)
+    kth[1] = 4.0                      # gate closed: 5.0 >= 4.0, 0.0 < 4.0
+    src = np.full(8, -1, np.int32)
+    src[0] = 3
+    src[1] = 1
+    for use_pallas in (False, True):
+        out = np.asarray(ops.frontier_relax(
+            *[jnp.asarray(a) for a in (nbr, rows, w, dist, kth, src)],
+            use_pallas=use_pallas,
+        ))
+        assert np.isinf(out[0, 0])        # blocked by the checkIns gate
+        assert out[0, 1] == 2.0           # source column propagates at w
+        np.testing.assert_array_equal(out[2:], dist[2:])  # untouched rows
+
+
+def test_frontier_relax_all_pad_row_stays_inf():
+    n = 6
+    nbr = np.full((2, 3), -1, np.int32)
+    rows = np.array([2, n], np.int32)
+    w = np.full((2, 3), np.inf, np.float32)
+    dist = np.full((n + 1, 8), np.inf, np.float32)
+    kth = np.full(n + 1, np.inf, np.float32)
+    src = np.full(8, -1, np.int32)
+    for use_pallas in (False, True):
+        out = np.asarray(ops.frontier_relax(
+            *[jnp.asarray(a) for a in (nbr, rows, w, dist, kth, src)],
+            use_pallas=use_pallas,
+        ))
+        assert np.isinf(out).all()
+
+
 @pytest.mark.parametrize("b,n,k", [(1, 1024, 5), (8, 10000, 16), (3, 4096, 100)])
 @pytest.mark.parametrize("dtype", [np.float32])
 def test_retrieval_topk_sweep(b, n, k, dtype):
