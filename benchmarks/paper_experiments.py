@@ -21,6 +21,9 @@ Beyond the paper (this repo's serving surface):
          per device count (forced host devices), vs the scalar engine
   Exp-14 batched device checkIns frontier: flush throughput vs staged-insert
          batch size, host-frontier vs device-frontier, scalar and sharded
+  Exp-15 mixed read/write serving: query p50/p99 sampled DURING flushes
+         (from inside the pipeline, via the checkpoint hook) vs between
+         them — the snapshot-isolation tail-latency experiment
 """
 from __future__ import annotations
 
@@ -614,6 +617,105 @@ def exp14_frontier_scaling() -> None:
     meta("exp14.device_speedup_b512", round(speedup_512, 2))
 
 
+def exp15_mixed_rw() -> None:
+    """Mixed read/write serving: query latency during vs between flushes.
+
+    The ISSUE-6 acceptance experiment for epoch-versioned snapshot
+    isolation. A scalar engine serves a steady ``query_batch`` stream while
+    staged update batches flush round after round. "Between" samples time
+    queries against the quiescent engine; "during" samples are issued from
+    INSIDE ``flush_updates`` via the ``checkpoint_hook`` seam (the
+    mid-repair-round / pre-swap / post-swap sites), i.e. while the pipeline
+    holds half-built epoch e+1 tables. Queries resolve their dispatch-time
+    epoch snapshot, so the during-flush path is the same gather over the
+    immutable epoch-e buffers — it may pay queue contention with the repair
+    work, but its p99 must stay within a small constant of the quiescent
+    p99 (``check_schema --require exp15`` holds the ceiling). Every update
+    round includes a ``stage_move`` so the purge + repair rounds — the
+    expensive part of the flush — always run.
+    """
+    from repro import knn
+
+    k = 10
+    grid, mu = 32, 0.05
+    batch = 256
+    rounds = 8
+    queries_per_round = 8
+    g = road_network(grid, grid, seed=0)
+    objects = pick_objects(g.n, mu, seed=0)
+    bn = build_bngraph(g)
+    idx = knn_index_cons_plus(bn, objects, k)
+    eng = knn.QueryEngine.from_index(idx, objects, bn=bn)
+    mset = set(int(o) for o in objects)
+    us = query_vertices(g.n, batch, seed=3)
+
+    def q_lat_us() -> float:
+        t0 = time.perf_counter()
+        ids, d = eng.query_batch(us)
+        np.asarray(ids), np.asarray(d)  # block on the device result
+        return (time.perf_counter() - t0) * 1e6
+
+    def stage_round(seed: int) -> None:
+        knn.stage_random_updates(eng, mset, rng=seed, count=12)
+        u = sorted(mset)[0]
+        v = next(w for w in range(eng.n) if w not in mset)
+        eng.stage_move(u, v)
+        mset.discard(u)
+        mset.add(v)
+
+    between: list[float] = []
+    during: list[float] = []
+    flush_s: list[float] = []
+
+    def probe(e, phase) -> None:
+        during.append(q_lat_us())
+
+    # warmup: compile the query gather AND the whole flush pipeline with the
+    # probe attached, so nothing compiles on the clock below
+    for _ in range(3):
+        q_lat_us()
+    eng.checkpoint_hook = probe
+    stage_round(seed=100)
+    eng.flush_updates()
+    eng.checkpoint_hook = None
+    during.clear()
+
+    for rnd in range(rounds):
+        between.extend(q_lat_us() for _ in range(queries_per_round))
+        stage_round(seed=rnd)
+        eng.checkpoint_hook = probe
+        t0 = time.perf_counter()
+        eng.flush_updates()
+        flush_s.append(time.perf_counter() - t0)
+        eng.checkpoint_hook = None
+
+    b50, b99 = (float(np.percentile(between, p)) for p in (50, 99))
+    d50, d99 = (float(np.percentile(during, p)) for p in (50, 99))
+    degrade = d99 / max(b99, 1e-9)
+    flush_p50 = float(np.median(flush_s)) * 1e6
+    row("exp15.mixed_rw.query_between", b50,
+        f"p99={b99:.0f}us;n={len(between)}")
+    row("exp15.mixed_rw.query_during", d50,
+        f"p99={d99:.0f}us;n={len(during)};x{degrade:.2f}p99")
+    row("exp15.mixed_rw.flush", flush_p50,
+        f"{rounds}flushes;probes_on_clock={len(during) // rounds}")
+
+    meta("exp15.grid", grid)
+    meta("exp15.k", k)
+    meta("exp15.mu", mu)
+    meta("exp15.query_batch_size", batch)
+    meta("exp15.rounds", rounds)
+    meta("exp15.between.samples", len(between))
+    meta("exp15.during.samples", len(during))
+    meta("exp15.between.query_p50_us", round(b50, 1))
+    meta("exp15.between.query_p99_us", round(b99, 1))
+    meta("exp15.during.query_p50_us", round(d50, 1))
+    meta("exp15.during.query_p99_us", round(d99, 1))
+    meta("exp15.p99_degradation_x", round(degrade, 2))
+    meta("exp15.flush_p50_us", round(flush_p50, 1))
+    meta("exp15.engine.epoch", eng.epoch)
+
+
 def exp10_vertex_orders() -> None:
     k = 20
     g, objects = dataset(grid=28)  # static orders blow up fast; small grid
@@ -640,4 +742,5 @@ ALL = [
     exp12_moving_fleet,
     exp13_sharded_scaling,
     exp14_frontier_scaling,
+    exp15_mixed_rw,
 ]

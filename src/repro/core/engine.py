@@ -65,6 +65,35 @@ until ``flush_updates``, which is exactly the paper's batch-update-arrival
 (BUA) serving model, and what lets a server interleave large query batches
 with periodic update batches without locking.
 
+Epochs and snapshot isolation: the tables are *epoch-versioned*. Every flush
+builds epoch ``e+1`` functionally from epoch ``e`` — the pipeline is pure
+device programs reassigning the working references, never overwriting the
+published buffers — and then performs one atomic swap (``EpochStore.publish``)
+that makes ``e+1`` current. ``query_batch`` resolves its table snapshot at
+dispatch, so a query issued at ANY point during a flush reads a whole epoch —
+``e`` before the swap, ``e+1`` after — never a partially-repaired mixture,
+and a failed flush rolls the working references back to epoch ``e`` with the
+staged queue intact (retryable; serving never stops). ``keep_epochs`` (the
+retention E) bounds device memory at E table versions — ≤ E·(n+1)·k·8 bytes
+— and lets callers pin an older epoch: ``query_batch(..., epoch=e)``.
+
+Durability: ``attach_journal`` / ``load(..., journal=...)`` pair the engine
+with a write-ahead ``repro.core.journal.UpdateJournal`` — staged ops are
+fsync'd before acknowledgment, flush commits append an epoch marker, and
+``load`` replays the journal through the staged path (flushing at each
+commit marker, then rolling any uncommitted tail forward as one final
+flush), so a killed process recovers to byte-identical tables. Artifacts
+carry a content checksum + schema version; corruption raises a typed
+``ArtifactError`` (see ``repro.core.errors``) instead of serving garbage.
+
+Fault injection: ``EngineCore._checkpoint(phase)`` is the chaos seam — a
+no-op unless ``engine.checkpoint_hook`` is set. It fires at
+``"post-journal-append"`` (a staged op just hit disk), ``"mid-repair-round"``
+(after each Jacobi repair round), ``"pre-swap"`` (epoch ``e+1`` built, not
+yet published) and ``"post-swap"`` (published + journal-committed). The
+``tests/chaos`` suite drives it to simulate kill-at-any-point and to assert
+the snapshot-isolation contract above.
+
 Host/device traffic per flush: the update script and affected-row indices go
 up; a changed-row mask per frontier/repair round (which narrows the next
 round's receiver set) and, once the frontier converges, the affected rows'
@@ -89,7 +118,11 @@ from __future__ import annotations
 
 import functools
 import json
+import os
 import time
+import zipfile
+import zlib
+from collections import OrderedDict
 from typing import Iterator
 
 import jax
@@ -97,14 +130,91 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bngraph import BNGraph
+from repro.core.errors import (
+    ArtifactError,
+    EngineConfigError,
+    EpochError,
+    QueryError,
+    StagedUpdateError,
+)
+from repro.core.journal import UpdateJournal
 from repro.core.construct_jax import build_knn_tables_jax
 from repro.core.index import PAD_ID, KNNIndex
 from repro.core.updates import insert_affected_set
 from repro.kernels import ops
 
 _FORMAT = "repro-knn-index"
-_FORMAT_VERSION = 2  # v2 adds shard meta; load accepts v1 artifacts unchanged
+# v2 added shard meta; v3 adds the content checksum. Load accepts v1/v2
+# artifacts unchanged (no checksum to verify) and refuses versions > 3.
+_FORMAT_VERSION = 3
 _MAX_REPAIR_ROUNDS = 256
+
+
+def _tables_checksum(ids: np.ndarray, dists: np.ndarray, objects: np.ndarray) -> int:
+    """Content checksum over the logical artifact payload (order matters)."""
+    crc = zlib.crc32(np.ascontiguousarray(ids).tobytes())
+    crc = zlib.crc32(np.ascontiguousarray(dists).tobytes(), crc)
+    return zlib.crc32(np.ascontiguousarray(objects).tobytes(), crc)
+
+
+class EpochStore:
+    """Epoch number -> immutable table snapshot, with keep-last-E retention.
+
+    The store is the engine's single source of "what do queries read": the
+    newest published epoch is current, ``snapshot()`` resolves it at call
+    time (dispatch-time snapshot = the snapshot-isolation contract), and
+    ``snapshot(e)`` pins an older retained epoch. Retention is strict
+    keep-last-E — publishing epoch ``e`` evicts everything below
+    ``e - keep + 1`` — which is what bounds device memory at E table
+    versions. Snapshots are tuples of immutable device arrays, so retaining
+    one is a reference, not a copy.
+    """
+
+    def __init__(self, keep: int = 2):
+        self._snaps: OrderedDict[int, tuple] = OrderedDict()
+        self._keep = 0
+        self.keep = keep
+
+    @property
+    def keep(self) -> int:
+        return self._keep
+
+    @keep.setter
+    def keep(self, e: int) -> None:
+        e = int(e)
+        if e < 1:
+            raise EpochError(f"keep_epochs must be >= 1, got {e}")
+        self._keep = e
+        self._evict()
+
+    @property
+    def current(self) -> int:
+        return next(reversed(self._snaps)) if self._snaps else -1
+
+    def epochs(self) -> list[int]:
+        return list(self._snaps)
+
+    def publish(self, epoch: int, snap: tuple) -> None:
+        """Atomically make ``epoch`` current (one dict insert — a query
+        that resolved its snapshot before this call keeps reading the old
+        epoch's buffers, which stay alive via its reference)."""
+        self._snaps[epoch] = snap
+        self._evict()
+
+    def _evict(self) -> None:
+        while len(self._snaps) > self._keep:
+            self._snaps.popitem(last=False)
+
+    def snapshot(self, epoch: int | None = None) -> tuple:
+        if epoch is None:
+            return self._snaps[self.current]
+        epoch = int(epoch)
+        if epoch not in self._snaps:
+            raise EpochError(
+                f"epoch {epoch} is not retained (have {self.epochs()}); "
+                f"raise keep_epochs to pin more history"
+            )
+        return self._snaps[epoch]
 
 
 def _pow2_pad(x: int, lo: int = 8) -> int:
@@ -117,9 +227,16 @@ class EngineCore:
 
     Subclasses own the table storage and implement the device hooks:
 
-    * ``_gather_batch(us, ks)`` — the batched row gather behind
+    * ``_gather_batch(us, ks, snap)`` — the batched row gather behind
       ``query_batch`` (full index-k width; the core applies stats and the
-      per-query width slice).
+      per-query width slice). ``snap`` is the epoch snapshot resolved at
+      dispatch — the gather must read it, never the working tables, so
+      queries stay snapshot-isolated from an in-flight flush.
+    * ``_table_snapshot()`` — the current working tables as an immutable
+      snapshot tuple (references; JAX arrays are immutable), published to
+      the ``EpochStore`` at each flush commit.
+    * ``_restore_tables(snap)`` — reset the working references to a
+      snapshot (the failed-flush rollback path).
     * ``_scan_delete_rows(deletes)`` — global row ids naming any deleted
       object (the vectorized checkDel membership scan).
     * ``_purge_merge(rows, deletes, cand_ids, cand_d)`` — the fused
@@ -166,6 +283,7 @@ class EngineCore:
             "query_batches": 0,
             "last_batch_size": 0,
             "flushes": 0,
+            "flushes_failed": 0,
             "inserts_applied": 0,
             "deletes_applied": 0,
             "moves_applied": 0,
@@ -177,6 +295,15 @@ class EngineCore:
             "t_purge_merge_s": 0.0,
             "t_repair_s": 0.0,
         }
+        # epoch-versioned serving state: epoch 0 is the constructor tables;
+        # every flush publishes the next epoch and queries resolve their
+        # snapshot at dispatch (see the module docstring)
+        self.checkpoint_hook = None  # chaos seam: fn(engine, phase) or None
+        self._journal: UpdateJournal | None = None
+        self._epochs = EpochStore(keep=2)
+        self._epoch_stats: dict[int, dict] = {}
+        self._publish_epoch(0)
+        self._epoch_stats[0] = {"origin": "build"}
 
     @property
     def frontier(self) -> str:
@@ -193,8 +320,141 @@ class EngineCore:
     @frontier.setter
     def frontier(self, mode: str) -> None:
         if mode not in ("device", "host"):
-            raise ValueError(f"frontier must be 'device' or 'host', got {mode!r}")
+            raise EngineConfigError(
+                f"frontier must be 'device' or 'host', got {mode!r}"
+            )
         self._frontier = mode
+
+    # ------------------------------------------------------------------
+    # epochs / durability / fault injection
+    # ------------------------------------------------------------------
+
+    @property
+    def epoch(self) -> int:
+        """The current serving epoch: 0 at construction, +1 per flush."""
+        return self._epochs.current
+
+    @property
+    def keep_epochs(self) -> int:
+        """Retention E: how many table epochs stay resident (>= 1). Device
+        memory for tables is bounded by E·(n+1)·k·(id_bytes+dist_bytes);
+        raising E lets callers pin older epochs via
+        ``query_batch(..., epoch=e)``. Lowering it evicts immediately."""
+        return self._epochs.keep
+
+    @keep_epochs.setter
+    def keep_epochs(self, e: int) -> None:
+        self._epochs.keep = e
+        self._trim_epoch_stats()
+
+    def retained_epochs(self) -> list[int]:
+        return self._epochs.epochs()
+
+    def epoch_stats(self, epoch: int | None = None) -> dict:
+        """Per-epoch provenance: how the retained epoch was produced
+        (``origin`` build/flush/recovery plus the flush's stats dict and
+        wall time). Raises ``EpochError`` for evicted/unknown epochs."""
+        epoch = self._epochs.current if epoch is None else int(epoch)
+        if epoch not in self._epoch_stats:
+            raise EpochError(
+                f"epoch {epoch} has no retained stats "
+                f"(have {sorted(self._epoch_stats)})"
+            )
+        return dict(self._epoch_stats[epoch])
+
+    def _trim_epoch_stats(self) -> None:
+        kept = set(self._epochs.epochs())
+        self._epoch_stats = {
+            e: s for e, s in self._epoch_stats.items() if e in kept
+        }
+
+    def _publish_epoch(self, epoch: int) -> None:
+        """Publish the working tables as ``epoch`` (the atomic swap).
+        Subclasses that keep their own epoch-indexed structures (the
+        sharded engine's routing table) extend this — it is the ONE place
+        an epoch becomes visible."""
+        self._epochs.publish(epoch, self._table_snapshot())
+
+    def _checkpoint(self, phase: str) -> None:
+        """Fault-injection seam: no-op unless ``checkpoint_hook`` is set.
+
+        The chaos tests install a hook that raises (simulated
+        kill-at-this-point) or issues queries (snapshot-isolation probes).
+        Phases fired: ``post-journal-append``, ``mid-repair-round``,
+        ``pre-swap``, ``post-swap``.
+        """
+        hook = self.checkpoint_hook
+        if hook is not None:
+            hook(self, phase)
+
+    def attach_journal(self, journal, *, replay: bool = True) -> UpdateJournal:
+        """Pair the engine with a write-ahead update journal.
+
+        ``journal`` is an ``UpdateJournal`` or a path (opened/created).
+        With ``replay=True`` (default) any records already in the journal
+        are first replayed through the staged path: flush at each commit
+        marker — reproducing the original flush boundaries, so the tables
+        land byte-identical to the uncrashed engine's — then any
+        uncommitted tail is staged and rolled forward as one final flush
+        (which appends its own commit marker, making recovery idempotent).
+        From then on every ``stage_*`` call appends + fsyncs its record
+        before acknowledging, every flush commits an epoch marker, and
+        ``save`` truncates the journal once the artifact embodies it.
+        """
+        if self._journal is not None:
+            raise ArtifactError("engine already has a journal attached")
+        if self._staged:
+            raise ArtifactError(
+                "attach_journal before staging updates: the "
+                f"{len(self._staged)} already-staged ops predate the journal "
+                "and would not be durable"
+            )
+        if isinstance(journal, (str, os.PathLike)):
+            journal = UpdateJournal(journal)
+        if replay:
+            self._replay_journal(journal)
+        self._journal = journal
+        return journal
+
+    def _replay_journal(self, journal: UpdateJournal) -> None:
+        """Roll the journal forward through the oracle-equivalent staged
+        path (see ``attach_journal``). Journaling is suppressed while
+        replaying committed segments — their records are already on disk —
+        and re-enabled for the tail's roll-forward flush so its commit
+        marker is appended."""
+        records = journal.replay()
+        tail = False
+        for rec in records:
+            if rec[0] == "commit":
+                self.flush_updates()
+                self._epoch_stats[self.epoch]["origin"] = "recovery"
+                tail = False
+            elif rec[0] == "ins":
+                self.stage_insert(rec[1])
+                tail = True
+            elif rec[0] == "del":
+                self.stage_delete(rec[1])
+                tail = True
+            else:  # ("mov", u, v)
+                self.stage_move(rec[1], rec[2])
+                tail = True
+        if tail:
+            self._journal = journal  # the tail flush commits its marker
+            try:
+                self.flush_updates()
+                self._epoch_stats[self.epoch]["origin"] = "recovery"
+            finally:
+                self._journal = None
+
+    def _journal_op(self, op: tuple) -> None:
+        """WAL discipline: the record is on disk (fsync'd) before the
+        stage call acknowledges. A kill right after this point is the
+        ``post-journal-append`` chaos site — the op replays on reload even
+        though the caller may never have seen the ack (fsync completed, so
+        applying it is the correct recovery)."""
+        if self._journal is not None:
+            self._journal.append_op(op)
+            self._checkpoint("post-journal-append")
 
     @staticmethod
     def normalize_tables(
@@ -233,32 +493,39 @@ class EngineCore:
         ks = np.asarray(k, dtype=np.int32)
         if ks.ndim == 0:
             if int(ks) > self.k:
-                raise ValueError(f"query k={int(ks)} exceeds index k={self.k}")
+                raise QueryError(f"query k={int(ks)} exceeds index k={self.k}")
             return jnp.full((b,), int(ks), jnp.int32), int(ks)
         if ks.shape != (b,):
-            raise ValueError(f"per-query k must have shape ({b},), got {ks.shape}")
+            raise QueryError(f"per-query k must have shape ({b},), got {ks.shape}")
         if ks.size and int(ks.max()) > self.k:
-            raise ValueError(f"per-query k max={int(ks.max())} exceeds index k={self.k}")
+            raise QueryError(f"per-query k max={int(ks.max())} exceeds index k={self.k}")
         return jnp.asarray(ks), self.k
 
-    def _gather_batch(self, us: np.ndarray, ks: jax.Array):
-        """Batched row gather at full index-k width; ``us`` is a host array
-        so a sharded engine can route queries by owner before the device
-        roundtrip."""
+    def _gather_batch(self, us: np.ndarray, ks: jax.Array, snap: tuple):
+        """Batched row gather at full index-k width against the ``snap``
+        epoch snapshot (never the working tables — see the class doc);
+        ``us`` is a host array so a sharded engine can route queries by
+        owner before the device roundtrip."""
         raise NotImplementedError
 
-    def query_batch(self, us, k=None) -> tuple[jax.Array, jax.Array]:
+    def query_batch(self, us, k=None, *, epoch=None) -> tuple[jax.Array, jax.Array]:
         """Batched kNN: (B,) vertices -> ((B, k') ids, (B, k') dists).
 
         ``k`` may be None (index k), a scalar, or a (B,) array for mixed-k
         traffic; columns past a query's k hold the pad sentinel (-1, +inf).
-        Raises ValueError when any requested k exceeds the index's k.
+        Raises ``QueryError`` when any requested k exceeds the index's k.
+
+        ``epoch`` pins the read to a retained older epoch (``EpochError``
+        if evicted); by default the snapshot is resolved at dispatch — the
+        current epoch at THIS moment — so a flush in progress can neither
+        block the query nor leak it a partially-repaired table.
         """
         us = np.asarray(us, dtype=np.int32)
         if us.ndim != 1:
-            raise ValueError(f"queries must be a 1-D vertex array, got {us.shape}")
+            raise QueryError(f"queries must be a 1-D vertex array, got {us.shape}")
+        snap = self._epochs.snapshot(epoch)
         ks, width = self._ks_array(us.shape[0], k)
-        ids, d = self._gather_batch(us, ks)
+        ids, d = self._gather_batch(us, ks, snap)
         self._stats["queries_served"] += int(us.shape[0])
         self._stats["query_batches"] += 1
         self._stats["last_batch_size"] = int(us.shape[0])
@@ -267,12 +534,12 @@ class EngineCore:
         return ids, d
 
     def query_progressive_batch(
-        self, us, k=None
+        self, us, k=None, *, epoch=None
     ) -> Iterator[tuple[jax.Array, jax.Array]]:
         """Progressive batched output: yields the first-i prefix for
         i = 1..k from ONE gather — O(i) work to surface i results per query
         (Theorem 4.4, batched)."""
-        ids, d = self.query_batch(us, k)
+        ids, d = self.query_batch(us, k, epoch=epoch)
         for i in range(1, ids.shape[1] + 1):
             yield ids[:, :i], d[:, :i]
 
@@ -283,7 +550,7 @@ class EngineCore:
     def _check_vertex(self, u: int) -> int:
         u = int(u)
         if not 0 <= u < self.n:
-            raise ValueError(f"vertex {u} out of range [0, {self.n})")
+            raise StagedUpdateError(f"vertex {u} out of range [0, {self.n})")
         if self.bn is None:
             raise RuntimeError(
                 "updates need the BN-Graph; build the engine with bn= or load(..., bn=)"
@@ -294,7 +561,8 @@ class EngineCore:
         """Queue an object insertion; returns the staged-queue depth."""
         u = self._check_vertex(u)
         if u in self._pending:
-            raise ValueError(f"object {u} already present (or staged for insert)")
+            raise StagedUpdateError(f"object {u} already present (or staged for insert)")
+        self._journal_op(("ins", u))
         self._pending.add(u)
         self._staged.append(("ins", u))
         return len(self._staged)
@@ -303,7 +571,8 @@ class EngineCore:
         """Queue an object deletion; returns the staged-queue depth."""
         u = self._check_vertex(u)
         if u not in self._pending:
-            raise ValueError(f"object {u} absent (or staged for delete)")
+            raise StagedUpdateError(f"object {u} absent (or staged for delete)")
+        self._journal_op(("del", u))
         self._pending.discard(u)
         self._staged.append(("del", u))
         return len(self._staged)
@@ -320,11 +589,12 @@ class EngineCore:
         u = self._check_vertex(u)
         v = self._check_vertex(v)
         if u == v:
-            raise ValueError(f"move source and destination are both {u}")
+            raise StagedUpdateError(f"move source and destination are both {u}")
         if u not in self._pending:
-            raise ValueError(f"object {u} absent (or staged for delete)")
+            raise StagedUpdateError(f"object {u} absent (or staged for delete)")
         if v in self._pending:
-            raise ValueError(f"object {v} already present (or staged for insert)")
+            raise StagedUpdateError(f"object {v} already present (or staged for insert)")
+        self._journal_op(("mov", u, v))
         self._pending.discard(u)
         self._pending.add(v)
         self._staged.append(("mov", u, v))
@@ -398,6 +668,16 @@ class EngineCore:
         padded[: len(deletes)] = deletes
         return padded
 
+    def _table_snapshot(self) -> tuple:
+        raise NotImplementedError
+
+    def _restore_tables(self, snap: tuple) -> None:
+        raise NotImplementedError
+
+    def _table_bytes(self) -> int:
+        """Device bytes of ONE table epoch (int32 ids + float32 dists)."""
+        return (self.n + 1) * self.k * 8
+
     def _scan_delete_rows(self, deletes: list[int]) -> np.ndarray:
         raise NotImplementedError
 
@@ -459,6 +739,7 @@ class EngineCore:
                 changed_mask = self._repair_part(part)
                 changed_parts.append(part[changed_mask[: part.size]])
             rounds += 1
+            self._checkpoint("mid-repair-round")
             changed_rows = (
                 np.concatenate(changed_parts) if changed_parts else np.empty(0, np.int32)
             )
@@ -650,6 +931,7 @@ class EngineCore:
         cumulative per-phase wall times land in ``stats()`` as
         ``t_frontier_s`` / ``t_purge_merge_s`` / ``t_repair_s``.
         """
+        t_wall0 = time.perf_counter()
         staged = len(self._staged)
         del_set = self._objects - self._pending
         ins_set = self._pending - self._objects
@@ -659,57 +941,75 @@ class EngineCore:
         n_pure_ins = len(inserts) - len(moves)
         n_pure_del = len(deletes) - len(moves)
 
-        # -- delete side: which rows name a deleted object (device scan) --
-        purged_rows = np.empty(0, np.int32)
-        if deletes:
-            purged_rows = self._scan_delete_rows(deletes)
+        # Epoch e+1 is built on the working references; the published epoch
+        # e snapshot keeps its own references to the old buffers, so queries
+        # dispatched anywhere in here still read a whole epoch. Any failure
+        # (a device error, or a chaos hook's simulated kill) rolls the
+        # working references back to epoch e with the staged queue intact —
+        # the flush is retryable and serving never stops.
+        base = self._epochs.snapshot()
+        try:
+            # -- delete side: which rows name a deleted object (device scan) --
+            purged_rows = np.empty(0, np.int32)
+            if deletes:
+                purged_rows = self._scan_delete_rows(deletes)
 
-        # -- insert side: batched checkIns frontier, insert-first semantics --
-        # The frontier prunes against the CURRENT (pre-update) k-th bounds,
-        # exactly Algorithm 4 run before Algorithm 5 (the same order the
-        # scalar ``move_object`` oracle uses). A row the pruning misses that
-        # still needs a new object in the *final* tables must have had its
-        # k-th distance raised by the deletions — i.e. it lost an entry, so
-        # it is in the purge set and the repair rounds rebuild it from its
-        # bridge neighbors anyway. Keeping the pre-update bounds keeps the
-        # frontier as tight as the oracle's, instead of the unpruned sweep a
-        # post-purge (unbounded) k-th would trigger.
-        t0 = time.perf_counter()
-        f_rounds = 0
-        frows = np.empty(0, np.int32)
-        fc_ids = fc_d = None
-        if inserts:
-            provider = (
-                self._insert_frontier_host
-                if self.frontier == "host"
-                else self._insert_frontier
-            )
-            frows, fc_ids, fc_d, f_rounds = provider(inserts)
-        t_frontier = time.perf_counter() - t0
-
-        # -- one fused purge + merge over the union of both row sets --
-        rounds = 0
-        t_purge = t_repair = 0.0
-        if purged_rows.size or frows.size:
+            # -- insert side: batched checkIns frontier, insert-first semantics --
+            # The frontier prunes against the CURRENT (pre-update) k-th bounds,
+            # exactly Algorithm 4 run before Algorithm 5 (the same order the
+            # scalar ``move_object`` oracle uses). A row the pruning misses that
+            # still needs a new object in the *final* tables must have had its
+            # k-th distance raised by the deletions — i.e. it lost an entry, so
+            # it is in the purge set and the repair rounds rebuild it from its
+            # bridge neighbors anyway. Keeping the pre-update bounds keeps the
+            # frontier as tight as the oracle's, instead of the unpruned sweep a
+            # post-purge (unbounded) k-th would trigger.
             t0 = time.perf_counter()
-            rows = np.union1d(purged_rows, frows).astype(np.int32)
-            p = fc_ids.shape[1] if frows.size else 1
-            cand_ids = np.full((len(rows), p), -1, np.int32)
-            cand_d = np.full((len(rows), p), np.inf, np.float32)
-            if frows.size:
-                pos = np.searchsorted(rows, frows)
-                cand_ids[pos] = fc_ids
-                cand_d[pos] = fc_d
-            self._purge_merge(rows, deletes, cand_ids, cand_d)
-            t_purge = time.perf_counter() - t0
-            # -- breadth-first repair of the deletion holes (shared frontier) --
-            if purged_rows.size:
-                t0 = time.perf_counter()
-                rounds = self._repair(purged_rows)
-                t_repair = time.perf_counter() - t0
+            f_rounds = 0
+            frows = np.empty(0, np.int32)
+            fc_ids = fc_d = None
+            if inserts:
+                provider = (
+                    self._insert_frontier_host
+                    if self.frontier == "host"
+                    else self._insert_frontier
+                )
+                frows, fc_ids, fc_d, f_rounds = provider(inserts)
+            t_frontier = time.perf_counter() - t0
 
+            # -- one fused purge + merge over the union of both row sets --
+            rounds = 0
+            t_purge = t_repair = 0.0
+            if purged_rows.size or frows.size:
+                t0 = time.perf_counter()
+                rows = np.union1d(purged_rows, frows).astype(np.int32)
+                p = fc_ids.shape[1] if frows.size else 1
+                cand_ids = np.full((len(rows), p), -1, np.int32)
+                cand_d = np.full((len(rows), p), np.inf, np.float32)
+                if frows.size:
+                    pos = np.searchsorted(rows, frows)
+                    cand_ids[pos] = fc_ids
+                    cand_d[pos] = fc_d
+                self._purge_merge(rows, deletes, cand_ids, cand_d)
+                t_purge = time.perf_counter() - t0
+                # -- breadth-first repair of the deletion holes (shared frontier) --
+                if purged_rows.size:
+                    t0 = time.perf_counter()
+                    rounds = self._repair(purged_rows)
+                    t_repair = time.perf_counter() - t0
+            self._checkpoint("pre-swap")
+        except BaseException:
+            self._restore_tables(base)
+            self._stats["flushes_failed"] += 1
+            raise
+
+        # -- atomic swap: publish epoch e+1, commit the journal segment --
         self._objects = set(self._pending)
         self._staged.clear()
+        new_epoch = self.epoch + 1
+        self._publish_epoch(new_epoch)
+        if self._journal is not None:
+            self._journal.commit(new_epoch)
         self._stats["flushes"] += 1
         self._stats["inserts_applied"] += n_pure_ins
         self._stats["deletes_applied"] += n_pure_del
@@ -721,7 +1021,7 @@ class EngineCore:
         self._stats["t_frontier_s"] += t_frontier
         self._stats["t_purge_merge_s"] += t_purge
         self._stats["t_repair_s"] += t_repair
-        return {
+        result = {
             "staged": staged,
             "inserts": n_pure_ins,
             "deletes": n_pure_del,
@@ -732,6 +1032,14 @@ class EngineCore:
             "repair_rounds": rounds,
             "frontier_rounds": f_rounds,
         }
+        self._epoch_stats[new_epoch] = {
+            "origin": "flush",
+            "flush": dict(result),
+            "t_wall_s": time.perf_counter() - t_wall0,
+        }
+        self._trim_epoch_stats()
+        self._checkpoint("post-swap")
+        return result
 
     # ------------------------------------------------------------------
     # persistence / stats
@@ -746,7 +1054,7 @@ class EngineCore:
     def save(self, path) -> None:
         """Write the index artifact: one npz shared by build and serving.
 
-        Saving with a non-empty staged queue raises ``RuntimeError`` (rather
+        Saving with a non-empty staged queue raises ``ArtifactError`` (rather
         than silently flushing): staged updates are invisible to queries, so
         an implicit flush would make the saved artifact disagree with what
         the engine was serving at save time. Call ``flush_updates()`` first;
@@ -757,16 +1065,27 @@ class EngineCore:
         order — shard padding is stripped — so an artifact saved by a
         sharded engine at N shards loads into a scalar engine or a sharded
         engine at M shards (reshard-on-load); the writer's shard count is
-        recorded in the meta as provenance.
+        recorded in the meta as provenance. The meta also carries a content
+        checksum over (ids, dists, objects) that ``load_artifact`` verifies,
+        so a corrupted file raises instead of serving garbage tables.
+
+        If a journal is attached it is truncated AFTER the artifact is
+        written: the artifact now embodies every committed record (staged
+        queue is empty here), so the journal restarts empty.
         """
         if self._staged:
-            raise RuntimeError("flush_updates() before save(): staged updates pending")
+            raise ArtifactError(
+                "flush_updates() before save(): staged updates pending"
+            )
         ids, dists = self._host_tables()
+        objects = self.objects
         meta = {
             "format": _FORMAT,
             "version": _FORMAT_VERSION,
             "n": self.n,
             "k": self.k,
+            "epoch": self.epoch,
+            "checksum": _tables_checksum(ids, dists, objects),
             **self._save_meta(),
         }
         np.savez_compressed(
@@ -774,20 +1093,27 @@ class EngineCore:
             ids=ids,
             dists=dists,
             k=np.int64(self.k),
-            objects=self.objects,
+            objects=objects,
             meta=np.bytes_(json.dumps(meta).encode()),
         )
+        if self._journal is not None:
+            self._journal.truncate()
 
     def _extra_stats(self) -> dict:
         return {}
 
     def stats(self) -> dict:
         """Serving counters (merged into benchmark/serve JSON output)."""
+        retained = self.retained_epochs()
         return {
             "n": self.n,
             "k": self.k,
             "num_objects": len(self._objects),
             "staged_queue_depth": len(self._staged),
+            "epoch": self.epoch,
+            "epochs_retained": len(retained),
+            "keep_epochs": self.keep_epochs,
+            "epoch_table_bytes": len(retained) * self._table_bytes(),
             **self._extra_stats(),
             **self._stats,
         }
@@ -799,17 +1125,47 @@ def load_artifact(path) -> tuple[np.ndarray, np.ndarray, int, np.ndarray, dict]:
     Accepts the pre-engine ``knn_build`` npz too (no object set stored):
     M is recovered as the distance-0 entries — every object is its own
     0-th nearest neighbor, so exactly the objects appear at distance 0.
+
+    Robustness (all raise ``ArtifactError``): a truncated or otherwise
+    unreadable npz; a schema version newer than this code (forward skew —
+    refusing beats misreading fields that did not exist yet); a content
+    checksum that no longer matches the stored tables (bit rot, torn
+    write). v1/v2 artifacts carry no checksum and load unverified.
     """
-    with np.load(path) as z:
-        ids = z["ids"]
-        dists = z["dists"]
-        k = int(z["k"])
-        if "objects" in z.files:
-            objects = z["objects"]
-        else:
-            objects = np.unique(ids[dists == 0.0])
-            objects = objects[objects >= 0]
-        meta = json.loads(bytes(z["meta"])) if "meta" in z.files else {}
+    try:
+        with np.load(path) as z:
+            ids = z["ids"]
+            dists = z["dists"]
+            k = int(z["k"])
+            if "objects" in z.files:
+                objects = z["objects"]
+            else:
+                objects = np.unique(ids[dists == 0.0])
+                objects = objects[objects >= 0]
+            meta = json.loads(bytes(z["meta"])) if "meta" in z.files else {}
+    except (
+        OSError,
+        ValueError,
+        EOFError,
+        KeyError,
+        zlib.error,
+        zipfile.BadZipFile,
+    ) as e:
+        raise ArtifactError(f"{path}: truncated or corrupt artifact ({e})") from e
+    version = int(meta.get("version", 1))
+    if version > _FORMAT_VERSION:
+        raise ArtifactError(
+            f"{path}: artifact schema version {version} is newer than this "
+            f"code understands (max {_FORMAT_VERSION}); refusing to guess"
+        )
+    if "checksum" in meta:
+        got = _tables_checksum(ids, dists, objects)
+        if got != int(meta["checksum"]):
+            raise ArtifactError(
+                f"{path}: content checksum mismatch "
+                f"(stored {meta['checksum']}, computed {got}) — the file is "
+                f"corrupt; rebuild or restore from a good copy"
+            )
     return ids, dists, k, objects, meta
 
 
@@ -875,8 +1231,17 @@ class QueryEngine(EngineCore):
     # device hooks (single-device layout)
     # ------------------------------------------------------------------
 
-    def _gather_batch(self, us: np.ndarray, ks: jax.Array):
-        return ops.serve_gather(self._vk_ids, self._vk_d, jnp.asarray(us), ks)
+    def _table_snapshot(self) -> tuple[jax.Array, jax.Array]:
+        # JAX arrays are immutable and the flush pipeline reassigns the
+        # working refs rather than writing through them, so a snapshot is
+        # just the pair of references — zero-copy epoch retention.
+        return self._vk_ids, self._vk_d
+
+    def _restore_tables(self, snap: tuple) -> None:
+        self._vk_ids, self._vk_d = snap
+
+    def _gather_batch(self, us: np.ndarray, ks: jax.Array, snap: tuple):
+        return ops.serve_gather(snap[0], snap[1], jnp.asarray(us), ks)
 
     def _scan_delete_rows(self, deletes: list[int]) -> np.ndarray:
         del_arr = jnp.asarray(self._padded_deletes(deletes))
@@ -932,16 +1297,33 @@ class QueryEngine(EngineCore):
 
     @classmethod
     def load(
-        cls, path, *, bn: BNGraph | None = None, use_pallas: bool = False
+        cls,
+        path,
+        *,
+        bn: BNGraph | None = None,
+        use_pallas: bool = False,
+        journal=None,
     ) -> "QueryEngine":
         """Load a ``save``/``knn_build --out`` artifact. ``bn`` enables updates.
 
         Accepts v1 artifacts and the pre-engine ``knn_build`` npz (see
         ``load_artifact``); shard meta from a sharded writer is ignored —
         the stored tables are always the logical vertex-order layout.
+
+        ``journal`` (path or ``UpdateJournal``) attaches a write-ahead
+        journal and REPLAYS it first: updates journaled after the artifact
+        was saved — committed flushes and the uncommitted tail — are rolled
+        forward through the staged path, recovering exactly the tables a
+        killed process was serving (see ``attach_journal``). Requires
+        ``bn`` when the journal is non-empty.
         """
         ids, dists, k, objects, _ = load_artifact(path)
-        return cls(ids, dists.astype(np.float32), k, objects, bn=bn, use_pallas=use_pallas)
+        eng = cls(
+            ids, dists.astype(np.float32), k, objects, bn=bn, use_pallas=use_pallas
+        )
+        if journal is not None:
+            eng.attach_journal(journal)
+        return eng
 
 
 @functools.partial(jax.jit, static_argnames=("n1",))

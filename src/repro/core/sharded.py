@@ -48,12 +48,30 @@ Execution model
   rounds only the changed-row frontier's *vertex ids* cross shard
   boundaries (host-side), never row data.
 
+Epochs and routing
+------------------
+Ownership and epoch resolution go through ONE indirection, the
+``ShardRoutingTable``: vertex -> owner shard (a searchsorted against the
+stored shard-start boundaries — never inline ``v // R`` arithmetic at the
+call sites) and epoch -> the sharded global buffers, with
+``shard_buffers(epoch)`` resolving an individual shard to its device-local
+buffer pair. ``flush_updates`` (the shared core) publishes each new epoch
+through ``_publish_epoch``, which the sharded engine extends to swap the
+routing table's epoch entry in the same atomic step — so a query dispatched
+mid-flush routes to every shard's OLD buffers or every shard's NEW buffers,
+never a mixture, and the stepping stone to replicated hot shards (ROADMAP)
+is a routing-table edit, not an arithmetic hunt. The engine inherits the
+core's journal/WAL durability unchanged (the journal records logical object
+updates, which are layout-independent).
+
 The engine is drop-in for ``QueryEngine``: same constructor shape, same
 staged-update API, same artifact format. Artifacts always store the logical
 (n, k) vertex-order tables, so an index saved at N shards loads at M shards
 (or unsharded) — reshard-on-load.
 """
 from __future__ import annotations
+
+from collections import OrderedDict
 
 import numpy as np
 
@@ -65,6 +83,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core.bngraph import BNGraph
 from repro.core.construct_jax import build_knn_tables_jax
 from repro.core.engine import EngineCore, _pow2_pad, load_artifact
+from repro.core.errors import EpochError
 from repro.core.index import KNNIndex
 from repro.kernels import ops
 
@@ -107,6 +126,89 @@ def shard_tables(
         jax.device_put(vk_ids[src_dev], spec),
         jax.device_put(vk_d[src_dev], spec),
     )
+
+
+class ShardRoutingTable:
+    """The single shard indirection: vertex -> owner shard -> buffers per epoch.
+
+    Two jobs, one table:
+
+    * **Ownership.** ``owner(vs)`` is a ``searchsorted`` against the stored
+      shard-start vertex boundaries, and ``padded_rows(vs)`` is the vertex's
+      global padded-row address derived from the owner's stored start.
+      Every routing decision in the engine reads THIS table instead of
+      inlining ``v // R`` — so moving to uneven ranges or replicated hot
+      shards (the ROADMAP follow-on) means editing the table, not hunting
+      down arithmetic.
+    * **Epoch resolution.** ``publish(epoch, buffers)`` records the sharded
+      global id/dist arrays serving an epoch, in the same atomic step the
+      core's ``EpochStore`` swap runs; ``buffers(epoch)`` resolves a
+      retained epoch back to them, and ``shard_buffers(epoch)`` resolves
+      one step further — shard id -> (device, local ids buffer, local dists
+      buffer) via the arrays' addressable shards. That is the "shard ->
+      device buffers per epoch" map: per-shard epoch swap behind one
+      indirection.
+    """
+
+    def __init__(self, n: int, num_shards: int):
+        self.n = int(n)
+        self.num_shards = int(num_shards)
+        self.shard_rows = -(-self.n // self.num_shards)  # ceil
+        self._starts = np.arange(self.num_shards, dtype=np.int64) * self.shard_rows
+        self._by_epoch: OrderedDict[int, tuple] = OrderedDict()
+
+    # -- ownership ------------------------------------------------------
+
+    def owner(self, vs: np.ndarray) -> np.ndarray:
+        """Owner shard per vertex (vertices assumed clipped to [0, n])."""
+        vs = np.asarray(vs, np.int64)
+        return np.minimum(
+            np.searchsorted(self._starts, vs, side="right") - 1,
+            self.num_shards - 1,
+        )
+
+    def padded_rows(
+        self, vs: np.ndarray, own: np.ndarray | None = None
+    ) -> np.ndarray:
+        """Global padded-row address of each vertex: the owner's block base
+        plus the vertex's offset from the owner's start boundary."""
+        vs = np.asarray(vs, np.int64)
+        if own is None:
+            own = self.owner(vs)
+        return own * (self.shard_rows + 1) + (vs - self._starts[own])
+
+    # -- epoch -> buffers ----------------------------------------------
+
+    def publish(self, epoch: int, buffers: tuple, keep=None) -> None:
+        self._by_epoch[int(epoch)] = buffers
+        if keep is not None:
+            self.trim(keep)
+
+    def trim(self, keep) -> None:
+        kept = set(keep)
+        for e in [e for e in self._by_epoch if e not in kept]:
+            del self._by_epoch[e]
+
+    def epochs(self) -> list[int]:
+        return list(self._by_epoch)
+
+    def buffers(self, epoch: int) -> tuple:
+        epoch = int(epoch)
+        if epoch not in self._by_epoch:
+            raise EpochError(
+                f"epoch {epoch} is not in the routing table "
+                f"(have {self.epochs()})"
+            )
+        return self._by_epoch[epoch]
+
+    def shard_buffers(self, epoch: int) -> dict[int, tuple]:
+        """shard id -> (device, local ids buffer, local dists buffer)."""
+        ids_g, d_g = self.buffers(epoch)
+        out: dict[int, tuple] = {}
+        for si, sd in zip(ids_g.addressable_shards, d_g.addressable_shards):
+            s = (si.index[0].start or 0) // (self.shard_rows + 1)
+            out[s] = (si.device, si.data, sd.data)
+        return out
 
 
 _DEVICE_FN_CACHE: dict[tuple, dict] = {}
@@ -273,15 +375,16 @@ class ShardedQueryEngine(EngineCore):
         super().__init__(k, objects, bn=bn, use_pallas=use_pallas)
 
     def _init_layout(self, k: int) -> None:
-        """Derive the host side of the partitioned layout (shard_rows, the
-        vertex -> global-padded-row map) and bind the shared device programs.
-        Requires ``self.mesh``, ``self.num_shards`` and ``self.n`` to be set;
-        the single source of the layout arithmetic for every constructor."""
+        """Derive the host side of the partitioned layout (the routing
+        table, shard_rows, the vertex -> global-padded-row map) and bind
+        the shared device programs. Requires ``self.mesh``,
+        ``self.num_shards`` and ``self.n`` to be set; the single source of
+        the layout arithmetic for every constructor."""
         if self.num_shards > max(self.n, 1):
             raise ValueError(f"cannot split n={self.n} rows into {self.num_shards} shards")
-        self.shard_rows = -(-self.n // self.num_shards)
-        v = np.arange(self.n, dtype=np.int64)
-        self._g_of_v = (v // self.shard_rows) * (self.shard_rows + 1) + v % self.shard_rows
+        self.routing = ShardRoutingTable(self.n, self.num_shards)
+        self.shard_rows = self.routing.shard_rows
+        self._g_of_v = self.routing.padded_rows(np.arange(self.n, dtype=np.int64))
         self._make_device_fns(k)
 
     # ------------------------------------------------------------------
@@ -337,6 +440,7 @@ class ShardedQueryEngine(EngineCore):
         bn: BNGraph | None = None,
         shards: int | None = None,
         use_pallas: bool = False,
+        journal=None,
     ) -> "ShardedQueryEngine":
         """Load a ``save`` artifact into a sharded engine — reshard-on-load.
 
@@ -345,14 +449,22 @@ class ShardedQueryEngine(EngineCore):
         across the saved count capped at the visible device count (an
         artifact saved at 8 shards still loads on a 2-device host), and an
         explicit ``shards=M`` overrides it entirely.
+
+        ``journal`` attaches + replays a write-ahead journal exactly as in
+        ``QueryEngine.load`` — the journal records logical object updates,
+        so a journal written by a scalar (or differently-sharded) engine
+        replays here and recovers the same logical tables.
         """
         ids, dists, k, objects, meta = load_artifact(path)
         if shards is None:
             shards = min(int(meta.get("shards", 1)), len(jax.devices()))
-        return cls(
+        eng = cls(
             ids, dists.astype(np.float32), k, objects,
             bn=bn, shards=shards, use_pallas=use_pallas,
         )
+        if journal is not None:
+            eng.attach_journal(journal)
+        return eng
 
     def to_index(self) -> KNNIndex:
         """Read the sharded tables back into the host ``KNNIndex`` view."""
@@ -365,6 +477,36 @@ class ShardedQueryEngine(EngineCore):
     def tables(self) -> tuple[jax.Array, jax.Array]:
         """The live sharded (S*(R+1), k) global id/dist tables."""
         return self._ids_g, self._d_g
+
+    # ------------------------------------------------------------------
+    # epoch hooks (per-shard swap behind the routing table)
+    # ------------------------------------------------------------------
+
+    def _table_snapshot(self) -> tuple[jax.Array, jax.Array]:
+        # sharded global arrays are immutable too (the flush reassigns the
+        # working refs), so a snapshot is the pair of references — each one
+        # pinning its per-device buffers for the epoch's lifetime
+        return self._ids_g, self._d_g
+
+    def _restore_tables(self, snap: tuple) -> None:
+        self._ids_g, self._d_g = snap
+
+    def _publish_epoch(self, epoch: int) -> None:
+        # one atomic step: the EpochStore swap and the routing table's
+        # epoch -> buffers entry move together, so the indirection can
+        # never resolve an epoch to another epoch's shards
+        super()._publish_epoch(epoch)
+        self.routing.publish(
+            epoch, self._epochs.snapshot(epoch), keep=self._epochs.epochs()
+        )
+
+    def _trim_epoch_stats(self) -> None:
+        super()._trim_epoch_stats()
+        self.routing.trim(self._epochs.epochs())
+
+    def _table_bytes(self) -> int:
+        # the sharded layout pays for the padded rows, count them honestly
+        return self.num_shards * (self.shard_rows + 1) * self.k * 8
 
     # ------------------------------------------------------------------
     # device programs (cached per (device set, block, k) at module level —
@@ -410,31 +552,31 @@ class ShardedQueryEngine(EngineCore):
         dummy row -> pad sentinel), everything still outside clamps into
         [0, n], and ids >= n read a dummy row -> pad sentinel (-1, +inf).
         """
-        r = self.shard_rows
         vs = np.asarray(vs, np.int64)
         vs = np.where(vs < 0, vs + self.n + 1, vs)  # jnp negative wraparound
         vs = np.clip(vs, 0, self.n)                 # then the XLA gather clamp
         oob = vs >= self.n
-        owner = np.minimum(vs // r, self.num_shards - 1)
+        owner = self.routing.owner(vs)
         order, o_sorted, slot, bmax = self._group_by_owner(owner)
         bmax = _pow2_pad(bmax, lo=8)
         qglob = np.full((self.num_shards, bmax), -1, np.int32)
         qglob[o_sorted, slot] = np.where(
-            oob[order], -1, o_sorted * (r + 1) + vs[order] % r
+            oob[order], -1, self.routing.padded_rows(vs[order], o_sorted)
         )
         fidx = np.empty(len(vs), dtype=np.int64)
         fidx[order] = o_sorted * bmax + slot
         return qglob, fidx
 
-    def _gather_batch(self, us: np.ndarray, ks: jax.Array):
+    def _gather_batch(self, us: np.ndarray, ks: jax.Array, snap: tuple):
+        ids_g, d_g = snap
         if self.num_shards == 1:
             # one shard: the global layout IS the scalar (n+1, k) layout and
             # routing is the identity, so serve through the scalar gather
             # (same jitted program the plain engine runs — 1-shard parity)
-            return ops.serve_gather(self._ids_g, self._d_g, jnp.asarray(us), ks)
+            return ops.serve_gather(ids_g, d_g, jnp.asarray(us), ks)
         qglob, fidx = self._route(us)
         return self._gather_fn(
-            self._ids_g, self._d_g, jnp.asarray(qglob), jnp.asarray(fidx), ks
+            ids_g, d_g, jnp.asarray(qglob), jnp.asarray(fidx), ks
         )
 
     def _fetch_rows(self, vs: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
@@ -475,15 +617,15 @@ class ShardedQueryEngine(EngineCore):
     ) -> np.ndarray:
         """Split a global row batch by owner shard and run the per-shard
         fused purge+merge; returns the per-row changed mask (input order)."""
-        s, r = self.num_shards, self.shard_rows
+        s = self.num_shards
         b = len(rows)
-        order, o_sorted, slot, rmax = self._group_by_owner(rows // r)
+        order, o_sorted, slot, rmax = self._group_by_owner(self.routing.owner(rows))
         rmax = _pow2_pad(rmax, lo=16)
         p = cand_ids.shape[1]
         rglob = np.full((s, rmax), -1, np.int32)
         ci = np.full((s, rmax, p), -1, np.int32)
         cd = np.full((s, rmax, p), np.inf, np.float32)
-        rglob[o_sorted, slot] = o_sorted * (r + 1) + rows[order] % r
+        rglob[o_sorted, slot] = self.routing.padded_rows(rows[order], o_sorted)
         ci[o_sorted, slot] = cand_ids[order]
         cd[o_sorted, slot] = cand_d[order]
         self._ids_g, self._d_g, changed = self._purge_fn(
@@ -616,13 +758,13 @@ class ShardedQueryEngine(EngineCore):
         """Split a receiver batch by owner shard and run the per-shard
         min-update; returns (new state, per-row changed mask) with the mask
         reordered back to the caller's row order."""
-        s, r = self.num_shards, self.shard_rows
-        order, o_sorted, slot, rmax = self._group_by_owner(rows // r)
+        s = self.num_shards
+        order, o_sorted, slot, rmax = self._group_by_owner(self.routing.owner(rows))
         rmax = _pow2_pad(rmax, lo=16)
         b = vals.shape[1]
         rglob = np.full((s, rmax), -1, np.int32)
         vv = np.full((s, rmax, b), np.inf, np.float32)
-        rglob[o_sorted, slot] = o_sorted * (r + 1) + rows[order] % r
+        rglob[o_sorted, slot] = self.routing.padded_rows(rows[order], o_sorted)
         vv[o_sorted, slot] = vals[order]
         state, changed = self._fmin_fn(state, jnp.asarray(rglob), jnp.asarray(vv))
         changed = np.asarray(changed)

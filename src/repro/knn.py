@@ -26,6 +26,13 @@ vertex-sharded tables on a 1-D device mesh, exactly equivalent to the scalar
 engine (tests/core/test_sharded.py). Everything re-exported here is covered
 by the equivalence tests, so internal layouts may change under it without
 breaking callers.
+
+Durability and failure taxonomy: ``load_engine(..., journal="wal.bin")``
+attaches a write-ahead ``UpdateJournal`` and replays any records a killed
+process left behind (crash recovery to byte-identical tables — see
+``repro.core.journal``). Every error the system raises subclasses
+``RepError`` (``repro.core.errors``): catch it to handle exactly
+"this system rejected the request / detected corruption".
 """
 from __future__ import annotations
 
@@ -34,21 +41,40 @@ import numpy as np
 from repro.core.bngraph import BNGraph, build_bngraph
 from repro.core.construct_jax import build_knn_index_jax, build_knn_tables_jax
 from repro.core.engine import QueryEngine
+from repro.core.errors import (
+    ArtifactError,
+    EngineConfigError,
+    EpochError,
+    JournalError,
+    QueryError,
+    RepError,
+    StagedUpdateError,
+)
 from repro.core.index import KNNIndex, indices_equivalent
+from repro.core.journal import UpdateJournal
 from repro.core.reference import knn_index_cons_plus
-from repro.core.sharded import ShardedQueryEngine, make_mesh
+from repro.core.sharded import ShardedQueryEngine, ShardRoutingTable, make_mesh
 from repro.core.updates import delete_object, insert_object, move_object
 from repro.graph.csr import Graph
 from repro.graph.generators import pick_objects, road_network
 from repro.workloads.fleet import FleetSim
 
 __all__ = [
+    "ArtifactError",
     "BNGraph",
+    "EngineConfigError",
+    "EpochError",
     "FleetSim",
     "Graph",
+    "JournalError",
     "KNNIndex",
     "QueryEngine",
+    "QueryError",
+    "RepError",
+    "ShardRoutingTable",
     "ShardedQueryEngine",
+    "StagedUpdateError",
+    "UpdateJournal",
     "build_bngraph",
     "build_engine",
     "build_index",
@@ -117,6 +143,7 @@ def load_engine(
     bn: BNGraph | None = None,
     shards: int | None = None,
     use_pallas: bool = False,
+    journal=None,
 ) -> QueryEngine | ShardedQueryEngine:
     """Load a ``QueryEngine.save`` / ``knn_build --out`` artifact.
 
@@ -124,10 +151,18 @@ def load_engine(
     of how many shards wrote the artifact (reshard-on-load: the artifact
     stores the logical vertex-order tables). ``shards=None`` keeps the
     scalar engine.
+
+    ``journal`` (a path or ``UpdateJournal``) attaches the write-ahead
+    journal and replays whatever a killed process left in it — committed
+    flush segments and the uncommitted tail — recovering the exact tables
+    that process was serving. Requires ``bn`` when the journal is
+    non-empty (replay runs real updates).
     """
     if shards is not None:
-        return ShardedQueryEngine.load(path, bn=bn, shards=shards, use_pallas=use_pallas)
-    return QueryEngine.load(path, bn=bn, use_pallas=use_pallas)
+        return ShardedQueryEngine.load(
+            path, bn=bn, shards=shards, use_pallas=use_pallas, journal=journal
+        )
+    return QueryEngine.load(path, bn=bn, use_pallas=use_pallas, journal=journal)
 
 
 def stage_random_updates(engine: QueryEngine, mset: set, rng=None, count: int = 1) -> int:

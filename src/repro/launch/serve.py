@@ -154,6 +154,19 @@ def serve_knn_fleet(args, g, bn, k: int, batch: int, t_bn: float) -> dict:
     return stats
 
 
+def _arm_injected_flush_failure(engine) -> None:
+    """One-shot fault: the next flush dies just before its epoch swap (the
+    worst-case point — all the work done, nothing published). Exercises the
+    degrade-gracefully path end to end from the CLI."""
+
+    def hook(e, phase):
+        if phase == "pre-swap":
+            e.checkpoint_hook = None
+            raise RuntimeError("injected flush failure (--inject-flush-failure)")
+
+    engine.checkpoint_hook = hook
+
+
 def serve_knn(args) -> dict:
     """kNN serving loop: batched queries + staged updates on a QueryEngine."""
     from repro import knn
@@ -202,9 +215,16 @@ def serve_knn(args) -> dict:
     # warmup: compile the gather once outside the timed loop
     jax.block_until_ready(engine.query_batch(rng.integers(0, g.n, size=batch))[0])
 
+    # A failed flush (device error, corrupted batch, injected fault) must
+    # not kill serving: the engine rolls back to the last good epoch with
+    # the staged queue intact, so we log it, keep answering queries, and
+    # retry the accumulated queue next round. --fail-fast restores the old
+    # die-on-first-error behavior for debugging.
     t_query = t_update = 0.0
     queries = updates = 0
-    for _ in range(rounds):
+    errors = 0
+    last_error = None
+    for rnd in range(rounds):
         us = rng.integers(0, g.n, size=batch)
         t0 = time.perf_counter()
         ids, dists = engine.query_batch(us)
@@ -216,9 +236,19 @@ def serve_knn(args) -> dict:
             t0 = time.perf_counter()
             knn.stage_random_updates(engine, mset, rng, n_upd_round)
             depth = engine.queue_depth
-            engine.flush_updates()
+            if args.inject_flush_failure and rnd + 1 == args.inject_flush_failure:
+                _arm_injected_flush_failure(engine)
+            try:
+                engine.flush_updates()
+                updates += depth
+            except Exception as e:
+                if args.fail_fast:
+                    raise
+                errors += 1
+                last_error = f"{type(e).__name__}: {e}"
+            finally:
+                engine.checkpoint_hook = None
             t_update += time.perf_counter() - t0
-            updates += depth
 
     wall = t_query + t_update
     stats = {
@@ -231,6 +261,8 @@ def serve_knn(args) -> dict:
         "build_s": round(t_build, 3),
         "queries": queries,
         "updates": updates,
+        "errors": errors,
+        "last_error": last_error,
         "queries_per_s": round(queries / max(t_query, 1e-9), 1),
         "updates_per_s": round(updates / max(t_update, 1e-9), 1) if updates else 0.0,
         "ops_per_s": round((queries + updates) / max(wall, 1e-9), 1),
@@ -271,6 +303,15 @@ def main():
     ap.add_argument("--ticks", type=int, default=50,
                     help="fleet workload: serving ticks (one flush per tick)")
     ap.add_argument("--artifact", default=None, help="serve a knn_build --out npz")
+    ap.add_argument("--fail-fast", action="store_true",
+                    help="knn: die on the first failed flush instead of "
+                         "logging it (errors/last_error in the JSON stats) "
+                         "and continuing on the last good epoch")
+    ap.add_argument("--inject-flush-failure", type=int, default=0,
+                    metavar="ROUND",
+                    help="knn: make the flush of round ROUND fail just "
+                         "before its epoch swap (fault-injection smoke for "
+                         "the graceful-degradation path)")
     ap.add_argument("--shards", type=int, default=0,
                     help="serve from the vertex-sharded multi-device engine "
                          "with this many shards (0 = scalar engine); needs "

@@ -1,0 +1,176 @@
+"""Fault-injection harness: kill-at-any-point crash recovery.
+
+Drives the engine's ``_checkpoint(phase)`` seam with a hook that raises a
+``SimulatedKill`` at one injection site — after a journal append, mid
+repair round, just before the epoch swap, just after it — then "reboots"
+by loading a fresh engine from the last saved artifact plus the journal.
+The property (ISSUE 6 acceptance): for EVERY site, on BOTH engines, the
+recovered tables are byte-identical to an uncrashed twin that applied the
+same updates, and indices_equivalent to a fresh scalar-oracle rebuild of
+the final object set.
+
+Why the twin and the oracle are separate assertions: the flush pipeline is
+deterministic per batch, so recovery replaying the journal's flush
+boundaries reproduces the uncrashed engine's tables exactly (array_equal);
+the oracle rebuild may break distance ties differently, so that comparison
+is the tie-tolerant ``indices_equivalent`` — the same split the seed
+engine tests use.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro import knn
+from repro.core.reference import knn_index_cons_plus
+from repro.graph.generators import pick_objects, road_network
+
+PHASES = ["post-journal-append", "pre-swap", "mid-repair-round", "post-swap"]
+ENGINES = ["scalar", "sharded"]
+
+
+class SimulatedKill(Exception):
+    """Raised by the chaos hook to model the process dying at this point."""
+
+
+def _setup(grid=8, mu=0.2, k=4, seed=0):
+    g = road_network(grid, grid, seed=seed)
+    objects = pick_objects(g.n, mu, seed=seed)
+    bn = knn.build_bngraph(g)
+    return g, bn, objects, k
+
+
+def _build(kind, bn, objects, k):
+    if kind == "scalar":
+        return knn.build_engine(bn, objects, k)
+    return knn.build_sharded_engine(bn, objects, k, shards=None)
+
+
+def _load(kind, path, bn, journal):
+    shards = len(jax.devices()) if kind == "sharded" else None
+    return knn.load_engine(path, bn=bn, shards=shards, journal=journal)
+
+
+def _stage_mix(eng, mset, seed, count=5):
+    """Deterministic update batch given (seed, mset state): random net
+    inserts/deletes plus one explicit move, so every flush has a purge set
+    (the move's source) and the repair rounds — hence the mid-repair-round
+    site — always run."""
+    knn.stage_random_updates(eng, mset, rng=seed, count=count)
+    u = sorted(mset)[0]
+    v = next(w for w in range(eng.n) if w not in mset)
+    eng.stage_move(u, v)
+    mset.discard(u)
+    mset.add(v)
+
+
+def _tables(eng):
+    idx = eng.to_index()
+    return idx.ids, idx.dists
+
+
+@pytest.mark.parametrize("phase", PHASES)
+@pytest.mark.parametrize("kind", ENGINES)
+def test_kill_point_recovery(kind, phase, tmp_path):
+    g, bn, objects, k = _setup()
+    art, wal = str(tmp_path / "idx.npz"), str(tmp_path / "wal.bin")
+
+    eng = _build(kind, bn, objects, k)
+    mset = set(int(o) for o in objects)
+    eng.save(art)
+    eng.attach_journal(wal)
+
+    _stage_mix(eng, mset, seed=1)  # committed segment: flushed before the kill
+    eng.flush_updates()
+    _stage_mix(eng, mset, seed=2)  # the batch the crash interrupts
+
+    fired = []
+
+    def hook(e, ph):
+        if ph == phase:
+            fired.append(ph)
+            raise SimulatedKill(ph)
+
+    eng.checkpoint_hook = hook
+    if phase == "post-journal-append":
+        # the kill lands between the fsync and the ack: the caller never
+        # saw the stage call return, but the record is durable, so
+        # recovery MUST apply it
+        extra = next(w for w in range(eng.n) if w not in mset)
+        with pytest.raises(SimulatedKill):
+            eng.stage_insert(extra)
+        mset.add(extra)
+    else:
+        with pytest.raises(SimulatedKill):
+            eng.flush_updates()
+    assert fired, f"phase {phase} never fired"
+    eng.checkpoint_hook = None
+
+    # -- reboot: fresh engine from the artifact + journal replay ---------
+    rec = _load(kind, art, bn, wal)
+
+    # -- uncrashed twin: same artifact, same updates, same flush fences --
+    twin = _load(kind, art, bn, None)
+    tset = set(int(o) for o in objects)
+    _stage_mix(twin, tset, seed=1)
+    twin.flush_updates()
+    _stage_mix(twin, tset, seed=2)
+    if phase == "post-journal-append":
+        twin.stage_insert(extra)
+        tset.add(extra)
+    twin.flush_updates()
+    assert tset == mset
+
+    assert rec.epoch == twin.epoch
+    assert np.array_equal(rec.objects, twin.objects)
+    ri, rd = _tables(rec)
+    ti, td = _tables(twin)
+    assert np.array_equal(ri, ti) and np.array_equal(rd, td)
+
+    # query surface, not just the raw tables
+    us = np.arange(g.n, dtype=np.int32)
+    qi_r, qd_r = rec.query_batch(us)
+    qi_t, qd_t = twin.query_batch(us)
+    assert np.array_equal(np.asarray(qi_r), np.asarray(qi_t))
+    assert np.array_equal(np.asarray(qd_r), np.asarray(qd_t))
+
+    # and the scalar-oracle ground truth (tie-tolerant)
+    fresh = knn_index_cons_plus(bn, np.array(sorted(mset)), k)
+    assert knn.indices_equivalent(fresh, rec.to_index())
+
+
+@pytest.mark.parametrize("kind", ENGINES)
+def test_failed_flush_rolls_back_and_is_retryable(kind):
+    """A flush that dies before the swap leaves the engine serving epoch e
+    with the staged queue intact; dropping the fault and flushing again
+    succeeds — serving never stops and no update is lost."""
+    g, bn, objects, k = _setup()
+    eng = _build(kind, bn, objects, k)
+    mset = set(int(o) for o in objects)
+    us = np.arange(g.n, dtype=np.int32)
+    before_i, before_d = eng.query_batch(us)
+    epoch0 = eng.epoch
+
+    _stage_mix(eng, mset, seed=3)
+    depth = eng.queue_depth
+
+    def hook(e, ph):
+        if ph == "pre-swap":
+            raise SimulatedKill(ph)
+
+    eng.checkpoint_hook = hook
+    with pytest.raises(SimulatedKill):
+        eng.flush_updates()
+    eng.checkpoint_hook = None
+
+    assert eng.epoch == epoch0
+    assert eng.queue_depth == depth
+    assert eng.stats()["flushes_failed"] == 1
+    mid_i, mid_d = eng.query_batch(us)
+    assert np.array_equal(np.asarray(mid_i), np.asarray(before_i))
+    assert np.array_equal(np.asarray(mid_d), np.asarray(before_d))
+
+    stats = eng.flush_updates()  # retry, fault removed
+    assert stats["staged"] == depth
+    assert eng.epoch == epoch0 + 1
+    fresh = knn_index_cons_plus(bn, np.array(sorted(mset)), k)
+    assert knn.indices_equivalent(fresh, eng.to_index())

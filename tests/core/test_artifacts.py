@@ -1,0 +1,185 @@
+"""Artifact + journal robustness: corruption raises typed errors, torn
+journal tails recover cleanly (ISSUE 6 satellite).
+
+Table-driven over the corruption modes an on-disk index can meet:
+truncated npz, content-checksum mismatch, schema-version skew — each must
+raise ``ArtifactError`` (never silently serve garbage tables) — plus the
+journal's torn-tail recovery and the error-taxonomy type contracts.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro import knn
+from repro.core.engine import _FORMAT_VERSION
+from repro.graph.generators import pick_objects, road_network
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    g = road_network(8, 8, seed=0)
+    objects = pick_objects(g.n, 0.2, seed=0)
+    bn = knn.build_bngraph(g)
+    eng = knn.build_engine(bn, objects, k=4)
+    art = str(tmp_path_factory.mktemp("artifacts") / "idx.npz")
+    eng.save(art)
+    return g, bn, objects, eng, art
+
+
+def _rewrite(src, dst, mutate):
+    """Round-trip the npz through a mutation of (arrays, meta)."""
+    with np.load(src) as z:
+        data = {f: z[f] for f in z.files}
+    meta = json.loads(bytes(data["meta"]))
+    mutate(data, meta)
+    data["meta"] = np.bytes_(json.dumps(meta).encode())
+    np.savez_compressed(dst, **data)
+
+
+def _truncate(src, dst):
+    raw = open(src, "rb").read()
+    with open(dst, "wb") as f:
+        f.write(raw[: len(raw) // 2])
+
+
+def _flip_table_bit(data, meta):
+    # tables change, stored checksum doesn't -> mismatch
+    data["dists"] = data["dists"] + np.float32(1.0)
+
+
+def _future_version(data, meta):
+    meta["version"] = _FORMAT_VERSION + 7
+
+
+CORRUPTIONS = [
+    ("truncated", lambda s, d: _truncate(s, d), "truncated or corrupt"),
+    ("checksum", lambda s, d: _rewrite(s, d, _flip_table_bit), "checksum mismatch"),
+    ("version-skew", lambda s, d: _rewrite(s, d, _future_version), "schema version"),
+]
+
+
+@pytest.mark.parametrize("name,corrupt,msg", CORRUPTIONS, ids=[c[0] for c in CORRUPTIONS])
+def test_corrupt_artifact_raises_typed_error(built, tmp_path, name, corrupt, msg):
+    _, bn, _, _, art = built
+    bad = str(tmp_path / f"{name}.npz")
+    corrupt(art, bad)
+    with pytest.raises(knn.ArtifactError, match=msg):
+        knn.load_engine(bad, bn=bn)
+    # the taxonomy keeps the pre-taxonomy builtin contract too
+    with pytest.raises(RuntimeError):
+        knn.load_engine(bad, bn=bn)
+
+
+def test_unversioned_legacy_artifact_still_loads(built, tmp_path):
+    """v1/v2 artifacts carry no checksum: they load unverified rather than
+    being rejected (no flag day for existing saved indexes)."""
+    g, bn, _, eng, art = built
+    legacy = str(tmp_path / "legacy.npz")
+
+    def strip(data, meta):
+        meta.pop("checksum", None)
+        meta["version"] = 1
+
+    _rewrite(art, legacy, strip)
+    eng2 = knn.load_engine(legacy, bn=bn)
+    us = np.arange(g.n, dtype=np.int32)
+    a, b = eng.query_batch(us), eng2.query_batch(us)
+    assert np.array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    assert np.array_equal(np.asarray(a[1]), np.asarray(b[1]))
+
+
+def test_save_with_pending_queue_raises_artifact_error(built, tmp_path):
+    g, bn, objects, _, art = built
+    eng = knn.load_engine(art, bn=bn)
+    eng.stage_insert(next(v for v in range(g.n) if v not in set(eng.objects.tolist())))
+    with pytest.raises(knn.ArtifactError):
+        eng.save(str(tmp_path / "nope.npz"))
+    with pytest.raises(RuntimeError):  # seed contract preserved
+        eng.save(str(tmp_path / "nope.npz"))
+
+
+def test_journal_torn_tail_truncated_and_recovered(built, tmp_path):
+    """A partial frame from a kill mid-write (or trailing garbage) is
+    detected by the length/CRC framing, truncated off, and everything
+    before it replays — the engine recovers the acknowledged prefix."""
+    g, bn, objects, _, art = built
+    wal = str(tmp_path / "wal.bin")
+    eng = knn.load_engine(art, bn=bn, journal=wal)
+    mset = set(int(o) for o in objects)
+    knn.stage_random_updates(eng, mset, rng=5, count=4)
+    eng.flush_updates()
+    knn.stage_random_updates(eng, mset, rng=6, count=3)
+    good_size = os.path.getsize(wal)
+
+    with open(wal, "ab") as f:  # torn frame: length promises more than exists
+        f.write(b"\xff\x00\x00\x00\x12\x34\x56\x78partial")
+
+    j = knn.UpdateJournal(wal)
+    rec = knn.load_engine(art, bn=bn, journal=j)
+    assert j.dropped_bytes > 0
+    assert os.path.getsize(wal) >= good_size  # truncated back + tail commit
+
+    eng.flush_updates()
+    ri, ti = rec.to_index(), eng.to_index()
+    assert np.array_equal(ri.ids, ti.ids)
+    assert np.array_equal(ri.dists, ti.dists)
+
+
+def test_journal_bad_magic_raises(tmp_path):
+    p = str(tmp_path / "notawal.bin")
+    with open(p, "wb") as f:
+        f.write(b"GARBAGE!and then some")
+    with pytest.raises(knn.JournalError):
+        knn.UpdateJournal(p)
+
+
+def test_journal_truncates_on_save_not_on_flush(built, tmp_path):
+    g, bn, objects, _, art = built
+    wal = str(tmp_path / "wal.bin")
+    eng = knn.load_engine(art, bn=bn, journal=wal)
+    base = os.path.getsize(wal)
+    mset = set(int(o) for o in objects)
+    knn.stage_random_updates(eng, mset, rng=7, count=3)
+    eng.flush_updates()
+    # flush committed a marker but did NOT truncate: the artifact on disk
+    # still predates the flush, the journal is the only durable copy
+    assert os.path.getsize(wal) > base
+    eng.save(str(tmp_path / "fresh.npz"))
+    assert os.path.getsize(wal) == base  # now the artifact embodies it
+
+
+def test_error_taxonomy_types():
+    """Every typed error is a RepError AND the builtin it replaced, so both
+    new ``except knn.RepError`` handlers and pre-taxonomy call sites work."""
+    for err, builtin in [
+        (knn.QueryError, ValueError),
+        (knn.StagedUpdateError, ValueError),
+        (knn.EngineConfigError, ValueError),
+        (knn.EpochError, ValueError),
+        (knn.ArtifactError, RuntimeError),
+        (knn.JournalError, RuntimeError),
+    ]:
+        assert issubclass(err, knn.RepError)
+        assert issubclass(err, builtin)
+    assert issubclass(knn.JournalError, knn.ArtifactError)
+
+
+def test_engine_raises_the_typed_errors(built):
+    g, bn, objects, _, art = built
+    eng = knn.load_engine(art, bn=bn)
+    with pytest.raises(knn.QueryError):
+        eng.query_batch(np.array([0, 1]), eng.k + 1)
+    with pytest.raises(knn.QueryError):
+        eng.query_batch(np.array([[0, 1]]))
+    with pytest.raises(knn.StagedUpdateError):
+        eng.stage_insert(-1)
+    with pytest.raises(knn.StagedUpdateError):
+        eng.stage_delete(next(v for v in range(g.n) if v not in set(eng.objects.tolist())))
+    with pytest.raises(knn.StagedUpdateError):
+        eng.stage_move(int(eng.objects[0]), int(eng.objects[0]))
+    with pytest.raises(knn.EngineConfigError):
+        eng.frontier = "gpu"
+    with pytest.raises(knn.EpochError):
+        eng.query_batch(np.array([0]), epoch=99)
