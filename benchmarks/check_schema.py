@@ -31,6 +31,7 @@ from __future__ import annotations
 import argparse
 import json
 import sys
+from pathlib import Path
 
 EXP13_PARITY_FLOOR = 0.8
 EXP14_DEVICE_FLOOR = 1.3
@@ -40,6 +41,18 @@ EXP15_P99_CEILING = 5.0
 def _need(meta: dict, key: str):
     assert key in meta, f"missing {key} in bench meta"
     return meta[key]
+
+
+def _compile_budgets() -> dict:
+    """The checked-in warm/cold compile budgets (tools/compile_budgets.json).
+
+    The warm counters the benchmarks publish are asserted EQUAL to these:
+    a higher count is a recompile regression, a lower one means the budget
+    file is stale and must be tightened.
+    """
+    p = Path(__file__).resolve().parent.parent / "tools" / "compile_budgets.json"
+    with open(p) as f:
+        return json.load(f)
 
 
 def check_exp11(data: dict) -> str:
@@ -59,8 +72,20 @@ def check_exp11(data: dict) -> str:
     # acceptance floor: the batched path must stay an order of magnitude
     # ahead of the scalar loop (measured 17-32x; 5x absorbs runner noise)
     assert meta["exp11.engine.speedup_vs_scalar"] >= 5.0, meta
+    # residency counters: the warm query path may not compile (budget
+    # equality) and must do its uploads explicitly (at least one device_put)
+    compiles = _need(meta, "exp11.engine.compiles")
+    transfers = _need(meta, "exp11.engine.host_transfers")
+    warm_budget = _compile_budgets()["query_batch"]["warm"]
+    assert compiles == warm_budget, (
+        f"exp11 warm query_batch compiled {compiles} programs; budget "
+        f"requires exactly {warm_budget} (tools/compile_budgets.json)"
+    )
+    assert set(transfers) == {"h2d", "d2h"}, transfers
+    assert transfers["h2d"] >= 1, f"no explicit uploads counted: {transfers}"
     return (f"exp11 OK: {meta['exp11.engine.queries_per_s']} q/s, "
-            f"x{meta['exp11.engine.speedup_vs_scalar']} vs scalar")
+            f"x{meta['exp11.engine.speedup_vs_scalar']} vs scalar, "
+            f"warm compiles {compiles}")
 
 
 def check_exp12(data: dict, floor: float) -> str:
@@ -141,8 +166,32 @@ def check_exp14(data: dict) -> str:
     assert speedup >= EXP14_DEVICE_FLOOR, (
         f"exp14 device frontier speedup {speedup} < {EXP14_DEVICE_FLOOR}x at b512"
     )
+    # residency counters for the warm (rep-2) flush of every cell: compile
+    # count must EQUAL the warm budget for the layout, and every flush does
+    # at least one explicit host crossing (staged uploads / kth readbacks)
+    comp = _need(meta, "exp14.compiles")
+    trans = _need(meta, "exp14.host_transfers")
+    budgets = _compile_budgets()
+    for layout in ("scalar", "sharded"):
+        key = "flush_updates" if layout == "scalar" else "sharded_flush_updates"
+        warm_budget = budgets[key]["warm"]
+        for mode in ("host", "device"):
+            for b in batches:
+                c = comp[layout][mode][str(b)]
+                assert c == warm_budget, (
+                    f"exp14 {layout}/{mode} b={b} warm flush compiled {c} "
+                    f"programs; budget requires exactly {warm_budget} "
+                    f"(tools/compile_budgets.json:{key})"
+                )
+                t = trans[layout][mode][str(b)]
+                assert set(t) == {"h2d", "d2h"}, t
+                assert t["h2d"] + t["d2h"] >= 1, (
+                    f"exp14 {layout}/{mode} b={b} counted no explicit host "
+                    f"crossings — the counters are not wired"
+                )
     return (f"exp14 OK: device frontier x{speedup} vs host at b512, "
-            f"{meta['exp14.scalar.device.inserts_per_s']['512']} ins/s")
+            f"{meta['exp14.scalar.device.inserts_per_s']['512']} ins/s, "
+            f"warm compiles clean")
 
 
 def check_exp15(data: dict, ceiling: float) -> str:

@@ -354,11 +354,28 @@ def exp11_engine_serving() -> None:
     row("exp11.serve.engine_mixed_bua", dt / ops_done * 1e6,
         f"{ops_done / dt:.0f}ops/s;{n_upd}/{batch}upd")
 
+    # warm-path residency counters: one already-compiled batch through the
+    # sanitizer's counters. `compiles` is asserted EQUAL to the
+    # tools/compile_budgets.json warm budget by check_schema (a warm query
+    # that compiles is a recompile regression); host_transfers documents
+    # the explicit h2d/d2h crossings per batch.
+    from repro.analysis import sanitize
+
+    us = rng.integers(0, g.n, size=best_b)
+    jax.block_until_ready(engine.query_batch(us)[0])
+    with sanitize.count_compiles() as cc, sanitize.count_transfers() as tc:
+        ids, _ = engine.query_batch(us)
+        jax.block_until_ready(ids)
+    row("exp11.serve.engine_query_batch.warm_counters", 0.0,
+        f"c{cc.count};h2d{tc.h2d};d2h{tc.d2h}")
+
     meta("exp11.engine.batch_size", best_b)
     meta("exp11.engine.queries_per_s", round(best_qps, 1))
     meta("exp11.engine.staged_queue_depth", depth)
     meta("exp11.engine.speedup_vs_scalar", round(best_qps / scalar_qps, 2))
     meta("exp11.engine.stats", engine.stats())
+    meta("exp11.engine.compiles", cc.count)
+    meta("exp11.engine.host_transfers", {"h2d": tc.h2d, "d2h": tc.d2h})
 
 
 def exp12_moving_fleet() -> None:
@@ -568,39 +585,65 @@ def exp14_frontier_scaling() -> None:
             )
         return knn.QueryEngine.from_index(idx, objects, bn=bn)
 
-    def measure(layout: str, mode: str, ins: np.ndarray) -> tuple[float, int]:
-        best, rounds = np.inf, 0
+    from repro.analysis import sanitize
+
+    def measure(layout: str, mode: str, ins: np.ndarray):
+        best, rounds, compiles, transfers = np.inf, 0, 0, {"h2d": 0, "d2h": 0}
         for rep in range(3):  # rep 0 = untimed compile warmup
             engine = make_engine(layout)
             engine.frontier = mode
             for u in ins:
                 engine.stage_insert(int(u))
-            t0 = time.perf_counter()
-            stats = engine.flush_updates()
-            dt = time.perf_counter() - t0
+            if rep == 2:
+                # last rep is fully warm: the counters here are the
+                # steady-state residency profile of one flush (compiles is
+                # asserted == the warm budget by check_schema)
+                with sanitize.count_compiles() as cc, \
+                        sanitize.count_transfers() as tc:
+                    t0 = time.perf_counter()
+                    stats = engine.flush_updates()
+                    dt = time.perf_counter() - t0
+                compiles = cc.count
+                transfers = {"h2d": tc.h2d, "d2h": tc.d2h}
+            else:
+                t0 = time.perf_counter()
+                stats = engine.flush_updates()
+                dt = time.perf_counter() - t0
             rounds = stats["frontier_rounds"]
             if rep:
                 best = min(best, dt)
-        return best, rounds
+        return best, rounds, compiles, transfers
 
     per_s: dict[str, dict[str, dict[str, float]]] = {
         lay: {m: {} for m in ("host", "device")} for lay in ("scalar", "sharded")
     }
     rounds_by_b: dict[str, int] = {}
+    comp: dict[str, dict[str, dict[str, int]]] = {
+        lay: {m: {} for m in ("host", "device")} for lay in ("scalar", "sharded")
+    }
+    trans: dict[str, dict[str, dict[str, dict[str, int]]]] = {
+        lay: {m: {} for m in ("host", "device")} for lay in ("scalar", "sharded")
+    }
     for b in batch_sizes:
         ins = rng.choice(outside, size=b, replace=False)
         for layout in ("scalar", "sharded"):
-            t_host, _ = measure(layout, "host", ins)
-            t_dev, rounds = measure(layout, "device", ins)
+            t_host, _, c_host, tr_host = measure(layout, "host", ins)
+            t_dev, rounds, c_dev, tr_dev = measure(layout, "device", ins)
             if layout == "scalar":  # record the floored pipeline's rounds
                 rounds_by_b[str(b)] = rounds
             per_s[layout]["host"][str(b)] = round(b / t_host, 1)
             per_s[layout]["device"][str(b)] = round(b / t_dev, 1)
+            comp[layout]["host"][str(b)] = c_host
+            comp[layout]["device"][str(b)] = c_dev
+            trans[layout]["host"][str(b)] = tr_host
+            trans[layout]["device"][str(b)] = tr_dev
             row(f"exp14.frontier.{layout}.host.b{b}", t_host * 1e6,
-                f"{b / t_host:.0f}ins/s")
+                f"{b / t_host:.0f}ins/s;c{c_host};"
+                f"h2d{tr_host['h2d']};d2h{tr_host['d2h']}")
             row(f"exp14.frontier.{layout}.device.b{b}", t_dev * 1e6,
                 f"{b / t_dev:.0f}ins/s;x{t_host / t_dev:.2f}host;"
-                f"rounds={rounds}")
+                f"rounds={rounds};c{c_dev};"
+                f"h2d{tr_dev['h2d']};d2h{tr_dev['d2h']}")
 
     speedup_512 = (per_s["scalar"]["device"]["512"]
                    / max(per_s["scalar"]["host"]["512"], 1e-9))
@@ -615,6 +658,8 @@ def exp14_frontier_scaling() -> None:
     meta("exp14.sharded.device.inserts_per_s", per_s["sharded"]["device"])
     meta("exp14.frontier_rounds", rounds_by_b)
     meta("exp14.device_speedup_b512", round(speedup_512, 2))
+    meta("exp14.compiles", comp)
+    meta("exp14.host_transfers", trans)
 
 
 def exp15_mixed_rw() -> None:

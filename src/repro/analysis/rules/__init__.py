@@ -1,0 +1,99 @@
+"""Rule registry for replint.
+
+A rule is a module-level object with a ``code`` ("REP001"), a one-line
+``summary``, and a ``check(ctx) -> list[Finding]``. Rules are pure
+functions of the parsed tree + call graph; they never import jax, so the
+whole static rail runs on a bare-stdlib interpreter (the blocking
+``analyze`` CI job relies on this).
+
+Shared helpers here keep the rules honest about *scope*: ``iter_scope``
+walks a function's own body without descending into nested defs (nested
+defs get their own FunctionInfo and their own walk), and
+``iter_module_scope`` walks exactly the expressions that execute at import
+time (module body, class bodies, decorator expressions, default argument
+values) — the surface REP005 polices.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+
+from repro.analysis.callgraph import CallGraph, ModuleInfo
+
+
+@dataclass(frozen=True)
+class Finding:
+    path: str
+    line: int
+    col: int
+    code: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.code} {self.message}"
+
+
+@dataclass
+class Context:
+    """Everything a rule may look at."""
+
+    modules: dict[str, ModuleInfo]  # path -> parsed module
+    graph: CallGraph
+
+    def numpy_aliases(self, mod: ModuleInfo) -> set[str]:
+        return {a for a, m in mod.import_aliases.items() if m == "numpy"}
+
+    def jnp_aliases(self, mod: ModuleInfo) -> set[str]:
+        return {a for a, m in mod.import_aliases.items() if m == "jax.numpy"}
+
+
+_NESTED = (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef, ast.Lambda)
+
+
+def iter_scope(fn_node: ast.AST):
+    """All nodes in a function's own scope, not entering nested defs."""
+    todo = list(getattr(fn_node, "body", []))
+    while todo:
+        node = todo.pop()
+        yield node
+        for child in ast.iter_child_nodes(node):
+            if not isinstance(child, _NESTED):
+                todo.append(child)
+
+
+def iter_module_scope(tree: ast.Module):
+    """Nodes whose expressions execute at import time.
+
+    Module statements and class bodies run directly; for function defs the
+    decorator expressions and default argument values still evaluate at
+    import, so those subtrees are walked too.
+    """
+    todo: list[ast.AST] = list(tree.body)
+    while todo:
+        node = todo.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            todo.extend(node.decorator_list)
+            todo.extend(d for d in node.args.defaults if d is not None)
+            todo.extend(d for d in node.args.kw_defaults if d is not None)
+            continue
+        if isinstance(node, ast.ClassDef):
+            todo.extend(node.decorator_list)
+            todo.extend(node.body)
+            continue
+        yield node
+        for child in ast.iter_child_nodes(node):
+            if not isinstance(child, _NESTED):
+                todo.append(child)
+
+
+@dataclass
+class Rule:
+    code: str
+    summary: str
+    check: "callable" = field(repr=False)
+
+
+def all_rules() -> list[Rule]:
+    from repro.analysis.rules import rep001, rep002, rep003, rep004, rep005
+
+    return [rep001.RULE, rep002.RULE, rep003.RULE, rep004.RULE, rep005.RULE]

@@ -1,0 +1,122 @@
+"""REP001 — host materialization inside a device program.
+
+Flags, in every function reachable from a jit/shard_map/pallas_call
+boundary: ``.item()``, ``.tolist()``, ``float()/int()/bool()`` on traced
+values, any call through a numpy alias (``np.asarray`` and friends), and
+``jax.device_get``. Each of these forces the value to host: inside a
+trace it either fails with a ConcretizationTypeError at best, or — the
+bug class this rule exists for — silently splits one device program into
+several with a blocking transfer between them.
+
+``int()/float()/bool()`` are exempt when the argument is static metadata:
+a literal, ``len(...)``, or anything rooted in ``.shape``/``.ndim``/
+``.size``/``.dtype`` — those are Python values at trace time.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.callgraph import dotted_name
+from repro.analysis.rules import Context, Finding, Rule, iter_scope
+
+_HOST_METHODS = {"item", "tolist"}
+_CASTS = {"float", "int", "bool", "complex"}
+_STATIC_ATTRS = {"shape", "ndim", "size", "dtype"}
+
+
+def _is_static_metadata(node: ast.AST) -> bool:
+    """Is this expression a trace-time Python value (not a tracer)?"""
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, (ast.BinOp, ast.UnaryOp)):
+        kids = [c for c in ast.iter_child_nodes(node) if isinstance(c, ast.expr)]
+        return all(_is_static_metadata(k) for k in kids if not isinstance(k, ast.operator))
+    if isinstance(node, ast.Call):
+        tail = dotted_name(node.func).split(".")[-1]
+        return tail in ("len", "min", "max") and all(
+            _is_static_metadata(a) for a in node.args
+        )
+    if isinstance(node, ast.Subscript):
+        return _is_static_metadata(node.value)
+    # anything rooted through .shape/.ndim/.size/.dtype is static
+    cur = node
+    while isinstance(cur, (ast.Attribute, ast.Subscript)):
+        if isinstance(cur, ast.Attribute) and cur.attr in _STATIC_ATTRS:
+            return True
+        cur = cur.value
+    return False
+
+
+def check(ctx: Context) -> list[Finding]:
+    findings: list[Finding] = []
+    for key in sorted(ctx.graph.reachable):
+        fn = ctx.graph.functions.get(key)
+        if fn is None:
+            continue
+        mod = ctx.modules[fn.path]
+        np_aliases = ctx.numpy_aliases(mod)
+        for node in iter_scope(fn.node):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func)
+            tail = name.split(".")[-1]
+            head = name.split(".")[0] if name else ""
+            if isinstance(node.func, ast.Attribute) and node.func.attr in _HOST_METHODS:
+                findings.append(
+                    Finding(
+                        fn.path,
+                        node.lineno,
+                        node.col_offset,
+                        "REP001",
+                        f"`.{node.func.attr}()` materializes to host inside "
+                        f"device-reachable `{fn.qualname}` (reachable from a "
+                        "jit/shard_map/pallas_call boundary)",
+                    )
+                )
+            elif head in np_aliases and len(name.split(".")) > 1:
+                findings.append(
+                    Finding(
+                        fn.path,
+                        node.lineno,
+                        node.col_offset,
+                        "REP001",
+                        f"numpy call `{name}(...)` inside device-reachable "
+                        f"`{fn.qualname}` forces a host round-trip; use jnp or "
+                        "hoist to the host orchestration layer",
+                    )
+                )
+            elif name == "jax.device_get" or tail == "device_get":
+                findings.append(
+                    Finding(
+                        fn.path,
+                        node.lineno,
+                        node.col_offset,
+                        "REP001",
+                        f"`jax.device_get` inside device-reachable `{fn.qualname}`",
+                    )
+                )
+            elif (
+                isinstance(node.func, ast.Name)
+                and node.func.id in _CASTS
+                and node.args
+                and not _is_static_metadata(node.args[0])
+            ):
+                findings.append(
+                    Finding(
+                        fn.path,
+                        node.lineno,
+                        node.col_offset,
+                        "REP001",
+                        f"`{node.func.id}(...)` on a (possibly traced) value inside "
+                        f"device-reachable `{fn.qualname}`; cast with .astype / "
+                        "jnp, or compute from static .shape metadata",
+                    )
+                )
+    return findings
+
+
+RULE = Rule(
+    code="REP001",
+    summary="host materialization (.item/.tolist/float()/np.*) in jit-reachable code",
+    check=check,
+)

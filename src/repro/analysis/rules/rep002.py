@@ -1,0 +1,253 @@
+"""REP002 — Pallas input/output aliasing contracts.
+
+For every ``pl.pallas_call(...)(operands...)`` site, cross-checks the
+``input_output_aliases`` dict against the kernel body:
+
+* alias keys must name real operands, and must not name scalar-prefetch
+  operands (operand indices count the prefetch args — the exact off-by-two
+  this comment-only convention invited);
+* alias values must name real outputs;
+* the kernel must take enough positional refs for operands + outputs;
+* an aliased input ref must not be read after the first write ("scatter")
+  to its output ref — the frontier_relax hazard class: once the output
+  block is emitted, the donated input buffer may already hold new values,
+  so a later read sees post-round state and the Jacobi contract breaks.
+  (Textually ordered by line; the runtime aliasing sanitizer in
+  ``repro.analysis.sanitize`` covers the dynamic half of this contract.)
+
+Kernel resolution follows bare names and ``functools.partial(kernel, ...)``
+wrappers, including through a single local ``kernel = partial(...)``
+assignment. ``num_scalar_prefetch`` is read off a ``PrefetchScalarGridSpec``
+literal, also through one local assignment.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.callgraph import dotted_name
+from repro.analysis.rules import Context, Finding, Rule
+
+
+def _unwrap_partial(node: ast.AST, local_assigns: dict[str, ast.AST]) -> ast.AST:
+    for _ in range(8):  # bounded: name -> assign -> partial -> name ...
+        if isinstance(node, ast.Name) and node.id in local_assigns:
+            node = local_assigns[node.id]
+            continue
+        if (
+            isinstance(node, ast.Call)
+            and dotted_name(node.func).split(".")[-1] == "partial"
+            and node.args
+        ):
+            node = node.args[0]
+            continue
+        break
+    return node
+
+
+def _const_int(node: ast.AST) -> int | None:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return node.value
+    return None
+
+
+def _kwarg(call: ast.Call, name: str) -> ast.AST | None:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+class _RefUse(ast.NodeVisitor):
+    """Line numbers where a named ref is read vs written (subscript store)."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.reads: list[int] = []
+        self.writes: list[int] = []
+
+    def _target(self, t: ast.AST) -> None:
+        if (
+            isinstance(t, ast.Subscript)
+            and isinstance(t.value, ast.Name)
+            and t.value.id == self.name
+        ):
+            self.writes.append(t.lineno)
+            self.visit(t.slice)  # index expressions still count as reads
+        elif isinstance(t, (ast.Tuple, ast.List)):
+            for e in t.elts:
+                self._target(e)
+        else:
+            self.visit(t)
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        for t in node.targets:
+            self._target(t)
+        self.visit(node.value)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        self._target(node.target)
+        self.visit(node.value)
+
+    def visit_Name(self, node: ast.Name) -> None:
+        if node.id == self.name:
+            self.reads.append(node.lineno)
+
+
+def _positional_params(fn: ast.FunctionDef) -> list[str]:
+    return [a.arg for a in list(fn.args.posonlyargs) + list(fn.args.args)]
+
+
+def check(ctx: Context) -> list[Finding]:
+    findings: list[Finding] = []
+    for path, mod in sorted(ctx.modules.items()):
+        for fn in mod.functions.values():
+            if "." in fn.qualname and fn.qualname.rsplit(".", 1)[0] in mod.functions:
+                continue  # analyzed as part of the enclosing function's scope
+            local_assigns: dict[str, ast.AST] = {}
+            sites: list[ast.Call] = []
+            for node in ast.walk(fn.node):
+                if (
+                    isinstance(node, ast.Assign)
+                    and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)
+                ):
+                    local_assigns[node.targets[0].id] = node.value
+                if (
+                    isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Call)
+                    and dotted_name(node.func.func).split(".")[-1] == "pallas_call"
+                ):
+                    sites.append(node)
+            for outer in sites:
+                findings.extend(
+                    _check_site(path, mod, outer, local_assigns)
+                )
+    return findings
+
+
+def _check_site(path, mod, outer: ast.Call, local_assigns) -> list[Finding]:
+    pc: ast.Call = outer.func  # the pl.pallas_call(...) expression
+    out: list[Finding] = []
+    n_ops = len(outer.args)
+
+    aliases_node = _kwarg(pc, "input_output_aliases")
+    if aliases_node is None:
+        return out
+    if not isinstance(aliases_node, ast.Dict):
+        out.append(
+            Finding(
+                path, pc.lineno, pc.col_offset, "REP002",
+                "input_output_aliases is not a dict literal; replint cannot "
+                "verify the aliasing contract — inline the dict",
+            )
+        )
+        return out
+    aliases: dict[int, int] = {}
+    for k_node, v_node in zip(aliases_node.keys, aliases_node.values):
+        ki, vi = _const_int(k_node), _const_int(v_node)
+        if ki is None or vi is None:
+            out.append(
+                Finding(
+                    path, aliases_node.lineno, aliases_node.col_offset, "REP002",
+                    "non-literal key/value in input_output_aliases",
+                )
+            )
+            return out
+        aliases[ki] = vi
+
+    # scalar-prefetch count: grid_spec= a PrefetchScalarGridSpec (possibly
+    # through one local assignment); a plain grid= means no prefetch args
+    n_prefetch = 0
+    gs = _kwarg(pc, "grid_spec")
+    if gs is not None:
+        if isinstance(gs, ast.Name) and gs.id in local_assigns:
+            gs = local_assigns[gs.id]
+        if (
+            isinstance(gs, ast.Call)
+            and dotted_name(gs.func).split(".")[-1] == "PrefetchScalarGridSpec"
+        ):
+            npf = _kwarg(gs, "num_scalar_prefetch")
+            n_prefetch = _const_int(npf) or 0
+
+    out_shape = _kwarg(pc, "out_shape")
+    n_outs = len(out_shape.elts) if isinstance(out_shape, (ast.List, ast.Tuple)) else 1
+
+    for ki, vi in aliases.items():
+        if ki < n_prefetch:
+            out.append(
+                Finding(
+                    path, pc.lineno, pc.col_offset, "REP002",
+                    f"alias key {ki} names a scalar-prefetch operand "
+                    f"(num_scalar_prefetch={n_prefetch}); operand indices count "
+                    "the prefetch args, so aliasable operands start at "
+                    f"{n_prefetch}",
+                )
+            )
+        elif ki >= n_ops:
+            out.append(
+                Finding(
+                    path, pc.lineno, pc.col_offset, "REP002",
+                    f"alias key {ki} out of range: the call passes {n_ops} operands",
+                )
+            )
+        if vi >= n_outs:
+            out.append(
+                Finding(
+                    path, pc.lineno, pc.col_offset, "REP002",
+                    f"alias value {vi} out of range: out_shape has {n_outs} outputs",
+                )
+            )
+    if out:
+        return out
+
+    # resolve the kernel function for the read-after-scatter check
+    kernel = _unwrap_partial(pc.args[0] if pc.args else ast.Constant(None), local_assigns)
+    kname = dotted_name(kernel)
+    kfn = mod.functions.get(kname) or next(
+        (f for q, f in mod.functions.items() if q.split(".")[-1] == kname), None
+    )
+    if kfn is None or not isinstance(kfn.node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        return out
+    params = _positional_params(kfn.node)
+    if len(params) < n_ops + n_outs:
+        out.append(
+            Finding(
+                path, kfn.node.lineno, kfn.node.col_offset, "REP002",
+                f"kernel `{kname}` takes {len(params)} positional refs but the "
+                f"pallas_call at line {pc.lineno} passes {n_ops} operands and "
+                f"{n_outs} outputs",
+            )
+        )
+        return out
+
+    for ki, vi in aliases.items():
+        in_param = params[ki]
+        out_param = params[n_ops + vi]
+        writes = _RefUse(out_param)
+        writes.visit(kfn.node)
+        reads = _RefUse(in_param)
+        reads.visit(kfn.node)
+        if not writes.writes:
+            continue
+        first_write = min(writes.writes)
+        for ln in sorted(set(reads.reads)):
+            if ln > first_write:
+                out.append(
+                    Finding(
+                        path, ln, 0, "REP002",
+                        f"aliased input ref `{in_param}` (operand {ki} -> output "
+                        f"{vi}/`{out_param}`) is read after the first write to "
+                        f"`{out_param}` at line {first_write}; after the scatter "
+                        "the donated buffer may hold post-round values (the "
+                        "frontier_relax Jacobi hazard) — read through a "
+                        "non-aliased operand instead",
+                    )
+                )
+    return out
+
+
+RULE = Rule(
+    code="REP002",
+    summary="pallas_call input_output_aliases vs kernel ref reads (read-after-scatter)",
+    check=check,
+)

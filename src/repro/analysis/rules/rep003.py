@@ -1,0 +1,207 @@
+"""REP003 — recompile risks.
+
+Three sub-checks, all aimed at the 28->2 compile-count win the engine's
+serving paths depend on:
+
+* **jit-per-call** — ``jax.jit(...)`` (or ``functools.partial(jax.jit,
+  ...)``) evaluated inside a function or loop body creates a *fresh*
+  compiled callable on every call: every invocation recompiles. Hoist the
+  wrapper to module scope or cache the result; a deliberate cached factory
+  carries a ``# replint: disable=REP003(reason)`` pragma on its def line.
+* **tracer-dependent branch** — a Python ``if``/``while`` on a non-static
+  parameter of a jitted function fails at trace time (ConcretizationTypeError)
+  or, when the value sneaks in as a weak-typed scalar, silently forks the
+  compile cache. None-checks (``x is None``), ``isinstance`` tests and
+  ``.shape``/``.ndim``/``.size``/``.dtype`` metadata are trace-time Python
+  and exempt.
+* **unhashable/bogus static args** — ``static_argnames`` naming a parameter
+  that does not exist, or a static parameter whose default is a mutable
+  literal (lists/dicts/sets are unhashable -> TypeError on the first call).
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.callgraph import dotted_name, is_jit_expr
+from repro.analysis.rules import Context, Finding, Rule, iter_scope
+
+_STATIC_ATTRS = {"shape", "ndim", "size", "dtype"}
+
+
+def _static_names_from_call(call: ast.Call, params: list[str]) -> set[str] | None:
+    """static_argnames/static_argnums of a jit application, None if opaque."""
+    statics: set[str] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            vals = kw.value.elts if isinstance(kw.value, (ast.Tuple, ast.List)) else [kw.value]
+            for v in vals:
+                if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                    statics.add(v.value)
+                else:
+                    return None
+        elif kw.arg == "static_argnums":
+            vals = kw.value.elts if isinstance(kw.value, (ast.Tuple, ast.List)) else [kw.value]
+            for v in vals:
+                if isinstance(v, ast.Constant) and isinstance(v.value, int):
+                    if v.value < len(params):
+                        statics.add(params[v.value])
+                else:
+                    return None
+    return statics
+
+
+def _jit_applications(mod) -> list[tuple[ast.FunctionDef, ast.Call, object]]:
+    """(function def, jit-application call, fn_info) for this module."""
+    apps = []
+    for fn in mod.functions.values():
+        node = fn.node
+        for dec in node.decorator_list:
+            if isinstance(dec, ast.Call) and is_jit_expr(dec):
+                apps.append((node, dec, fn))
+            elif is_jit_expr(dec) and not isinstance(dec, ast.Call):
+                apps.append((node, None, fn))
+    for walk_node in ast.walk(mod.tree):
+        if not isinstance(walk_node, ast.Call):
+            continue
+        call, target = None, None
+        if is_jit_expr(walk_node.func) and not isinstance(walk_node.func, ast.Call):
+            # jax.jit(f, static_argnames=...)
+            call, target = walk_node, walk_node.args[0] if walk_node.args else None
+        elif isinstance(walk_node.func, ast.Call) and is_jit_expr(walk_node.func):
+            # functools.partial(jax.jit, static_argnames=...)(f)
+            call = walk_node.func
+            target = walk_node.args[0] if walk_node.args else None
+        if call is None or not isinstance(target, ast.Name):
+            continue
+        tfn = mod.functions.get(target.id) or next(
+            (f for q, f in mod.functions.items() if q.split(".")[-1] == target.id),
+            None,
+        )
+        if tfn is not None and isinstance(tfn.node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            apps.append((tfn.node, call, tfn))
+    return apps
+
+
+def _names_in_test(test: ast.AST) -> set[str]:
+    """Parameter names a branch actually depends on (metadata-exempted)."""
+    if isinstance(test, ast.Call) and dotted_name(test.func) == "isinstance":
+        return set()
+    if isinstance(test, ast.Compare) and all(
+        isinstance(op, (ast.Is, ast.IsNot)) for op in test.ops
+    ):
+        return set()  # `x is None` — trace-time Python
+    exempt: set[str] = set()
+    names: set[str] = set()
+    for node in ast.walk(test):
+        if isinstance(node, ast.Attribute) and node.attr in _STATIC_ATTRS:
+            root = node.value
+            while isinstance(root, (ast.Attribute, ast.Subscript)):
+                root = root.value
+            if isinstance(root, ast.Name):
+                exempt.add(root.id)
+        if isinstance(node, ast.Call):
+            tail = dotted_name(node.func).split(".")[-1]
+            if tail in ("len", "isinstance"):
+                for sub in ast.walk(node):
+                    if isinstance(sub, ast.Name):
+                        exempt.add(sub.id)
+    for node in ast.walk(test):
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+            names.add(node.id)
+    return names - exempt
+
+
+def check(ctx: Context) -> list[Finding]:
+    findings: list[Finding] = []
+    for path, mod in sorted(ctx.modules.items()):
+        # (a) jit created inside a function body (worse still: inside a loop)
+        for fn in mod.functions.values():
+            loops = [
+                n for n in iter_scope(fn.node) if isinstance(n, (ast.For, ast.While))
+            ]
+            for node in iter_scope(fn.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                if not (is_jit_expr(node) or (
+                    not isinstance(node.func, ast.Call) and is_jit_expr(node.func)
+                )):
+                    continue
+                in_loop = any(
+                    lp.lineno <= node.lineno <= (lp.end_lineno or lp.lineno)
+                    for lp in loops
+                )
+                where = "a loop inside" if in_loop else "the body of"
+                findings.append(
+                    Finding(
+                        path, node.lineno, node.col_offset, "REP003",
+                        f"jit wrapper created in {where} `{fn.qualname}` — a "
+                        "fresh compiled callable per call; hoist to module "
+                        "scope or cache the result",
+                    )
+                )
+
+        # (b)+(c) per jit application
+        seen: set[int] = set()
+        for fn_node, app_call, fn in _jit_applications(mod):
+            if id(fn_node) in seen:
+                continue
+            seen.add(id(fn_node))
+            params = [a.arg for a in list(fn_node.args.posonlyargs) + list(fn_node.args.args)]
+            kwonly = [a.arg for a in fn_node.args.kwonlyargs]
+            statics = (
+                _static_names_from_call(app_call, params) if app_call is not None else set()
+            )
+            if statics is None:
+                continue  # opaque static spec: cannot verify
+            for s in sorted(statics):
+                if s not in params and s not in kwonly:
+                    findings.append(
+                        Finding(
+                            path, (app_call or fn_node).lineno,
+                            (app_call or fn_node).col_offset, "REP003",
+                            f"static_argnames names `{s}` which is not a "
+                            f"parameter of `{fn.qualname}` — the jit spec is "
+                            "silently dead",
+                        )
+                    )
+            defaults = dict(
+                zip(params[len(params) - len(fn_node.args.defaults):], fn_node.args.defaults)
+            )
+            defaults.update(
+                {a.arg: d for a, d in zip(fn_node.args.kwonlyargs, fn_node.args.kw_defaults)
+                 if d is not None}
+            )
+            for s in sorted(statics):
+                d = defaults.get(s)
+                if isinstance(d, (ast.List, ast.Dict, ast.Set)):
+                    findings.append(
+                        Finding(
+                            path, d.lineno, d.col_offset, "REP003",
+                            f"static parameter `{s}` of `{fn.qualname}` defaults "
+                            "to a mutable (unhashable) literal — jit will raise "
+                            "on the first call; use a tuple or None",
+                        )
+                    )
+            nonstatic = (set(params) | set(kwonly)) - statics
+            for node in iter_scope(fn_node):
+                if not isinstance(node, (ast.If, ast.While)):
+                    continue
+                dep = sorted(_names_in_test(node.test) & nonstatic)
+                if dep:
+                    findings.append(
+                        Finding(
+                            path, node.lineno, node.col_offset, "REP003",
+                            f"Python branch on non-static parameter(s) "
+                            f"{', '.join(dep)} of jitted `{fn.qualname}` — "
+                            "trace-time failure or a forked compile cache; mark "
+                            "static or use lax.cond/jnp.where",
+                        )
+                    )
+    return findings
+
+
+RULE = Rule(
+    code="REP003",
+    summary="recompile risks: jit-per-call, tracer-dependent branches, bad static args",
+    check=check,
+)

@@ -1,0 +1,61 @@
+"""REP004 — the id=int32 / dist=float32 contract at kernel boundaries.
+
+Everything that crosses a kernel boundary in this repo is an (ids, dists)
+pair: ids are int32, distances float32 (the paper's n*k*8-byte bound, and
+the exact-equality oracle tests, both depend on it). A 64-bit dtype
+sneaking into ``src/repro/kernels/`` either breaks under the default
+x64-disabled config (silent truncation + a warning) or doubles the table
+bytes under the x64 CI leg — and TPU Pallas has no i64/f64 lanes at all.
+
+Flags, in kernel modules only: ``np.int64``/``jnp.float64``-style dtype
+attributes, ``"int64"``/``"float64"`` dtype strings, and
+``astype(jnp.int64)``-style casts (covered by the attribute scan).
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.callgraph import dotted_name
+from repro.analysis.rules import Context, Finding, Rule
+
+_BAD_DTYPES = {"int64", "float64", "uint64"}
+
+
+def check(ctx: Context) -> list[Finding]:
+    findings: list[Finding] = []
+    for path, mod in sorted(ctx.modules.items()):
+        if "kernels/" not in path.replace("\\", "/"):
+            continue
+        dtype_roots = ctx.numpy_aliases(mod) | ctx.jnp_aliases(mod) | {"jax"}
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Attribute) and node.attr in _BAD_DTYPES:
+                root = dotted_name(node).split(".")[0]
+                if root in dtype_roots:
+                    findings.append(
+                        Finding(
+                            path, node.lineno, node.col_offset, "REP004",
+                            f"64-bit dtype `{dotted_name(node)}` in a kernel "
+                            "module breaks the id=int32/dist=float32 boundary "
+                            "contract (and TPU Pallas has no 64-bit lanes)",
+                        )
+                    )
+            elif (
+                isinstance(node, ast.Constant)
+                and isinstance(node.value, str)
+                and node.value in _BAD_DTYPES
+            ):
+                findings.append(
+                    Finding(
+                        path, node.lineno, node.col_offset, "REP004",
+                        f"64-bit dtype string \"{node.value}\" in a kernel "
+                        "module breaks the id=int32/dist=float32 boundary contract",
+                    )
+                )
+    return findings
+
+
+RULE = Rule(
+    code="REP004",
+    summary="64-bit dtypes in kernel modules (id=int32/dist=float32 contract)",
+    check=check,
+)

@@ -1,0 +1,57 @@
+"""REP005 — module-level ``jnp`` computation.
+
+A ``jnp.`` call at import time allocates a device buffer (pinning a
+backend before the process picks one), runs before ``jax.config`` /
+``JAX_*`` flags are applied, and in a multi-process setup happens on every
+import of the module — none of which the author sees in a single-process
+run. Constants belong in numpy (host) or inside the first traced call.
+
+Metadata-only calls are exempt: ``jnp.iinfo``/``finfo``/``dtype``/
+``issubdtype``/``result_type``/``promote_types`` inspect dtypes without
+touching a device (e.g. the kernels' ``_INT_MAX = jnp.iinfo(jnp.int32).max``
+sentinel).
+
+The import-time surface is walked precisely: module body, class bodies,
+decorator expressions, and default argument values all execute at import.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.callgraph import dotted_name
+from repro.analysis.rules import Context, Finding, Rule, iter_module_scope
+
+_METADATA_ONLY = {
+    "iinfo", "finfo", "dtype", "issubdtype", "result_type", "promote_types",
+}
+
+
+def check(ctx: Context) -> list[Finding]:
+    findings: list[Finding] = []
+    for path, mod in sorted(ctx.modules.items()):
+        jnp_roots = ctx.jnp_aliases(mod)
+        if not jnp_roots:
+            continue
+        for node in iter_module_scope(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func)
+            parts = name.split(".")
+            if parts[0] in jnp_roots and len(parts) > 1 and parts[-1] not in _METADATA_ONLY:
+                findings.append(
+                    Finding(
+                        path, node.lineno, node.col_offset, "REP005",
+                        f"module-level `{name}(...)` computes on device at "
+                        "import time (allocates a buffer, pins a backend, "
+                        "ignores late jax.config); use numpy or move inside "
+                        "the traced function",
+                    )
+                )
+    return findings
+
+
+RULE = Rule(
+    code="REP005",
+    summary="module-level jnp computation (device work at import time)",
+    check=check,
+)

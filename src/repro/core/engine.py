@@ -116,6 +116,7 @@ tests/core/test_sharded.py).
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 import json
 import os
@@ -141,6 +142,7 @@ from repro.core.journal import UpdateJournal
 from repro.core.construct_jax import build_knn_tables_jax
 from repro.core.index import PAD_ID, KNNIndex
 from repro.core.updates import insert_affected_set
+from repro.analysis import sanitize
 from repro.kernels import ops
 
 _FORMAT = "repro-knn-index"
@@ -488,18 +490,21 @@ class EngineCore:
     # ------------------------------------------------------------------
 
     def _ks_array(self, b: int, k) -> tuple[jax.Array, int]:
+        # uploads are explicit device_puts of host arrays: an eager jnp.full
+        # materializes its Python fill value through an implicit transfer,
+        # which the sanitizer leg's transfer guard (rightly) rejects
         if k is None:
-            return jnp.full((b,), self.k, jnp.int32), self.k
+            return jax.device_put(np.full((b,), self.k, np.int32)), self.k
         ks = np.asarray(k, dtype=np.int32)
         if ks.ndim == 0:
             if int(ks) > self.k:
                 raise QueryError(f"query k={int(ks)} exceeds index k={self.k}")
-            return jnp.full((b,), int(ks), jnp.int32), int(ks)
+            return jax.device_put(np.full((b,), int(ks), np.int32)), int(ks)
         if ks.shape != (b,):
             raise QueryError(f"per-query k must have shape ({b},), got {ks.shape}")
         if ks.size and int(ks.max()) > self.k:
             raise QueryError(f"per-query k max={int(ks.max())} exceeds index k={self.k}")
-        return jnp.asarray(ks), self.k
+        return jax.device_put(ks), self.k
 
     def _gather_batch(self, us: np.ndarray, ks: jax.Array, snap: tuple):
         """Batched row gather at full index-k width against the ``snap``
@@ -524,8 +529,9 @@ class EngineCore:
         if us.ndim != 1:
             raise QueryError(f"queries must be a 1-D vertex array, got {us.shape}")
         snap = self._epochs.snapshot(epoch)
-        ks, width = self._ks_array(us.shape[0], k)
-        ids, d = self._gather_batch(us, ks, snap)
+        with sanitize.guard("query"):
+            ks, width = self._ks_array(us.shape[0], k)
+            ids, d = self._gather_batch(us, ks, snap)
         self._stats["queries_served"] += int(us.shape[0])
         self._stats["query_batches"] += 1
         self._stats["last_batch_size"] = int(us.shape[0])
@@ -654,7 +660,7 @@ class EngineCore:
         """
         out = np.full(_pow2_pad(len(rows), lo=64), self.n, np.int32)
         out[: len(rows)] = rows
-        return jnp.asarray(out)
+        return jax.device_put(out)
 
     # hooks the flush pipeline drives -----------------------------------
 
@@ -948,55 +954,64 @@ class EngineCore:
         # working references back to epoch e with the staged queue intact —
         # the flush is retryable and serving never stops.
         base = self._epochs.snapshot()
+        # Sanitizer rail: the device flush pipeline runs under the transfer
+        # guard (all uploads must be explicit device_puts); the "host"
+        # frontier is the measured host baseline, exempt by definition.
+        flush_guard = (
+            sanitize.guard("flush")
+            if self._frontier == "device"
+            else contextlib.nullcontext()
+        )
         try:
-            # -- delete side: which rows name a deleted object (device scan) --
-            purged_rows = np.empty(0, np.int32)
-            if deletes:
-                purged_rows = self._scan_delete_rows(deletes)
+            with flush_guard:
+                # -- delete side: which rows name a deleted object (device scan) --
+                purged_rows = np.empty(0, np.int32)
+                if deletes:
+                    purged_rows = self._scan_delete_rows(deletes)
 
-            # -- insert side: batched checkIns frontier, insert-first semantics --
-            # The frontier prunes against the CURRENT (pre-update) k-th bounds,
-            # exactly Algorithm 4 run before Algorithm 5 (the same order the
-            # scalar ``move_object`` oracle uses). A row the pruning misses that
-            # still needs a new object in the *final* tables must have had its
-            # k-th distance raised by the deletions — i.e. it lost an entry, so
-            # it is in the purge set and the repair rounds rebuild it from its
-            # bridge neighbors anyway. Keeping the pre-update bounds keeps the
-            # frontier as tight as the oracle's, instead of the unpruned sweep a
-            # post-purge (unbounded) k-th would trigger.
-            t0 = time.perf_counter()
-            f_rounds = 0
-            frows = np.empty(0, np.int32)
-            fc_ids = fc_d = None
-            if inserts:
-                provider = (
-                    self._insert_frontier_host
-                    if self.frontier == "host"
-                    else self._insert_frontier
-                )
-                frows, fc_ids, fc_d, f_rounds = provider(inserts)
-            t_frontier = time.perf_counter() - t0
-
-            # -- one fused purge + merge over the union of both row sets --
-            rounds = 0
-            t_purge = t_repair = 0.0
-            if purged_rows.size or frows.size:
+                # -- insert side: batched checkIns frontier, insert-first semantics --
+                # The frontier prunes against the CURRENT (pre-update) k-th bounds,
+                # exactly Algorithm 4 run before Algorithm 5 (the same order the
+                # scalar ``move_object`` oracle uses). A row the pruning misses that
+                # still needs a new object in the *final* tables must have had its
+                # k-th distance raised by the deletions — i.e. it lost an entry, so
+                # it is in the purge set and the repair rounds rebuild it from its
+                # bridge neighbors anyway. Keeping the pre-update bounds keeps the
+                # frontier as tight as the oracle's, instead of the unpruned sweep a
+                # post-purge (unbounded) k-th would trigger.
                 t0 = time.perf_counter()
-                rows = np.union1d(purged_rows, frows).astype(np.int32)
-                p = fc_ids.shape[1] if frows.size else 1
-                cand_ids = np.full((len(rows), p), -1, np.int32)
-                cand_d = np.full((len(rows), p), np.inf, np.float32)
-                if frows.size:
-                    pos = np.searchsorted(rows, frows)
-                    cand_ids[pos] = fc_ids
-                    cand_d[pos] = fc_d
-                self._purge_merge(rows, deletes, cand_ids, cand_d)
-                t_purge = time.perf_counter() - t0
-                # -- breadth-first repair of the deletion holes (shared frontier) --
-                if purged_rows.size:
+                f_rounds = 0
+                frows = np.empty(0, np.int32)
+                fc_ids = fc_d = None
+                if inserts:
+                    provider = (
+                        self._insert_frontier_host
+                        if self.frontier == "host"
+                        else self._insert_frontier
+                    )
+                    frows, fc_ids, fc_d, f_rounds = provider(inserts)
+                t_frontier = time.perf_counter() - t0
+
+                # -- one fused purge + merge over the union of both row sets --
+                rounds = 0
+                t_purge = t_repair = 0.0
+                if purged_rows.size or frows.size:
                     t0 = time.perf_counter()
-                    rounds = self._repair(purged_rows)
-                    t_repair = time.perf_counter() - t0
+                    rows = np.union1d(purged_rows, frows).astype(np.int32)
+                    p = fc_ids.shape[1] if frows.size else 1
+                    cand_ids = np.full((len(rows), p), -1, np.int32)
+                    cand_d = np.full((len(rows), p), np.inf, np.float32)
+                    if frows.size:
+                        pos = np.searchsorted(rows, frows)
+                        cand_ids[pos] = fc_ids
+                        cand_d[pos] = fc_d
+                    self._purge_merge(rows, deletes, cand_ids, cand_d)
+                    t_purge = time.perf_counter() - t0
+                    # -- breadth-first repair of the deletion holes (shared frontier) --
+                    if purged_rows.size:
+                        t0 = time.perf_counter()
+                        rounds = self._repair(purged_rows)
+                        t_repair = time.perf_counter() - t0
             self._checkpoint("pre-swap")
         except BaseException:
             self._restore_tables(base)
@@ -1039,6 +1054,11 @@ class EngineCore:
         }
         self._trim_epoch_stats()
         self._checkpoint("post-swap")
+        if sanitize.enabled():
+            ids_h, d_h = self._host_tables()
+            sanitize.scan_tables(
+                ids_h, d_h, self.n, context=f"flush -> epoch {new_epoch}"
+            )
         return result
 
     # ------------------------------------------------------------------
@@ -1241,10 +1261,10 @@ class QueryEngine(EngineCore):
         self._vk_ids, self._vk_d = snap
 
     def _gather_batch(self, us: np.ndarray, ks: jax.Array, snap: tuple):
-        return ops.serve_gather(snap[0], snap[1], jnp.asarray(us), ks)
+        return ops.serve_gather(snap[0], snap[1], jax.device_put(us), ks)
 
     def _scan_delete_rows(self, deletes: list[int]) -> np.ndarray:
-        del_arr = jnp.asarray(self._padded_deletes(deletes))
+        del_arr = jax.device_put(self._padded_deletes(deletes))
         hit = np.asarray(ops.rows_containing(self._vk_ids, del_arr))
         return np.flatnonzero(hit).astype(np.int32)
 
@@ -1258,8 +1278,8 @@ class QueryEngine(EngineCore):
         cand_d = np.pad(cand_d, pad, constant_values=np.inf)
         self._vk_ids, self._vk_d = ops.rows_purge_merge(
             self._vk_ids, self._vk_d, self._pad_rows(rows),
-            jnp.asarray(self._padded_deletes(deletes)),
-            jnp.asarray(cand_ids), jnp.asarray(cand_d), self.k,
+            jax.device_put(self._padded_deletes(deletes)),
+            jax.device_put(cand_ids), jax.device_put(cand_d), self.k,
             use_pallas=self.use_pallas,
         )
 
@@ -1276,7 +1296,7 @@ class QueryEngine(EngineCore):
     # no kth values ever cross the host boundary.
 
     def _frontier_init(self, src: np.ndarray) -> jax.Array:
-        self._fsrc = jnp.asarray(self._frontier_pad_src(src))
+        self._fsrc = jax.device_put(self._frontier_pad_src(src))
         return _frontier_init_prog(self._fsrc, self._vk_ids.shape[0])
 
     def _frontier_part(self, state, part: np.ndarray):

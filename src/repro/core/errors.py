@@ -27,6 +27,11 @@ The taxonomy, by layer:
   all (bad magic/header). Torn or garbage record *tails* are NOT errors:
   the journal truncates them cleanly on replay (crash recovery), so only
   a file that was never a journal raises.
+* ``SanitizerError`` — a device-residency invariant violated at runtime,
+  caught by the sanitizer rail (``repro.analysis.sanitize``): a host
+  transfer on a guarded query/flush path, a compile-budget overrun, a
+  NaN/negative-distance/corrupt-id table entry after a flush, or a Pallas
+  kernel diverging from its host oracle under poisoned buffers.
 
 Exported through the ``repro.knn`` facade.
 """
@@ -59,3 +64,7 @@ class ArtifactError(RepError, RuntimeError):
 
 class JournalError(ArtifactError):
     """A file that is not a usable write-ahead journal (bad magic/header)."""
+
+
+class SanitizerError(RepError, RuntimeError):
+    """A device-residency invariant violated at runtime (sanitizer rail)."""

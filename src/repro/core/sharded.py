@@ -214,7 +214,7 @@ class ShardRoutingTable:
 _DEVICE_FN_CACHE: dict[tuple, dict] = {}
 
 
-def _device_fns(mesh: Mesh, block: int, k: int) -> dict:
+def _device_fns(mesh: Mesh, block: int, k: int) -> dict:  # replint: disable=REP003(jits are built once per devices/block/k key and memoized in _DEVICE_FN_CACHE)
     """The jitted shard_map programs for one (mesh, block-rows, k) layout.
 
     Cached at module level keyed by the device ids so every engine on the
@@ -526,6 +526,23 @@ class ShardedQueryEngine(EngineCore):
         self._faff_fn = fns["faff"]
 
     # ------------------------------------------------------------------
+    # explicit host -> mesh uploads. Every operand of the shard_map
+    # programs is placed with the exact NamedSharding its in_spec expects,
+    # so jit never inserts an implicit device-to-device reshard — which is
+    # what the sanitizer's transfer guard (repro.analysis.sanitize) would
+    # reject on the query/flush paths.
+    # ------------------------------------------------------------------
+
+    def _put_shard(self, x) -> jax.Array:
+        """Upload splitting the leading axis across shards."""
+        spec = P("shard", *([None] * (np.ndim(x) - 1)))
+        return jax.device_put(x, NamedSharding(self.mesh, spec))
+
+    def _put_repl(self, x) -> jax.Array:
+        """Upload (or re-place) fully replicated across the mesh."""
+        return jax.device_put(x, NamedSharding(self.mesh, P()))
+
+    # ------------------------------------------------------------------
     # host-side routing (queries batched per shard, one roundtrip)
     # ------------------------------------------------------------------
 
@@ -576,7 +593,8 @@ class ShardedQueryEngine(EngineCore):
             return ops.serve_gather(ids_g, d_g, jnp.asarray(us), ks)
         qglob, fidx = self._route(us)
         return self._gather_fn(
-            ids_g, d_g, jnp.asarray(qglob), jnp.asarray(fidx), ks
+            ids_g, d_g, self._put_shard(qglob), self._put_repl(fidx),
+            self._put_repl(ks),
         )
 
     def _fetch_rows(self, vs: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
@@ -591,9 +609,9 @@ class ShardedQueryEngine(EngineCore):
         vs_p = np.zeros(m_pad, np.int32)
         vs_p[:m] = vs
         qglob, fidx = self._route(vs_p)
-        ks = jnp.full((m_pad,), self.k, jnp.int32)
+        ks = self._put_repl(np.full((m_pad,), self.k, np.int32))
         gi, gd = self._gather_fn(
-            self._ids_g, self._d_g, jnp.asarray(qglob), jnp.asarray(fidx), ks
+            self._ids_g, self._d_g, self._put_shard(qglob), self._put_repl(fidx), ks
         )
         return np.asarray(gi)[:m], np.asarray(gd)[:m]
 
@@ -602,7 +620,7 @@ class ShardedQueryEngine(EngineCore):
     # ------------------------------------------------------------------
 
     def _scan_delete_rows(self, deletes: list[int]) -> np.ndarray:
-        del_arr = jnp.asarray(self._padded_deletes(deletes))
+        del_arr = self._put_repl(self._padded_deletes(deletes))
         hits = np.asarray(self._scan_fn(self._ids_g, del_arr)).reshape(-1)
         rows = np.flatnonzero(hits).astype(np.int32)
         return rows[rows < self.n]  # guard: pad rows are all-pad, never hit
@@ -629,9 +647,9 @@ class ShardedQueryEngine(EngineCore):
         ci[o_sorted, slot] = cand_ids[order]
         cd[o_sorted, slot] = cand_d[order]
         self._ids_g, self._d_g, changed = self._purge_fn(
-            self._ids_g, self._d_g, jnp.asarray(rglob),
-            jnp.asarray(self._padded_deletes(deletes)),
-            jnp.asarray(ci), jnp.asarray(cd),
+            self._ids_g, self._d_g, self._put_shard(rglob),
+            self._put_repl(self._padded_deletes(deletes)),
+            self._put_shard(ci), self._put_shard(cd),
         )
         changed = np.asarray(changed)
         out = np.zeros(b, dtype=bool)
@@ -690,7 +708,7 @@ class ShardedQueryEngine(EngineCore):
         grow = np.full(srcp.shape, -1, np.int64)
         m = srcp >= 0
         grow[m] = self._g_of_v[srcp[m]]
-        self._fsrc_g = jnp.asarray(grow.astype(np.int32))
+        self._fsrc_g = self._put_repl(grow.astype(np.int32))
         if self.num_shards == 1:
             from repro.core.engine import _frontier_init_prog
 
@@ -750,7 +768,8 @@ class ShardedQueryEngine(EngineCore):
         vs_p[:m] = vs
         qglob, fidx = self._route(vs_p)
         out = self._fsend_fn(
-            self._d_g, state, jnp.asarray(qglob), jnp.asarray(fidx), self._fsrc_g
+            self._d_g, state, self._put_shard(qglob), self._put_repl(fidx),
+            self._fsrc_g,
         )
         return np.asarray(out)[:m]
 
@@ -766,7 +785,9 @@ class ShardedQueryEngine(EngineCore):
         vv = np.full((s, rmax, b), np.inf, np.float32)
         rglob[o_sorted, slot] = self.routing.padded_rows(rows[order], o_sorted)
         vv[o_sorted, slot] = vals[order]
-        state, changed = self._fmin_fn(state, jnp.asarray(rglob), jnp.asarray(vv))
+        state, changed = self._fmin_fn(
+            state, self._put_shard(rglob), self._put_shard(vv)
+        )
         changed = np.asarray(changed)
         out = np.zeros(len(rows), dtype=bool)
         out[order] = changed[o_sorted, slot]
@@ -789,7 +810,8 @@ class ShardedQueryEngine(EngineCore):
         vs_p[:m] = rows
         qglob, fidx = self._route(vs_p)
         aff, d = self._faff_fn(
-            self._d_g, state, jnp.asarray(qglob), jnp.asarray(fidx), self._fsrc_g
+            self._d_g, state, self._put_shard(qglob), self._put_repl(fidx),
+            self._fsrc_g,
         )
         return np.asarray(aff)[:m, : len(src)], np.asarray(d)[:m, : len(src)]
 

@@ -145,7 +145,7 @@ def build_cell(arch: ArchSpec, shape_name: str, cell: ShapeCell, rules,
     raise ValueError(f"unhandled cell {arch.arch_id}/{shape_name} kind={cell.kind}")
 
 
-def run_cell(arch: ArchSpec, shape_name: str, cell: ShapeCell, *, multi_pod: bool,
+def run_cell(arch: ArchSpec, shape_name: str, cell: ShapeCell, *, multi_pod: bool,  # replint: disable=REP003(one jit per dry-run cell by design; the wrapper is used once and discarded)
              out_dir: Path, variant: dict | None = None, tag: str = "") -> dict:
     variant = variant or {}
     mesh = make_production_mesh(multi_pod=multi_pod)

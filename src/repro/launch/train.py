@@ -38,7 +38,7 @@ def make_stream(arch, cfg, smoke: bool):
     raise ValueError(arch.family)
 
 
-def main():
+def main():  # replint: disable=REP003(one-shot setup at process start; step_fn lives for the whole training run)
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")

@@ -1,0 +1,9 @@
+"""REP004 fixture: 64-bit dtypes in a kernel module (id/dist contract)."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def widen(ids, dists):
+    wide = ids.astype(jnp.int64)
+    d = dists.astype(np.float64)
+    return wide, d.astype("float64")

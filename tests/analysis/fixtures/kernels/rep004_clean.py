@@ -1,0 +1,9 @@
+"""REP004 clean twin: the id=int32 / dist=float32 contract held."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def narrow(ids, dists):
+    wide = ids.astype(jnp.int32)
+    d = dists.astype(np.float32)
+    return wide, d.astype("float32")

@@ -1,0 +1,14 @@
+"""REP001 fixture: host materialization reachable from a jit boundary."""
+import jax
+import numpy as np
+
+
+@jax.jit
+def entry(x):
+    return helper(x)
+
+
+def helper(x):
+    total = x.sum().item()  # host sync inside the serving path
+    arr = np.asarray(x)  # host readback
+    return float(total) + arr[0]

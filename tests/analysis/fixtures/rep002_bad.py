@@ -1,0 +1,17 @@
+"""REP002 fixture: aliased Pallas operand read after the output scatter."""
+import jax
+from jax.experimental import pallas as pl
+
+
+def kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2
+    stale = y_ref[...]  # y aliases o: this reads the scattered buffer
+    o_ref[...] = o_ref[...] + stale
+
+
+def run(x, y):
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        input_output_aliases={1: 0},
+    )(x, y)

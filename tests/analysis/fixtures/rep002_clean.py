@@ -1,0 +1,16 @@
+"""REP002 clean twin: aliased operand fully read before the output write."""
+import jax
+from jax.experimental import pallas as pl
+
+
+def kernel(x_ref, y_ref, o_ref):
+    fresh = y_ref[...]  # read the aliased operand first (Jacobi discipline)
+    o_ref[...] = x_ref[...] * 2 + fresh
+
+
+def run(x, y):
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        input_output_aliases={1: 0},
+    )(x, y)

@@ -1,0 +1,17 @@
+"""REP003 fixture: recompile hazards — jit in a loop, tracer branch."""
+import jax
+
+
+def apply_all(fs, x):
+    out = []
+    for f in fs:
+        g = jax.jit(f)  # fresh jit wrapper per iteration: compiles every call
+        out.append(g(x))
+    return out
+
+
+@jax.jit
+def gate(x, y):
+    if x > 0:  # Python branch on a tracer
+        return y * 2
+    return y

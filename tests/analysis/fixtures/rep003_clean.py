@@ -1,0 +1,15 @@
+"""REP003 clean twin: module-level jit, lax.cond instead of Python branch."""
+import jax
+import jax.numpy as jnp
+
+
+def _apply(f, x):
+    return f(x)
+
+
+apply_one = jax.jit(_apply, static_argnums=0)
+
+
+@jax.jit
+def gate(x, y):
+    return jnp.where(x > 0, y * 2, y)

@@ -1,0 +1,4 @@
+"""REP005 fixture: module-level jnp computation (import-time device work)."""
+import jax.numpy as jnp
+
+TABLE = jnp.arange(1024) * 2  # allocates on device at import

@@ -1,0 +1,132 @@
+"""Static rail: fixture twins + pragma policy + repo-wide cleanliness.
+
+Mutation-style coverage: every registered rule must own at least one
+``<code>_bad.py`` fixture it fires on and a ``<code>_clean.py`` twin it
+stays silent on. A rule that stops firing on its own fixture — or a new
+rule added without fixtures — fails here, not in code review.
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.replint import main, run
+from repro.analysis.rules import all_rules
+
+FIXTURES = Path(__file__).parent / "fixtures"
+REPO = Path(__file__).resolve().parents[2]
+
+
+def _codes(path: Path) -> set[str]:
+    return {f.code for f in run([str(path)])}
+
+
+@pytest.mark.parametrize("rule", all_rules(), ids=lambda r: r.code)
+def test_rule_fires_on_bad_fixture(rule):
+    bads = sorted(FIXTURES.rglob(f"{rule.code.lower()}_bad.py"))
+    assert bads, f"{rule.code} has no firing fixture — add one under {FIXTURES}"
+    for bad in bads:
+        assert rule.code in _codes(bad), f"{rule.code} silent on {bad.name}"
+
+
+@pytest.mark.parametrize("rule", all_rules(), ids=lambda r: r.code)
+def test_rule_silent_on_clean_twin(rule):
+    cleans = sorted(FIXTURES.rglob(f"{rule.code.lower()}_clean.py"))
+    assert cleans, f"{rule.code} has no clean twin fixture"
+    for clean in cleans:
+        assert rule.code not in _codes(clean), f"{rule.code} fires on {clean.name}"
+
+
+def test_clean_twins_are_fully_clean():
+    # no rule may fire on another rule's clean twin either
+    for clean in sorted(FIXTURES.rglob("*_clean.py")):
+        findings = run([str(clean)])
+        assert findings == [], "\n".join(f.render() for f in findings)
+
+
+def test_repo_src_is_clean():
+    findings = run([str(REPO / "src")])
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+def test_exit_codes():
+    bad = FIXTURES / "rep005_bad.py"
+    clean = FIXTURES / "rep005_clean.py"
+    assert main([str(bad)]) == 1
+    assert main([str(clean)]) == 0
+    assert main(["--list-rules"]) == 0
+
+
+def test_select_filters_rules():
+    bad = FIXTURES / "rep003_bad.py"
+    assert {f.code for f in run([str(bad)], select={"REP003"})} == {"REP003"}
+    assert run([str(bad)], select={"REP004"}) == []
+
+
+def test_static_rail_is_stdlib_only():
+    # the blocking CI job runs replint before jax is installed; importing
+    # the static rail must never pull jax in
+    code = (
+        "import sys; import repro.analysis.replint; "
+        "assert 'jax' not in sys.modules, 'static rail imported jax'"
+    )
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    subprocess.run([sys.executable, "-c", code], check=True, env=env)
+
+
+# ---------------------------------------------------------------------------
+# pragma policy
+# ---------------------------------------------------------------------------
+
+
+def test_reasoned_pragma_suppresses(tmp_path):
+    f = tmp_path / "mod.py"
+    f.write_text(
+        "import jax.numpy as jnp\n"
+        "T = jnp.arange(8)  # replint: disable=REP005(test table, built once)\n"
+    )
+    assert run([str(f)]) == []
+
+
+def test_bare_pragma_is_rejected(tmp_path):
+    f = tmp_path / "mod.py"
+    f.write_text(
+        "import jax.numpy as jnp\n"
+        "T = jnp.arange(8)  # replint: disable=REP005\n"
+    )
+    codes = {x.code for x in run([str(f)])}
+    assert "REP000" in codes  # reasonless pragma is itself a finding
+    assert "REP005" in codes  # and it does NOT suppress
+
+
+def test_empty_reason_is_rejected(tmp_path):
+    f = tmp_path / "mod.py"
+    f.write_text(
+        "import jax.numpy as jnp\n"
+        "T = jnp.arange(8)  # replint: disable=REP005( )\n"
+    )
+    assert "REP000" in {x.code for x in run([str(f)])}
+
+
+def test_def_line_pragma_covers_block(tmp_path):
+    f = tmp_path / "mod.py"
+    f.write_text(
+        "import jax\n"
+        "def fan(fs, x):  # replint: disable=REP003(wrappers cached by caller)\n"
+        "    return [jax.jit(f)(x) for f in fs]\n"
+    )
+    assert run([str(f)]) == []
+
+
+def test_pragma_does_not_leak_past_block(tmp_path):
+    f = tmp_path / "mod.py"
+    f.write_text(
+        "import jax\n"
+        "def fan(fs, x):  # replint: disable=REP003(wrappers cached by caller)\n"
+        "    return [jax.jit(f)(x) for f in fs]\n"
+        "def fan2(fs, x):\n"
+        "    return [jax.jit(f)(x) for f in fs]\n"
+    )
+    assert {x.code for x in run([str(f)])} == {"REP003"}
