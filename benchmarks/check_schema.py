@@ -25,6 +25,12 @@ experiment's acceptance floor:
   during-flush p99 within ``--exp15-ceiling`` (default 5x, measured
   ~1.6x) of the quiescent p99 — snapshot isolation means mid-flush
   queries read immutable epoch-e buffers, so the tail may not blow up.
+* exp16 — replicated hot shard: unreplicated vs replicated queries/s on
+  the zipf-skewed mix, bit-identical results, replica traffic actually
+  served (replica_batches > 0, zero replica_errors). ``--min-devices 8``
+  additionally demands the full 4-shard x3-replica layout ran and holds
+  the replicated path >= 1.5x the unreplicated one (measured ~1.6-1.8x
+  steady state).
 """
 from __future__ import annotations
 
@@ -36,6 +42,7 @@ from pathlib import Path
 EXP13_PARITY_FLOOR = 0.8
 EXP14_DEVICE_FLOOR = 1.3
 EXP15_P99_CEILING = 5.0
+EXP16_SPEEDUP_FLOOR = 1.5
 
 
 def _need(meta: dict, key: str):
@@ -227,11 +234,61 @@ def check_exp15(data: dict, ceiling: float) -> str:
             f"(x{deg} <= {ceiling}x)")
 
 
+def check_exp16(data: dict, min_devices: int | None) -> str:
+    meta = data["meta"]
+    for key in ("exp16.grid", "exp16.k", "exp16.query_batch_size",
+                "exp16.devices", "exp16.shards", "exp16.zipf_theta",
+                "exp16.hot_shard", "exp16.hot_frac", "exp16.replicas",
+                "exp16.identical_results", "exp16.qps.unreplicated",
+                "exp16.qps.replicated", "exp16.speedup",
+                "exp16.engine.replica_queries", "exp16.engine.replica_batches",
+                "exp16.engine.replica_errors"):
+        _need(meta, key)
+    names = {r["name"] for r in data["rows"]}
+    for name in ("exp16.hot.unreplicated", "exp16.hot.replicated"):
+        assert name in names, f"missing row {name}"
+    assert meta["exp16.identical_results"] is True, (
+        "exp16 replicated results were not bit-identical to unreplicated"
+    )
+    assert meta["exp16.hot_frac"] >= 0.8, (
+        f"exp16 zipf mix concentrated only {meta['exp16.hot_frac']} on the "
+        f"hot shard — the skew the experiment is about is missing"
+    )
+    assert meta["exp16.engine.replica_errors"] == 0, meta
+    if meta["exp16.replicas"]:
+        assert meta["exp16.engine.replica_batches"] > 0, (
+            "exp16 ran with replicas but no batch was served through the "
+            "replica fan-out path"
+        )
+        assert meta["exp16.engine.replica_queries"] > 0, meta
+    if min_devices and min_devices >= 8:
+        assert meta["exp16.devices"] >= 8, (
+            f"exp16 saw only {meta['exp16.devices']} devices; the "
+            f"multi-device job requires 8 (is XLA_FLAGS/--devices set?)"
+        )
+        assert meta["exp16.shards"] == 4 and meta["exp16.replicas"] == 3, (
+            f"exp16 layout {meta['exp16.shards']} shards x "
+            f"{meta['exp16.replicas']} replicas != the 4x3 acceptance layout"
+        )
+        # acceptance floor: fanning the hot shard across its replica set
+        # must actually buy throughput on the skewed mix
+        sp = meta["exp16.speedup"]
+        assert sp >= EXP16_SPEEDUP_FLOOR, (
+            f"exp16 replicated speedup {sp}x < {EXP16_SPEEDUP_FLOOR}x floor"
+        )
+    return (f"exp16 OK: x{meta['exp16.speedup']} replicated vs unreplicated "
+            f"(hot_frac {meta['exp16.hot_frac']}, "
+            f"{meta['exp16.shards']}shards x{meta['exp16.replicas']}replicas, "
+            f"{meta['exp16.engine.replica_queries']} replica queries, "
+            f"0 errors)")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("json_path")
     ap.add_argument("--require", nargs="+", required=True,
-                    choices=("exp11", "exp12", "exp13", "exp14", "exp15"))
+                    choices=("exp11", "exp12", "exp13", "exp14", "exp15",
+                             "exp16"))
     ap.add_argument("--min-devices", type=int, default=None,
                     help="exp13: demand the sweep reached this device count")
     ap.add_argument("--exp12-floor", type=float, default=1.2,
@@ -253,8 +310,10 @@ def main() -> None:
             print(check_exp13(data, args.min_devices))
         elif exp == "exp14":
             print(check_exp14(data))
-        else:
+        elif exp == "exp15":
             print(check_exp15(data, args.exp15_ceiling))
+        else:
+            print(check_exp16(data, args.min_devices))
     print(f"schema OK: {args.json_path} ({', '.join(args.require)})",
           file=sys.stderr)
 

@@ -181,6 +181,39 @@ def main():
     print(f"epoch stats: {dur.stats()['epochs_retained']} retained, "
           f"{dur.stats()['epoch_table_bytes']} table bytes")
 
+    print("\n== 11. replicated hot shards (shard -> replica-set fan-out) ==")
+    # Skewed urban traffic pins one vertex range: with equal shard ranges,
+    # one device saturates while the rest idle. set_replication({shard: R})
+    # copies the hot shard's epoch buffers onto R extra devices at publish
+    # time — same atomic epoch step, so pinned reads stay bit-identical on
+    # every replica — and query batches fan out across the replica set
+    # (round_robin or least_outstanding). Flushes still go to the primary
+    # only: replicas are a serving concern, not a write path. Worth it when
+    # the hot shard's share of traffic dwarfs the padding a narrower
+    # per-replica batch pays (exp16: zipf-skewed mix, >= 1.5x q/s at
+    # 4 shards x 3 replicas); serve.py --replicate SHARD:R or auto:R picks
+    # the hottest shard from a sliding query histogram.
+    import jax
+
+    free = len(jax.devices()) - sharded.num_shards
+    if free > 0:
+        hot = 0
+        sharded.set_replication({hot: min(3, free)}, policy="round_robin")
+        r_ids, _ = sharded.query_batch(us)
+        rst = sharded.stats()
+        print(f"plan {rst['replication']} -> {rst['replica_slots']} slots "
+              f"({rst['replica_policy']}); bit-identical through replicas: "
+              f"{bool(np.array_equal(np.asarray(r_ids), np.asarray(ids)))}")
+        print(f"replica traffic: {rst['replica_queries']} queries in "
+              f"{rst['replica_batches']} batches, "
+              f"errors={rst['replica_errors']}")
+        sharded.set_replication(None)                 # drop back to primaries
+    else:
+        print(f"no devices free beyond the {sharded.num_shards} shard "
+              f"primaries - start with "
+              f"XLA_FLAGS=--xla_force_host_platform_device_count=8 to see "
+              f"the fan-out")
+
 
 if __name__ == "__main__":
     main()

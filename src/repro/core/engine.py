@@ -208,15 +208,23 @@ class EpochStore:
             self._snaps.popitem(last=False)
 
     def snapshot(self, epoch: int | None = None) -> tuple:
+        return self.resolve(epoch)[1]
+
+    def resolve(self, epoch: int | None = None) -> tuple[int, tuple]:
+        """Resolve ``epoch`` (None = current, at call time) to the concrete
+        ``(epoch number, snapshot)`` pair — one atomic read, so a caller
+        that needs both (e.g. replica routing keyed by epoch) can never see
+        a number from one epoch and buffers from another."""
         if epoch is None:
-            return self._snaps[self.current]
-        epoch = int(epoch)
+            epoch = self.current
+        else:
+            epoch = int(epoch)
         if epoch not in self._snaps:
             raise EpochError(
                 f"epoch {epoch} is not retained (have {self.epochs()}); "
                 f"raise keep_epochs to pin more history"
             )
-        return self._snaps[epoch]
+        return epoch, self._snaps[epoch]
 
 
 def _pow2_pad(x: int, lo: int = 8) -> int:
@@ -229,11 +237,13 @@ class EngineCore:
 
     Subclasses own the table storage and implement the device hooks:
 
-    * ``_gather_batch(us, ks, snap)`` — the batched row gather behind
-      ``query_batch`` (full index-k width; the core applies stats and the
-      per-query width slice). ``snap`` is the epoch snapshot resolved at
-      dispatch — the gather must read it, never the working tables, so
-      queries stay snapshot-isolated from an in-flight flush.
+    * ``_gather_batch(us, ks, snap, epoch)`` — the batched row gather
+      behind ``query_batch`` (full index-k width; the core applies stats
+      and the per-query width slice). ``snap`` is the epoch snapshot
+      resolved at dispatch and ``epoch`` its number — the gather must read
+      the snapshot, never the working tables, so queries stay
+      snapshot-isolated from an in-flight flush; the epoch number lets a
+      subclass key per-epoch serving state (replica buffers) consistently.
     * ``_table_snapshot()`` — the current working tables as an immutable
       snapshot tuple (references; JAX arrays are immutable), published to
       the ``EpochStore`` at each flush commit.
@@ -506,11 +516,13 @@ class EngineCore:
             raise QueryError(f"per-query k max={int(ks.max())} exceeds index k={self.k}")
         return jax.device_put(ks), self.k
 
-    def _gather_batch(self, us: np.ndarray, ks: jax.Array, snap: tuple):
+    def _gather_batch(self, us: np.ndarray, ks: jax.Array, snap: tuple, epoch: int):
         """Batched row gather at full index-k width against the ``snap``
         epoch snapshot (never the working tables — see the class doc);
         ``us`` is a host array so a sharded engine can route queries by
-        owner before the device roundtrip."""
+        owner before the device roundtrip. ``epoch`` is the resolved epoch
+        number of ``snap`` (for subclasses with epoch-keyed serving state,
+        e.g. replica buffers behind the routing table)."""
         raise NotImplementedError
 
     def query_batch(self, us, k=None, *, epoch=None) -> tuple[jax.Array, jax.Array]:
@@ -528,10 +540,10 @@ class EngineCore:
         us = np.asarray(us, dtype=np.int32)
         if us.ndim != 1:
             raise QueryError(f"queries must be a 1-D vertex array, got {us.shape}")
-        snap = self._epochs.snapshot(epoch)
+        epoch_r, snap = self._epochs.resolve(epoch)
         with sanitize.guard("query"):
             ks, width = self._ks_array(us.shape[0], k)
-            ids, d = self._gather_batch(us, ks, snap)
+            ids, d = self._gather_batch(us, ks, snap, epoch_r)
         self._stats["queries_served"] += int(us.shape[0])
         self._stats["query_batches"] += 1
         self._stats["last_batch_size"] = int(us.shape[0])
@@ -1260,7 +1272,7 @@ class QueryEngine(EngineCore):
     def _restore_tables(self, snap: tuple) -> None:
         self._vk_ids, self._vk_d = snap
 
-    def _gather_batch(self, us: np.ndarray, ks: jax.Array, snap: tuple):
+    def _gather_batch(self, us: np.ndarray, ks: jax.Array, snap: tuple, epoch: int):
         return ops.serve_gather(snap[0], snap[1], jax.device_put(us), ks)
 
     def _scan_delete_rows(self, deletes: list[int]) -> np.ndarray:

@@ -80,9 +80,14 @@ class UpdateJournal:
         self.path = os.fspath(path)
         self.fsync = bool(fsync)
         self.dropped_bytes = 0  # torn/garbage tail bytes discarded by replay
-        fresh = not os.path.exists(self.path) or os.path.getsize(self.path) == 0
+        size = os.path.getsize(self.path) if os.path.exists(self.path) else 0
+        # A file shorter than the magic can only be a kill between creation
+        # and the magic fsync: zero records were ever acknowledged through
+        # it, so recover it as a fresh journal instead of refusing to open.
+        fresh = size < len(_MAGIC)
         self._f = open(self.path, "a+b")
         if fresh:
+            self._f.truncate(0)
             self._f.write(_MAGIC)
             self._sync()
         else:
@@ -147,7 +152,10 @@ class UpdateJournal:
         with garbage) and the dropped byte count is recorded in
         ``self.dropped_bytes``. Corruption can only live in the tail —
         every earlier record was fsync'd before its op was acknowledged.
+        ``dropped_bytes`` describes THIS replay only — it resets to 0 on
+        entry so a clean replay never reports an earlier replay's tail.
         """
+        self.dropped_bytes = 0
         self._f.seek(0)
         buf = self._f.read()
         out: list[Record] = []

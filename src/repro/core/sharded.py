@@ -59,10 +59,26 @@ buffer pair. ``flush_updates`` (the shared core) publishes each new epoch
 through ``_publish_epoch``, which the sharded engine extends to swap the
 routing table's epoch entry in the same atomic step — so a query dispatched
 mid-flush routes to every shard's OLD buffers or every shard's NEW buffers,
-never a mixture, and the stepping stone to replicated hot shards (ROADMAP)
-is a routing-table edit, not an arithmetic hunt. The engine inherits the
-core's journal/WAL durability unchanged (the journal records logical object
-updates, which are layout-independent).
+never a mixture. The engine inherits the core's journal/WAL durability
+unchanged (the journal records logical object updates, which are
+layout-independent).
+
+Replicated hot shards
+---------------------
+Skewed traffic (downtown absorbs most queries) makes one owner device the
+ceiling no matter how many shards exist. ``set_replication({shard: R})``
+expands the shard set into a *slot* set behind the same routing table:
+slot ``j < S`` is shard ``j``'s primary, each extra replica appends one
+slot on the next free device, and ``route(vs, policy=)`` spreads a hot
+shard's queries across its slots (round-robin or least-outstanding).
+Queries then run the SAME one-roundtrip shard_map gather on the wider
+serving mesh; flushes keep writing only the primary layout, and each
+``_publish_epoch`` ``jax.device_put``s the replicated shards' fresh local
+blocks onto their replica devices in the same atomic swap — so every
+replica serves exactly the primary's epoch snapshot (pinned reads stay
+bit-identical mid-flush) and the five-way oracle equality is untouched. A
+replica fault degrades that batch to the primary-only path and counts a
+``replica_errors`` stat instead of failing the query.
 
 The engine is drop-in for ``QueryEngine``: same constructor shape, same
 staged-update API, same artifact format. Artifacts always store the logical
@@ -78,12 +94,17 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import (
+    Mesh,
+    NamedSharding,
+    PartitionSpec as P,
+    SingleDeviceSharding,
+)
 
 from repro.core.bngraph import BNGraph
 from repro.core.construct_jax import build_knn_tables_jax
 from repro.core.engine import EngineCore, _pow2_pad, load_artifact
-from repro.core.errors import EpochError
+from repro.core.errors import EpochError, QueryError
 from repro.core.index import KNNIndex
 from repro.kernels import ops
 
@@ -148,6 +169,17 @@ class ShardRoutingTable:
       buffer) via the arrays' addressable shards. That is the "shard ->
       device buffers per epoch" map: per-shard epoch swap behind one
       indirection.
+    * **Replication.** ``set_replication({shard: extras})`` expands the
+      shard set into a *slot* set: slot ``j < S`` is shard ``j``'s primary
+      and every extra replica appends one more slot (``slot_shard`` maps
+      slot -> logical shard). ``owner()`` keeps answering with the logical
+      shard; ``route(vs, policy=)`` resolves one step further to the slot
+      each query should hit, under ``round_robin`` (a per-shard cursor) or
+      ``least_outstanding`` (water-fill over ``outstanding`` + this batch).
+      The replica *buffers* for an epoch ride the same ``publish`` call
+      (``serving=``) so an epoch's primaries and replicas become visible in
+      the same atomic step and pinned reads stay bit-identical on every
+      slot.
     """
 
     def __init__(self, n: int, num_shards: int):
@@ -156,12 +188,28 @@ class ShardRoutingTable:
         self.shard_rows = -(-self.n // self.num_shards)  # ceil
         self._starts = np.arange(self.num_shards, dtype=np.int64) * self.shard_rows
         self._by_epoch: OrderedDict[int, tuple] = OrderedDict()
+        self._serving_by_epoch: dict[int, tuple | None] = {}
+        self.replication: dict[int, int] = {}
+        self.slot_shard = np.arange(self.num_shards, dtype=np.int64)
+        self._slots_of: dict[int, np.ndarray] = {}
+        self._rr: dict[int, int] = {}
+        self.outstanding = np.zeros(self.num_shards, np.int64)
 
     # -- ownership ------------------------------------------------------
 
     def owner(self, vs: np.ndarray) -> np.ndarray:
-        """Owner shard per vertex (vertices assumed clipped to [0, n])."""
+        """Owner shard per vertex. ``vs`` must lie in [0, n] — n is the
+        shared dummy/pad address, owned by the last shard; anything outside
+        raises ``QueryError`` instead of silently resolving (a negative id
+        used to underflow ``searchsorted - 1`` into a plausible-but-wrong
+        row of the LAST shard)."""
         vs = np.asarray(vs, np.int64)
+        if vs.size and (int(vs.min()) < 0 or int(vs.max()) > self.n):
+            bad = vs[(vs < 0) | (vs > self.n)]
+            raise QueryError(
+                f"vertex id {int(bad[0])} is outside [0, {self.n}] and "
+                f"cannot be routed to a shard"
+            )
         return np.minimum(
             np.searchsorted(self._starts, vs, side="right") - 1,
             self.num_shards - 1,
@@ -177,10 +225,115 @@ class ShardRoutingTable:
             own = self.owner(vs)
         return own * (self.shard_rows + 1) + (vs - self._starts[own])
 
+    def serving_rows(
+        self, vs: np.ndarray, own: np.ndarray, slots: np.ndarray
+    ) -> np.ndarray:
+        """Serving-layout padded-row address: the chosen slot's block base
+        plus the vertex's offset from its *owner's* start boundary (every
+        slot of a shard holds a copy of the same local block)."""
+        return slots * (self.shard_rows + 1) + (np.asarray(vs, np.int64) - self._starts[own])
+
+    @property
+    def num_slots(self) -> int:
+        return len(self.slot_shard)
+
+    def set_replication(self, plan: dict[int, int]) -> np.ndarray:
+        """Install a shard -> extra-replica-count plan; returns the new
+        slot -> logical-shard map. Slot ``j < num_shards`` stays shard
+        ``j``'s primary; each extra replica appends one slot, grouped by
+        shard in ascending shard order. Resets the routing cursors."""
+        clean: dict[int, int] = {}
+        for s, r in (plan or {}).items():
+            s, r = int(s), int(r)
+            if not 0 <= s < self.num_shards:
+                raise ValueError(
+                    f"replication plan names shard {s}, have {self.num_shards}"
+                )
+            if r < 0:
+                raise ValueError(f"replica count for shard {s} must be >= 0, got {r}")
+            if r:
+                clean[s] = r
+        self.replication = clean
+        extras: list[int] = []
+        self._slots_of = {}
+        for s in sorted(clean):
+            slots = [s]
+            for _ in range(clean[s]):
+                extras.append(s)
+                slots.append(self.num_shards + len(extras) - 1)
+            self._slots_of[s] = np.asarray(slots, np.int64)
+        self.slot_shard = np.concatenate(
+            [np.arange(self.num_shards, dtype=np.int64),
+             np.asarray(extras, np.int64)]
+        )
+        self._rr = {}
+        self.outstanding = np.zeros(self.num_slots, np.int64)
+        return self.slot_shard
+
+    def route(
+        self, vs: np.ndarray, policy: str = "round_robin"
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Resolve vertices one step past ``owner``: (owner shard, serving
+        slot) per vertex. Unreplicated shards route to their primary slot;
+        a replicated shard's queries spread across its slot set under
+        ``policy`` (every slot serves byte-identical buffers, so the choice
+        affects load only, never results)."""
+        own = self.owner(vs)
+        return own, self.assign_slots(own, policy)
+
+    def assign_slots(self, own: np.ndarray, policy: str = "round_robin") -> np.ndarray:
+        if policy not in ("round_robin", "least_outstanding"):
+            raise QueryError(
+                f"unknown replica routing policy {policy!r} "
+                f"(want 'round_robin' or 'least_outstanding')"
+            )
+        own = np.asarray(own, np.int64)
+        slots = own.copy()  # primary slot id == shard id
+        for s, sl in self._slots_of.items():
+            m = np.flatnonzero(own == s)
+            if not len(m):
+                continue
+            if policy == "round_robin":
+                base = self._rr.get(s, 0)
+                slots[m] = sl[(base + np.arange(len(m))) % len(sl)]
+                self._rr[s] = (base + len(m)) % len(sl)
+            else:
+                slots[m] = np.repeat(sl, self._water_fill(sl, len(m)))
+        return slots
+
+    def _water_fill(self, sl: np.ndarray, count: int) -> np.ndarray:
+        """Per-slot assignment counts that level ``outstanding`` + this
+        batch across the shard's slots (the least-outstanding policy)."""
+        load = self.outstanding[sl]
+        lo, hi = int(load.min()), int(load.min()) + count
+        while lo < hi:  # max level the batch can fill to
+            mid = (lo + hi + 1) // 2
+            if int(np.maximum(0, mid - load).sum()) <= count:
+                lo = mid
+            else:
+                hi = mid - 1
+        add = np.maximum(0, lo - load)
+        rem = count - int(add.sum())
+        if rem:
+            add[np.argsort(load + add, kind="stable")[:rem]] += 1
+        return add
+
+    def record_dispatch(self, slots: np.ndarray) -> None:
+        self.outstanding += np.bincount(slots, minlength=self.num_slots)
+
+    def record_complete(self, slots: np.ndarray) -> None:
+        self.outstanding -= np.bincount(slots, minlength=self.num_slots)
+
     # -- epoch -> buffers ----------------------------------------------
 
-    def publish(self, epoch: int, buffers: tuple, keep=None) -> None:
-        self._by_epoch[int(epoch)] = buffers
+    def publish(self, epoch: int, buffers: tuple, keep=None, serving=None) -> None:
+        """Swap in an epoch's buffers — and, when a replication plan is
+        active, the matching replica (serving-layout) buffers — as one
+        step, so a query can never resolve an epoch to another epoch's
+        replicas."""
+        epoch = int(epoch)
+        self._by_epoch[epoch] = buffers
+        self._serving_by_epoch[epoch] = serving
         if keep is not None:
             self.trim(keep)
 
@@ -188,6 +341,9 @@ class ShardRoutingTable:
         kept = set(keep)
         for e in [e for e in self._by_epoch if e not in kept]:
             del self._by_epoch[e]
+        self._serving_by_epoch = {
+            e: s for e, s in self._serving_by_epoch.items() if e in kept
+        }
 
     def epochs(self) -> list[int]:
         return list(self._by_epoch)
@@ -208,6 +364,25 @@ class ShardRoutingTable:
         for si, sd in zip(ids_g.addressable_shards, d_g.addressable_shards):
             s = (si.index[0].start or 0) // (self.shard_rows + 1)
             out[s] = (si.device, si.data, sd.data)
+        return out
+
+    def serving(self, epoch: int):
+        """The epoch's replica (serving-layout) buffer pair, or None when
+        it was published without an active replication plan."""
+        return self._serving_by_epoch.get(int(epoch))
+
+    def replica_buffers(self, epoch: int) -> dict[int, tuple]:
+        """slot id -> (logical shard, device, local ids, local dists) for a
+        retained epoch's serving layout — the replica-set analogue of
+        ``shard_buffers`` (empty when the epoch has no replicas)."""
+        serving = self.serving(epoch)
+        if serving is None:
+            return {}
+        s_ids, s_d = serving
+        out: dict[int, tuple] = {}
+        for si, sd in zip(s_ids.addressable_shards, s_d.addressable_shards):
+            slot = (si.index[0].start or 0) // (self.shard_rows + 1)
+            out[slot] = (int(self.slot_shard[slot]), si.device, si.data, sd.data)
         return out
 
 
@@ -339,8 +514,37 @@ def _device_fns(mesh: Mesh, block: int, k: int) -> dict:  # replint: disable=REP
         b = dist_g.shape[1]
         return affs.reshape(-1, b)[fidx], ds.reshape(-1, b)[fidx]
 
+    # -- replica fan-out gather, two-phase ------------------------------
+    # The serving mesh is wider than the shard mesh (primaries + replica
+    # slots), so the one-jit gather's epilogue — reshape + [fidx] on a
+    # replicated tile — would repeat its work per device. Instead the
+    # shard_map tile stays sharded, one explicit d2d device_put
+    # consolidates it, and a single-device jit restores the caller's batch
+    # order: the epilogue is paid once, not once per slot. Replication
+    # balances the per-slot batches, so the consolidated tile is small.
+
+    def gather_tile(ids_g, d_g, qglob):
+        def blk(ti, td, q):
+            off = jax.lax.axis_index("shard") * block
+            gi, gd = ops.shard_gather_rows(ti, td, q[0], off)
+            return gi[None], gd[None]
+
+        return shard_map(
+            blk, mesh=mesh,
+            in_specs=(spec2, spec2, spec2),
+            out_specs=(P("shard", None, None), P("shard", None, None)),
+        )(ids_g, d_g, qglob)
+
+    def gather_epi(gi, gd, fidx, ks):
+        gi = gi.reshape(-1, k)[fidx]
+        gd = gd.reshape(-1, k)[fidx]
+        mask = jax.lax.broadcasted_iota(jnp.int32, gi.shape, 1) < ks[:, None]
+        return jnp.where(mask, gi, -1), jnp.where(mask & (gi >= 0), gd, jnp.inf)
+
     _DEVICE_FN_CACHE[key] = {
         "gather": jax.jit(gather),
+        "gather_tile": jax.jit(gather_tile),
+        "gather_epi": jax.jit(gather_epi),
         "scan": jax.jit(scan),
         "purge": jax.jit(purge),
         "kth": jax.jit(lambda d_g: d_g[:, -1]),
@@ -386,6 +590,18 @@ class ShardedQueryEngine(EngineCore):
         self.shard_rows = self.routing.shard_rows
         self._g_of_v = self.routing.padded_rows(np.arange(self.n, dtype=np.int64))
         self._make_device_fns(k)
+        # replica serving state (inactive until set_replication installs a
+        # plan): the serving mesh spans primaries + extra replica devices
+        self.replica_policy = "round_robin"
+        self.replica_fault_hook = None  # chaos seam: fn(engine) or None
+        self._serving_mesh: Mesh | None = None
+        self._serving_fns: dict | None = None
+        self._cons_bufs: dict = {}  # pooled host staging buffers (see _consolidate)
+        self._rstats = {
+            "replica_queries": 0,
+            "replica_batches": 0,
+            "replica_errors": 0,
+        }
 
     # ------------------------------------------------------------------
     # construction / conversion
@@ -441,6 +657,7 @@ class ShardedQueryEngine(EngineCore):
         shards: int | None = None,
         use_pallas: bool = False,
         journal=None,
+        replication: dict[int, int] | None = None,
     ) -> "ShardedQueryEngine":
         """Load a ``save`` artifact into a sharded engine — reshard-on-load.
 
@@ -449,6 +666,14 @@ class ShardedQueryEngine(EngineCore):
         across the saved count capped at the visible device count (an
         artifact saved at 8 shards still loads on a 2-device host), and an
         explicit ``shards=M`` overrides it entirely.
+
+        A saved replication plan (shard -> extra replicas) is re-applied
+        when it still describes this engine — same shard count as the
+        writer and enough free devices to seat every replica — and dropped
+        otherwise (the plan is keyed by shard id, so a reshard invalidates
+        it; replicas are a serving concern, not an artifact one). Pass
+        ``replication={...}`` to install a different plan, or ``{}`` to
+        force-drop the saved one.
 
         ``journal`` attaches + replays a write-ahead journal exactly as in
         ``QueryEngine.load`` — the journal records logical object updates,
@@ -462,6 +687,21 @@ class ShardedQueryEngine(EngineCore):
             ids, dists.astype(np.float32), k, objects,
             bn=bn, shards=shards, use_pallas=use_pallas,
         )
+        plan = replication
+        if plan is None:
+            saved = {
+                int(s): int(r)
+                for s, r in (meta.get("replication") or {}).items()
+            }
+            extras = sum(saved.values())
+            if (
+                saved
+                and shards == int(meta.get("shards", 1))
+                and shards + extras <= len(jax.devices())
+            ):
+                plan = saved
+        if plan:
+            eng.set_replication(plan)
         if journal is not None:
             eng.attach_journal(journal)
         return eng
@@ -492,12 +732,18 @@ class ShardedQueryEngine(EngineCore):
         self._ids_g, self._d_g = snap
 
     def _publish_epoch(self, epoch: int) -> None:
-        # one atomic step: the EpochStore swap and the routing table's
-        # epoch -> buffers entry move together, so the indirection can
-        # never resolve an epoch to another epoch's shards
+        # one atomic step: the EpochStore swap, the routing table's
+        # epoch -> buffers entry AND the epoch's replica buffers (when a
+        # plan is active) move together, so the indirection can never
+        # resolve an epoch to another epoch's shards — and every replica
+        # of a shard serves exactly the epoch the primary serves
         super()._publish_epoch(epoch)
+        buffers = self._epochs.snapshot(epoch)
+        serving = (
+            self._build_serving(*buffers) if self._serving_mesh is not None else None
+        )
         self.routing.publish(
-            epoch, self._epochs.snapshot(epoch), keep=self._epochs.epochs()
+            epoch, buffers, keep=self._epochs.epochs(), serving=serving
         )
 
     def _trim_epoch_stats(self) -> None:
@@ -507,6 +753,80 @@ class ShardedQueryEngine(EngineCore):
     def _table_bytes(self) -> int:
         # the sharded layout pays for the padded rows, count them honestly
         return self.num_shards * (self.shard_rows + 1) * self.k * 8
+
+    # ------------------------------------------------------------------
+    # replicated hot shards: a shard -> extra-replica plan expands the
+    # shard set into a slot set served on a wider mesh (primaries on the
+    # engine's own devices, replicas on the next free ones). Flushes keep
+    # writing only the primary layout; each _publish_epoch re-copies the
+    # replicated shards' fresh local blocks onto their replica devices, so
+    # replicas are read-only copies refreshed at the swap.
+    # ------------------------------------------------------------------
+
+    def set_replication(
+        self, plan: dict[int, int] | None, *, policy: str | None = None
+    ) -> None:
+        """Install (or with ``None``/``{}`` drop) a shard -> extra-replica
+        plan and immediately re-publish every retained epoch's replica
+        buffers, so pinned reads on any retained epoch can be served from
+        replicas too. Raises ``ValueError`` when the visible device pool
+        cannot seat ``num_shards + total extras`` slots."""
+        if policy is not None:
+            if policy not in ("round_robin", "least_outstanding"):
+                raise ValueError(f"unknown replica routing policy {policy!r}")
+            self.replica_policy = policy
+        plan = {int(s): int(r) for s, r in (plan or {}).items() if int(r) > 0}
+        if not plan:
+            self.routing.set_replication({})
+            self._serving_mesh = None
+            self._serving_fns = None
+            for e in self.routing.epochs():
+                self.routing.publish(e, self.routing.buffers(e), serving=None)
+            return
+        slot_shard = self.routing.set_replication(plan)
+        primaries = list(self.mesh.devices.flat)
+        extra_pool = [d for d in jax.devices() if d not in primaries]
+        extras_needed = len(slot_shard) - self.num_shards
+        if extras_needed > len(extra_pool):
+            self.routing.set_replication({})
+            raise ValueError(
+                f"replication plan needs {extras_needed} extra devices beyond "
+                f"the {self.num_shards} shard primaries, but only "
+                f"{len(extra_pool)} are free (set "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count)"
+            )
+        self._serving_mesh = Mesh(
+            np.array(primaries + extra_pool[:extras_needed]), ("shard",)
+        )
+        self._serving_fns = _device_fns(self._serving_mesh, self.shard_rows + 1, self.k)
+        for e in self.routing.epochs():
+            buffers = self.routing.buffers(e)
+            self.routing.publish(e, buffers, serving=self._build_serving(*buffers))
+
+    def _build_serving(self, ids_g, d_g) -> tuple[jax.Array, jax.Array]:
+        """Expand primary-layout global tables into the serving (slot)
+        layout: each slot's device gets its logical shard's local (R+1, k)
+        block — a no-op reuse for primary slots (the buffer already lives
+        there) and one explicit ``jax.device_put`` per replica slot."""
+        mesh = self._serving_mesh
+        block = self.shard_rows + 1
+        slot_shard = self.routing.slot_shard
+        spec = NamedSharding(mesh, P("shard", None))
+        devs = list(mesh.devices.flat)
+        out = []
+        for arr in (ids_g, d_g):
+            local = {}
+            for sh in arr.addressable_shards:
+                local[(sh.index[0].start or 0) // block] = sh.data
+            bufs = [
+                jax.device_put(local[int(s)], d) for s, d in zip(slot_shard, devs)
+            ]
+            out.append(
+                jax.make_array_from_single_device_arrays(
+                    (len(slot_shard) * block, arr.shape[1]), spec, bufs
+                )
+            )
+        return tuple(out)
 
     # ------------------------------------------------------------------
     # device programs (cached per (device set, block, k) at module level —
@@ -547,13 +867,16 @@ class ShardedQueryEngine(EngineCore):
     # ------------------------------------------------------------------
 
     def _group_by_owner(
-        self, owner: np.ndarray
+        self, owner: np.ndarray, groups: int | None = None
     ) -> tuple[np.ndarray, np.ndarray, np.ndarray, int]:
-        """Stable group-by-owner-shard used by both query routing and the
+        """Stable group-by-owner used by query routing (``groups`` = shard
+        count, or slot count on the replicated serving path) and the
         flush's row batching: (input order permutation, owner per sorted
         entry, slot within the owner's group, max group size)."""
+        if groups is None:
+            groups = self.num_shards
         order = np.argsort(owner, kind="stable")
-        counts = np.bincount(owner, minlength=self.num_shards)
+        counts = np.bincount(owner, minlength=groups)
         starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
         o_sorted = owner[order]
         slot = np.arange(len(owner)) - starts[o_sorted]
@@ -584,7 +907,96 @@ class ShardedQueryEngine(EngineCore):
         fidx[order] = o_sorted * bmax + slot
         return qglob, fidx
 
-    def _gather_batch(self, us: np.ndarray, ks: jax.Array, snap: tuple):
+    def _route_slots(self, vs: np.ndarray) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Replicated-path analogue of ``_route``: group vertices by
+        serving *slot* (shard or replica, per the routing policy) into the
+        ((V, Bmax) serving-layout padded rows, (B,) flat result positions,
+        (B,) chosen slots) triple. Same wraparound/clamp semantics as
+        ``_route``, and every slot serves byte-identical buffers — so the
+        results stay bit-identical to the unreplicated gather no matter
+        which replica each query lands on."""
+        vs = np.asarray(vs, np.int64)
+        vs = np.where(vs < 0, vs + self.n + 1, vs)  # jnp negative wraparound
+        vs = np.clip(vs, 0, self.n)                 # then the XLA gather clamp
+        oob = vs >= self.n
+        own, slots = self.routing.route(vs, policy=self.replica_policy)
+        nslots = self.routing.num_slots
+        order, s_sorted, pos, bmax = self._group_by_owner(slots, groups=nslots)
+        bmax = _pow2_pad(bmax, lo=8)
+        rows = self.routing.serving_rows(vs, own, slots)
+        qglob = np.full((nslots, bmax), -1, np.int32)
+        qglob[s_sorted, pos] = np.where(oob[order], -1, rows[order])
+        fidx = np.empty(len(vs), dtype=np.int64)
+        fidx[order] = s_sorted * bmax + pos
+        return qglob, fidx, slots
+
+    def _consolidate(self, x: jax.Array) -> np.ndarray:
+        """Sharded tile -> pooled host buffer (one memcpy per shard).
+
+        ``np.asarray`` on a multi-MB tile allocates a fresh mmap'd buffer
+        every call, and the page-fault churn is bimodal across processes —
+        enough to flap the exp16 floor. Copying through a reused staging
+        buffer (zero-copy dlpack view of each shard, two rotating buffers
+        per shape so the bytes a just-dispatched ``device_put`` reads are
+        never overwritten by the next batch) keeps the copy on the warm
+        memcpy path."""
+        key = (x.shape, str(x.dtype))
+        pair = self._cons_bufs.get(key)
+        if pair is None:
+            pair = self._cons_bufs.setdefault(
+                key, [np.empty(x.shape, x.dtype), np.empty(x.shape, x.dtype), 0]
+            )
+        buf = pair[pair[2]]
+        pair[2] ^= 1
+        for j, sh in enumerate(x.addressable_shards):
+            np.copyto(buf[j], np.from_dlpack(sh.data)[0])
+        return buf
+
+    def _gather_replicated(self, us: np.ndarray, ks: jax.Array, serving: tuple):
+        """Two-phase gather over the serving (slot) layout: the shard_map
+        tile program on the wider replica mesh (hot shard's queries fanned
+        out across its slot set), then one explicit consolidation onto the
+        lead device where the batch-order epilogue runs exactly once —
+        rather than replicated per slot, which would grow the epilogue cost
+        with every replica added."""
+        if self.replica_fault_hook is not None:
+            self.replica_fault_hook(self)  # chaos seam: simulated replica loss
+        s_ids, s_d = serving
+        qglob, fidx, slots = self._route_slots(us)
+        mesh = self._serving_mesh
+        lead = SingleDeviceSharding(mesh.devices.flat[0])
+        self.routing.record_dispatch(slots)
+        try:
+            gi, gd = self._serving_fns["gather_tile"](
+                s_ids, s_d,
+                jax.device_put(qglob, NamedSharding(mesh, P("shard", None))),
+            )
+            # consolidate through pooled host staging buffers: an explicit
+            # readback + upload both take the plain memcpy path, where the
+            # direct sharded->single-device device_put of a multi-MB tile
+            # lands on a slow generic copy often enough to flap the exp16
+            # floor
+            out = self._serving_fns["gather_epi"](
+                jax.device_put(self._consolidate(gi), lead),
+                jax.device_put(self._consolidate(gd), lead),
+                jax.device_put(fidx, lead), jax.device_put(ks, lead),
+            )
+        finally:
+            self.routing.record_complete(slots)
+        self._rstats["replica_batches"] += 1
+        self._rstats["replica_queries"] += int(np.sum(slots >= self.num_shards))
+        return out
+
+    def _gather_batch(self, us: np.ndarray, ks: jax.Array, snap: tuple, epoch: int):
+        serving = self.routing.serving(epoch)
+        if serving is not None and self._serving_fns is not None:
+            try:
+                return self._gather_replicated(us, ks, serving)
+            except QueryError:
+                raise  # routing misuse, not a replica fault
+            except Exception as e:  # noqa: BLE001 — degrade, don't die
+                self._rstats["replica_errors"] += 1
+                self._rstats["last_replica_error"] = f"{type(e).__name__}: {e}"
         ids_g, d_g = snap
         if self.num_shards == 1:
             # one shard: the global layout IS the scalar (n+1, k) layout and
@@ -828,7 +1240,14 @@ class ShardedQueryEngine(EngineCore):
         )
 
     def _save_meta(self) -> dict:
-        return {"shards": self.num_shards, "shard_rows": self.shard_rows}
+        meta = {"shards": self.num_shards, "shard_rows": self.shard_rows}
+        if self.routing.replication:
+            # the plan is keyed by shard id, so it only transfers to a
+            # reader at the same shard count (load re-applies or drops it)
+            meta["replication"] = {
+                str(s): r for s, r in self.routing.replication.items()
+            }
+        return meta
 
     def _extra_stats(self) -> dict:
         padded = self.num_shards * (self.shard_rows + 1)
@@ -837,4 +1256,8 @@ class ShardedQueryEngine(EngineCore):
             "shard_rows": self.shard_rows,
             "padded_rows": padded,
             "row_padding_overhead": round((padded - self.n) / max(self.n, 1), 4),
+            "replication": dict(self.routing.replication),
+            "replica_slots": self.routing.num_slots,
+            "replica_policy": self.replica_policy,
+            **self._rstats,
         }

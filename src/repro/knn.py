@@ -125,6 +125,7 @@ def build_sharded_engine(
     *,
     shards: int | None = None,
     use_pallas: bool = False,
+    replication: dict[int, int] | None = None,
 ) -> ShardedQueryEngine:
     """Road network -> vertex-sharded multi-device serving engine.
 
@@ -132,9 +133,17 @@ def build_sharded_engine(
     ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before process
     start). The sharded engine serves the exact same results as the scalar
     one; see ``repro.core.sharded`` for the partitioned layout.
+
+    ``replication={shard: R}`` replicates a hot shard's buffers onto R
+    extra devices beyond the shard primaries and fans its queries out
+    across the replica set (``engine.set_replication`` after the fact does
+    the same) — same results, more query throughput under skew.
     """
     bn = graph if isinstance(graph, BNGraph) else build_bngraph(graph)
-    return ShardedQueryEngine.build(bn, objects, k, shards=shards, use_pallas=use_pallas)
+    eng = ShardedQueryEngine.build(bn, objects, k, shards=shards, use_pallas=use_pallas)
+    if replication:
+        eng.set_replication(replication)
+    return eng
 
 
 def load_engine(
@@ -144,13 +153,16 @@ def load_engine(
     shards: int | None = None,
     use_pallas: bool = False,
     journal=None,
+    replication: dict[int, int] | None = None,
 ) -> QueryEngine | ShardedQueryEngine:
     """Load a ``QueryEngine.save`` / ``knn_build --out`` artifact.
 
     ``shards=N`` loads into a ``ShardedQueryEngine`` at N shards regardless
     of how many shards wrote the artifact (reshard-on-load: the artifact
     stores the logical vertex-order tables). ``shards=None`` keeps the
-    scalar engine.
+    scalar engine. A replication plan saved in the artifact is re-applied
+    when compatible (same shard count, enough devices) and dropped
+    otherwise; ``replication={...}`` overrides it, ``{}`` force-drops it.
 
     ``journal`` (a path or ``UpdateJournal``) attaches the write-ahead
     journal and replays whatever a killed process left in it — committed
@@ -160,7 +172,8 @@ def load_engine(
     """
     if shards is not None:
         return ShardedQueryEngine.load(
-            path, bn=bn, shards=shards, use_pallas=use_pallas, journal=journal
+            path, bn=bn, shards=shards, use_pallas=use_pallas, journal=journal,
+            replication=replication,
         )
     return QueryEngine.load(path, bn=bn, use_pallas=use_pallas, journal=journal)
 

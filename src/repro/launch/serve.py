@@ -37,12 +37,28 @@ across N devices. On CPU, force the device count first:
 query stream AND the staged-update stream (it threads into
 ``knn.stage_random_updates`` / ``FleetSim``), so two runs with the same seed
 serve the identical op sequence; the default seed is 0.
+
+``--replicate SHARD:R`` (sharded engine only) replicates one shard's epoch
+buffers onto R extra devices and fans its queries across the replica set —
+the answer to skewed traffic where one owner device is the ceiling.
+``--replicate auto:R`` instead watches a sliding per-shard query histogram
+and replicates whichever shard is hottest once the warmup rounds have
+seen enough traffic. ``--hot-shard S --hot-frac F`` skews the synthetic
+query stream so F of each batch lands in shard S's vertex range (the
+zipf-city downtown); a replica failure mid-batch degrades that batch to
+the primary path and counts ``replica_errors`` in the engine stats
+instead of failing the run:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python -m repro.launch.serve --arch knn-index --smoke \
+      --shards 4 --hot-shard 0 --hot-frac 0.8 --replicate auto:3
 """
 from __future__ import annotations
 
 import argparse
 import json
 import time
+from collections import deque
 
 import jax
 import jax.numpy as jnp
@@ -154,6 +170,28 @@ def serve_knn_fleet(args, g, bn, k: int, batch: int, t_bn: float) -> dict:
     return stats
 
 
+def _parse_replicate(spec: str) -> tuple:
+    """``SHARD:R`` -> (shard, R); ``auto:R`` -> ("auto", R)."""
+    try:
+        shard_s, _, r_s = spec.partition(":")
+        r = int(r_s)
+        if r < 1:
+            raise ValueError
+        return ("auto", r) if shard_s == "auto" else (int(shard_s), r)
+    except ValueError:
+        raise SystemExit(f"--replicate wants SHARD:R or auto:R (R >= 1), got {spec!r}")
+
+
+def _draw_queries(rng, n: int, batch: int, hot_range, hot_frac: float) -> np.ndarray:
+    """Uniform query batch, with ``hot_frac`` of it redirected into
+    ``hot_range`` (the skewed-city traffic model exp16 benchmarks)."""
+    us = rng.integers(0, n, size=batch)
+    if hot_frac > 0 and hot_range is not None:
+        m = rng.random(batch) < hot_frac
+        us[m] = rng.integers(hot_range[0], hot_range[1], size=int(m.sum()))
+    return us
+
+
 def _arm_injected_flush_failure(engine) -> None:
     """One-shot fault: the next flush dies just before its epoch swap (the
     worst-case point — all the work done, nothing published). Exercises the
@@ -207,13 +245,36 @@ def serve_knn(args) -> dict:
         engine = _build_knn_engine(args, bn, objects, k)
     t_build = time.perf_counter() - t0
 
+    replicate = _parse_replicate(args.replicate) if args.replicate else None
+    if (replicate or args.hot_frac) and not args.shards:
+        raise SystemExit(
+            "--replicate / --hot-frac need the sharded engine (--shards N)"
+        )
+    replicated_shard = None
+    if replicate and replicate[0] != "auto":
+        engine.set_replication({replicate[0]: replicate[1]})
+        replicated_shard = replicate[0]
+    hot_range = None
+    if args.shards and args.hot_frac:
+        # the hot shard's vertex range, read from the routing table
+        rt = engine.routing
+        hot_range = (
+            args.hot_shard * rt.shard_rows,
+            min(g.n, (args.hot_shard + 1) * rt.shard_rows),
+        )
+    # sliding per-shard query histogram for --replicate auto: the last W
+    # rounds of owner counts decide which shard is hot
+    hist: deque = deque(maxlen=16)
+
     rng = np.random.default_rng(args.seed + 1)
     mset = set(engine.objects.tolist())
     n_upd_round = int(round(batch * args.update_frac))
     rounds = max(1, args.ops // (batch + n_upd_round))
 
     # warmup: compile the gather once outside the timed loop
-    jax.block_until_ready(engine.query_batch(rng.integers(0, g.n, size=batch))[0])
+    jax.block_until_ready(
+        engine.query_batch(_draw_queries(rng, g.n, batch, hot_range, args.hot_frac))[0]
+    )
 
     # A failed flush (device error, corrupted batch, injected fault) must
     # not kill serving: the engine rolls back to the last good epoch with
@@ -225,12 +286,19 @@ def serve_knn(args) -> dict:
     errors = 0
     last_error = None
     for rnd in range(rounds):
-        us = rng.integers(0, g.n, size=batch)
+        us = _draw_queries(rng, g.n, batch, hot_range, args.hot_frac)
         t0 = time.perf_counter()
         ids, dists = engine.query_batch(us)
         jax.block_until_ready(ids)
         t_query += time.perf_counter() - t0
         queries += batch
+
+        if replicate and replicate[0] == "auto" and replicated_shard is None:
+            hist.append(np.bincount(engine.routing.owner(us), minlength=args.shards))
+            if rnd + 1 >= 3:  # enough warmup traffic to trust the histogram
+                hot = int(np.argmax(np.sum(hist, axis=0)))
+                engine.set_replication({hot: replicate[1]})
+                replicated_shard = hot
 
         if n_upd_round:
             t0 = time.perf_counter()
@@ -263,6 +331,9 @@ def serve_knn(args) -> dict:
         "updates": updates,
         "errors": errors,
         "last_error": last_error,
+        "replicate": args.replicate,
+        "replicated_shard": replicated_shard,
+        "hot_frac": args.hot_frac,
         "queries_per_s": round(queries / max(t_query, 1e-9), 1),
         "updates_per_s": round(updates / max(t_update, 1e-9), 1) if updates else 0.0,
         "ops_per_s": round((queries + updates) / max(wall, 1e-9), 1),
@@ -317,6 +388,18 @@ def main():
                          "with this many shards (0 = scalar engine); needs "
                          ">= N visible devices, e.g. "
                          "XLA_FLAGS=--xla_force_host_platform_device_count=N")
+    ap.add_argument("--replicate", default=None, metavar="SHARD:R",
+                    help="knn sharded: replicate shard SHARD onto R extra "
+                         "devices and fan its queries across the replica "
+                         "set; 'auto:R' picks the hottest shard from a "
+                         "sliding query histogram after a short warmup")
+    ap.add_argument("--hot-shard", type=int, default=0,
+                    help="knn sharded: which shard --hot-frac concentrates "
+                         "queries into (default 0)")
+    ap.add_argument("--hot-frac", type=float, default=0.0,
+                    help="knn sharded: fraction of each query batch drawn "
+                         "from the hot shard's vertex range (skewed-city "
+                         "traffic; 0 = uniform)")
     ap.add_argument("--use-pallas", action="store_true")
     args = ap.parse_args()
 

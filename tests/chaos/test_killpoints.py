@@ -174,3 +174,37 @@ def test_failed_flush_rolls_back_and_is_retryable(kind):
     assert eng.epoch == epoch0 + 1
     fresh = knn_index_cons_plus(bn, np.array(sorted(mset)), k)
     assert knn.indices_equivalent(fresh, eng.to_index())
+
+
+@pytest.mark.parametrize("kind", ENGINES)
+@pytest.mark.parametrize("partial", [0, 1, 7])
+def test_kill_at_journal_creation_recovers_fresh(kind, partial, tmp_path):
+    """The kill site BEFORE every other one: between the journal file's
+    creation and its magic fsync. The file on disk is 0-7 bytes of partial
+    magic; no record — hence no acknowledged op — can exist behind it, so
+    reboot must adopt it as a fresh journal and serve normally, not refuse
+    to open. A FULL-length wrong magic is a different animal (someone
+    else's file) and still raises."""
+    g, bn, objects, k = _setup()
+    art, wal = str(tmp_path / "idx.npz"), str(tmp_path / "wal.bin")
+    eng = _build(kind, bn, objects, k)
+    eng.save(art)
+    with open(wal, "wb") as f:  # the kill left a torn magic behind
+        f.write(b"RKNNWAL1"[:partial])
+
+    rec = _load(kind, art, bn, wal)
+    mset = set(int(o) for o in objects)
+    _stage_mix(rec, mset, seed=4)
+    rec.flush_updates()
+
+    rec2 = _load(kind, art, bn, wal)  # the recovered journal replays clean
+    assert rec2.epoch == rec.epoch
+    ri, rd = _tables(rec)
+    qi, qd = _tables(rec2)
+    assert np.array_equal(ri, qi) and np.array_equal(rd, qd)
+
+    bad = str(tmp_path / "notmine.bin")
+    with open(bad, "wb") as f:
+        f.write(b"SQLITEv3")  # full magic length, wrong bytes
+    with pytest.raises(knn.JournalError):
+        knn.UpdateJournal(bad)

@@ -127,6 +127,28 @@ def test_journal_torn_tail_truncated_and_recovered(built, tmp_path):
     assert np.array_equal(ri.dists, ti.dists)
 
 
+def test_journal_second_replay_reports_no_drops(built, tmp_path):
+    """``dropped_bytes`` describes one replay, not the journal's history:
+    the first replay truncates the torn tail off and reports it; a second
+    replay of the now-clean file returns the same records and 0 — a
+    monitoring loop polling the counter never double-counts a tail."""
+    g, bn, objects, _, art = built
+    wal = str(tmp_path / "wal.bin")
+    eng = knn.load_engine(art, bn=bn, journal=wal)
+    mset = set(int(o) for o in objects)
+    knn.stage_random_updates(eng, mset, rng=8, count=3)
+    with open(wal, "ab") as f:
+        f.write(b"\x10\x00\x00\x00\xde\xad\xbe\xefshort")
+
+    with knn.UpdateJournal(wal) as j:
+        first = j.replay()
+        assert j.dropped_bytes > 0
+        assert [r[0] for r in first].count("commit") == 0 and len(first) == 3
+        second = j.replay()
+        assert second == first
+        assert j.dropped_bytes == 0
+
+
 def test_journal_bad_magic_raises(tmp_path):
     p = str(tmp_path / "notawal.bin")
     with open(p, "wb") as f:

@@ -1,0 +1,238 @@
+"""Replicated hot shards: the shard->replicas fan-out behind the routing table.
+
+The replica contract is the sharded engine's contract one level up: a
+replicated engine serves BIT-IDENTICAL results to its unreplicated self (and
+so to the scalar engine), no matter which replica slot each query lands on,
+which policy chose it, which retained epoch the read pins, or whether a
+replica died mid-batch and the engine degraded to the primary path. Most
+cases need devices beyond the shard primaries, so the full matrix runs in the
+multi-device CI job (8 forced host devices) — which fails if this module is
+skipped there (see ci.yml's junit coverage gate).
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro import knn
+from repro.core.reference import knn_index_cons_plus
+from repro.core.sharded import ShardRoutingTable, ShardedQueryEngine
+from repro.graph.generators import pick_objects, road_network
+
+DEVICES = len(jax.devices())
+# smallest real fan-out: 2 shards + 1 extra replica device
+NEEDS_POOL = pytest.mark.skipif(
+    DEVICES < 3, reason="replica fan-out needs devices beyond the shard primaries"
+)
+
+
+def _setup(grid=12, mu=0.15, k=6, seed=0, shards=2):
+    g = road_network(grid, grid, seed=seed)
+    objects = pick_objects(g.n, mu, seed=seed)
+    bn = knn.build_bngraph(g)
+    idx = knn_index_cons_plus(bn, objects, k)
+    plain = knn.QueryEngine.from_index(idx, objects, bn=bn)
+    sharded = ShardedQueryEngine.from_index(idx, objects, bn=bn, shards=shards)
+    return g, objects, bn, plain, sharded
+
+
+def _plan(shards: int) -> dict[int, int]:
+    """Hot shard 0 replicated over every free device (capped at x3)."""
+    return {0: min(3, DEVICES - shards)}
+
+
+def _boundary_traffic(g, shard_rows, rng):
+    return np.concatenate(
+        [np.arange(0, g.n, shard_rows), np.arange(shard_rows - 1, g.n, shard_rows),
+         rng.integers(0, g.n, 128), [-3, -1, g.n, g.n + 7]]
+    ).astype(np.int32)
+
+
+@NEEDS_POOL
+@pytest.mark.parametrize("policy", ["round_robin", "least_outstanding"])
+def test_replicated_serving_bit_identical(policy):
+    """Boundary-heavy traffic (incl. out-of-range ids and mixed ks) through
+    the replica fan-out == the unreplicated engine == the scalar engine,
+    under both routing policies."""
+    shards = min(4, DEVICES - 1)
+    g, objects, bn, plain, sharded = _setup(shards=shards)
+    sharded.set_replication(_plan(shards), policy=policy)
+    rng = np.random.default_rng(1)
+    for us in (_boundary_traffic(g, sharded.shard_rows, rng),
+               rng.integers(0, g.n, size=257).astype(np.int32)):
+        pi, pd = plain.query_batch(us)
+        si, sd = sharded.query_batch(us)
+        assert np.array_equal(np.asarray(pi), np.asarray(si))
+        assert np.array_equal(np.asarray(pd), np.asarray(sd))
+        ks = rng.integers(1, plain.k + 1, size=len(us)).astype(np.int32)
+        pi, pd = plain.query_batch(us, ks)
+        si, sd = sharded.query_batch(us, ks)
+        assert np.array_equal(np.asarray(pi), np.asarray(si))
+        assert np.array_equal(np.asarray(pd), np.asarray(sd))
+    assert sharded.stats()["replica_batches"] > 0
+    assert sharded.stats()["replica_errors"] == 0
+
+
+@NEEDS_POOL
+def test_replica_buffers_byte_identical_every_epoch():
+    """Every retained epoch's replica slots hold byte-for-byte the primary
+    shard's block — publish puts replicas and primaries through the same
+    atomic epoch step, so a replica can never serve a different epoch."""
+    shards = min(4, DEVICES - 1)
+    g, objects, bn, plain, sharded = _setup(shards=shards)
+    sharded.keep_epochs = 3
+    sharded.set_replication(_plan(shards))
+    mset = set(int(o) for o in objects)
+    for seed in (3, 4):
+        knn.stage_random_updates(sharded, mset, rng=seed, count=4)
+        sharded.flush_updates()
+    epochs = sharded.retained_epochs()
+    assert len(epochs) >= 2
+    for epoch in epochs:
+        primaries = {}
+        replicas = []
+        for slot, (shard, _dev, ids, dists) in sharded.routing.replica_buffers(epoch).items():
+            if slot < sharded.num_shards:
+                primaries[shard] = (ids, dists)
+            else:
+                replicas.append((shard, ids, dists))
+        assert replicas, "plan installed but no replica slots published"
+        for shard, ids, dists in replicas:
+            pi, pd = primaries[shard]
+            assert np.array_equal(np.asarray(ids), np.asarray(pi))
+            assert np.array_equal(np.asarray(dists), np.asarray(pd))
+
+
+@NEEDS_POOL
+def test_pinned_epoch_replica_reads_after_flush():
+    """A query pinned to an old epoch reads the old replica buffers even
+    after later flushes republished the serving layout."""
+    shards = min(4, DEVICES - 1)
+    g, objects, bn, plain, sharded = _setup(shards=shards)
+    sharded.keep_epochs = 2
+    sharded.set_replication(_plan(shards))
+    rng = np.random.default_rng(2)
+    us = _boundary_traffic(g, sharded.shard_rows, rng)
+    e0 = sharded.epoch
+    i0, d0 = sharded.query_batch(us)
+    mset = set(int(o) for o in objects)
+    knn.stage_random_updates(sharded, mset, rng=7, count=6)
+    sharded.flush_updates()
+    i_pin, d_pin = sharded.query_batch(us, epoch=e0)
+    assert np.array_equal(np.asarray(i_pin), np.asarray(i0))
+    assert np.array_equal(np.asarray(d_pin), np.asarray(d0))
+    i1, _ = sharded.query_batch(us)  # the new epoch serves updated tables
+    assert not np.array_equal(np.asarray(i1), np.asarray(i0))
+
+
+@NEEDS_POOL
+def test_replica_failure_degrades_to_primary_exactly():
+    """A replica fault mid-batch falls back to the primary-only path with
+    bit-identical results and one counted error; the next batch fans out
+    through the replicas again."""
+    shards = min(4, DEVICES - 1)
+    g, objects, bn, plain, sharded = _setup(shards=shards)
+    sharded.set_replication(_plan(shards))
+    rng = np.random.default_rng(3)
+    us = _boundary_traffic(g, sharded.shard_rows, rng)
+
+    def boom(engine):
+        engine.replica_fault_hook = None  # fail exactly one batch
+        raise RuntimeError("simulated replica loss")
+
+    sharded.replica_fault_hook = boom
+    si, sd = sharded.query_batch(us)
+    pi, pd = plain.query_batch(us)
+    assert np.array_equal(np.asarray(pi), np.asarray(si))
+    assert np.array_equal(np.asarray(pd), np.asarray(sd))
+    stats = sharded.stats()
+    assert stats["replica_errors"] == 1
+    assert "simulated replica loss" in sharded._rstats["last_replica_error"]
+
+    before = stats["replica_batches"]
+    si2, _ = sharded.query_batch(us)
+    assert np.array_equal(np.asarray(pi), np.asarray(si2))
+    assert sharded.stats()["replica_batches"] == before + 1  # fan-out restored
+
+
+@NEEDS_POOL
+def test_reshard_on_load_replication_plans(tmp_path):
+    """Save/load across replica plans: a saved plan re-applies at the same
+    shard count, is dropped by a reshard (plans are keyed by shard id), is
+    force-dropped by ``replication={}``, and is overridden by a new plan."""
+    shards = min(4, DEVICES - 1)
+    g, objects, bn, plain, sharded = _setup(shards=shards)
+    plan = _plan(shards)
+    sharded.set_replication(plan)
+    path = str(tmp_path / "rep.npz")
+    sharded.save(path)
+    rng = np.random.default_rng(4)
+    us = rng.integers(0, g.n, size=129).astype(np.int32)
+    want_i, want_d = plain.query_batch(us)
+
+    same = ShardedQueryEngine.load(path, bn=bn, shards=shards)
+    assert same.routing.replication == plan
+    assert same.stats()["replica_batches"] == 0
+    i, d = same.query_batch(us)
+    assert np.array_equal(np.asarray(i), np.asarray(want_i))
+    assert np.array_equal(np.asarray(d), np.asarray(want_d))
+    assert same.stats()["replica_batches"] == 1  # served through the fan-out
+
+    other = max(1, shards // 2)
+    resharded = ShardedQueryEngine.load(path, bn=bn, shards=other)
+    assert resharded.routing.replication == {}  # reshard invalidates the plan
+    i, _ = resharded.query_batch(us)
+    assert np.array_equal(np.asarray(i), np.asarray(want_i))
+
+    dropped = ShardedQueryEngine.load(path, bn=bn, shards=shards, replication={})
+    assert dropped.routing.replication == {}
+
+    override = {0: 1}
+    overridden = ShardedQueryEngine.load(
+        path, bn=bn, shards=shards, replication=override
+    )
+    assert overridden.routing.replication == override
+    i, _ = overridden.query_batch(us)
+    assert np.array_equal(np.asarray(i), np.asarray(want_i))
+
+
+def test_routing_table_owner_validates_range():
+    """``owner`` raises a typed QueryError for ids outside [0, n] instead of
+    silently clipping them into the last shard."""
+    rt = ShardRoutingTable(100, 4)
+    own = rt.owner(np.array([0, 99, 100]))  # n itself is the dummy-row address
+    assert own.shape == (3,)
+    with pytest.raises(knn.QueryError):
+        rt.owner(np.array([-1]))
+    with pytest.raises(knn.QueryError):
+        rt.owner(np.array([101]))
+
+
+def test_routing_table_policies():
+    """Slot assignment spreads a hot shard's queries across its replica set
+    under both policies; unknown policies and bad plans raise typed errors."""
+    rt = ShardRoutingTable(100, 4)
+    rt.set_replication({1: 2})
+    assert rt.num_slots == 6
+    assert list(rt.slot_shard) == [0, 1, 2, 3, 1, 1]
+
+    vs = np.full(30, 30, dtype=np.int64)  # 30 queries, all owned by shard 1
+    own, slots = rt.route(vs, policy="round_robin")
+    assert np.all(own == 1)
+    counts = {s: int(np.sum(slots == s)) for s in (1, 4, 5)}
+    assert sum(counts.values()) == 30
+    assert all(c == 10 for c in counts.values())  # even round-robin split
+
+    rt.outstanding[:] = 0
+    rt.outstanding[4] = 25  # slot 4 is backed up: water-fill avoids it
+    own, slots = rt.route(vs, policy="least_outstanding")
+    assert np.all(np.isin(slots, (1, 4, 5)))
+    assert int(np.sum(slots == 4)) < int(np.sum(slots == 1))
+
+    with pytest.raises(knn.QueryError):
+        rt.route(vs, policy="fastest_guess")
+    with pytest.raises(ValueError):
+        rt.set_replication({9: 1})  # unknown shard id
+    with pytest.raises(ValueError):
+        rt.set_replication({0: -1})  # negative replica counts are nonsense
+    assert list(rt.set_replication({0: 0})) == [0, 1, 2, 3]  # zero extras == no plan
