@@ -31,6 +31,12 @@ experiment's acceptance floor:
   additionally demands the full 4-shard x3-replica layout ran and holds
   the replicated path >= 1.5x the unreplicated one (measured ~1.6-1.8x
   steady state).
+* exp17 — traffic-balanced uneven shard ranges: equal-width vs
+  repartitioned queries/s on the same zipf mix with ZERO replicas,
+  bit-identical results across the repartition and to the scalar oracle,
+  a valid boundary vector (starts at 0, strictly increasing, one per
+  shard) and an improved balance ratio. ``--min-devices 8`` holds the
+  uneven layout >= 1.3x equal-width queries/s.
 """
 from __future__ import annotations
 
@@ -43,6 +49,7 @@ EXP13_PARITY_FLOOR = 0.8
 EXP14_DEVICE_FLOOR = 1.3
 EXP15_P99_CEILING = 5.0
 EXP16_SPEEDUP_FLOOR = 1.5
+EXP17_SPEEDUP_FLOOR = 1.3
 
 
 def _need(meta: dict, key: str):
@@ -283,12 +290,69 @@ def check_exp16(data: dict, min_devices: int | None) -> str:
             f"0 errors)")
 
 
+def check_exp17(data: dict, min_devices: int | None) -> str:
+    meta = data["meta"]
+    for key in ("exp17.grid", "exp17.k", "exp17.query_batch_size",
+                "exp17.devices", "exp17.shards", "exp17.zipf_theta",
+                "exp17.replicas", "exp17.boundaries", "exp17.balance.equal",
+                "exp17.balance.uneven", "exp17.identical_results",
+                "exp17.qps.equal", "exp17.qps.uneven", "exp17.speedup",
+                "exp17.engine.repartitions"):
+        _need(meta, key)
+    names = {r["name"] for r in data["rows"]}
+    for name in ("exp17.ranges.equal", "exp17.ranges.uneven"):
+        assert name in names, f"missing row {name}"
+    assert meta["exp17.identical_results"] is True, (
+        "exp17 uneven-range results were not bit-identical to equal-width "
+        "and the scalar oracle"
+    )
+    # the whole point is beating the hot shard WITHOUT replica devices
+    assert meta["exp17.replicas"] == 0, (
+        f"exp17 ran with {meta['exp17.replicas']} replicas — the uneven-"
+        f"range comparison must spend zero extra devices"
+    )
+    shards = meta["exp17.shards"]
+    starts = meta["exp17.boundaries"]
+    assert len(starts) == shards, (
+        f"exp17 boundary vector {starts} does not name {shards} shards"
+    )
+    assert starts[0] == 0 and all(
+        b > a for a, b in zip(starts, starts[1:])
+    ), f"exp17 boundary vector {starts} is not sorted starting at 0"
+    assert meta["exp17.engine.repartitions"] >= 1, (
+        "exp17 never exercised repartition-on-flush"
+    )
+    # the splitter must have actually flattened the traffic skew
+    assert meta["exp17.balance.uneven"] < meta["exp17.balance.equal"], (
+        f"exp17 balance ratio did not improve: equal "
+        f"{meta['exp17.balance.equal']} vs uneven {meta['exp17.balance.uneven']}"
+    )
+    if min_devices and min_devices >= 8:
+        assert meta["exp17.devices"] >= 8, (
+            f"exp17 saw only {meta['exp17.devices']} devices; the "
+            f"multi-device job requires 8 (is XLA_FLAGS/--devices set?)"
+        )
+        assert shards == 4, (
+            f"exp17 ran {shards} shards != the 4-shard acceptance layout"
+        )
+        # acceptance floor: traffic-balanced boundaries must buy real
+        # throughput on the skewed mix with NO extra devices
+        sp = meta["exp17.speedup"]
+        assert sp >= EXP17_SPEEDUP_FLOOR, (
+            f"exp17 uneven-range speedup {sp}x < {EXP17_SPEEDUP_FLOOR}x floor"
+        )
+    return (f"exp17 OK: x{meta['exp17.speedup']} uneven vs equal-width "
+            f"(balance {meta['exp17.balance.equal']} -> "
+            f"{meta['exp17.balance.uneven']}, boundaries {starts}, "
+            f"0 replicas)")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("json_path")
     ap.add_argument("--require", nargs="+", required=True,
                     choices=("exp11", "exp12", "exp13", "exp14", "exp15",
-                             "exp16"))
+                             "exp16", "exp17"))
     ap.add_argument("--min-devices", type=int, default=None,
                     help="exp13: demand the sweep reached this device count")
     ap.add_argument("--exp12-floor", type=float, default=1.2,
@@ -312,8 +376,10 @@ def main() -> None:
             print(check_exp14(data))
         elif exp == "exp15":
             print(check_exp15(data, args.exp15_ceiling))
-        else:
+        elif exp == "exp16":
             print(check_exp16(data, args.min_devices))
+        else:
+            print(check_exp17(data, args.min_devices))
     print(f"schema OK: {args.json_path} ({', '.join(args.require)})",
           file=sys.stderr)
 

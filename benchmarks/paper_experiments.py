@@ -856,6 +856,113 @@ def exp16_hot_shard() -> None:
     meta("exp16.engine.replica_policy", stats.get("replica_policy"))
 
 
+def exp17_uneven_ranges() -> None:
+    """Traffic-balanced uneven shard ranges vs equal-width (ISSUE-9).
+
+    Same zipf-skewed query mix as exp16 (grid=128, k=32, one 32768-query
+    batch, theta=4 so shard 0 of the equal-width layout absorbs ~92% of
+    the traffic) — but ZERO replicas: instead of spending 3 extra devices
+    on copies of the hot shard, the engine repartitions so each shard's
+    vertex RANGE carries ~1/S of the traffic (``propose_starts`` over the
+    per-vertex query histogram, applied by ``repartition`` = staged
+    boundaries + one flush). The equal-width rectangle pads every device's
+    gather to Bmax ~ 0.92*B; balanced boundaries cut Bmax to ~B/S with the
+    same device count. Results are asserted bit-identical across the
+    repartition (and to the scalar single-device oracle) before timing.
+    Floor (check_schema, multi-device CI leg): uneven >= 1.3x equal-width
+    queries/s at 8 visible devices, with ``replicas == 0``.
+    """
+    import jax
+
+    from repro import knn
+    from repro.core.partition import propose_starts
+
+    k, grid, batch, theta = 32, 128, 32768, 4.0
+    g = road_network(grid, grid, seed=0)
+    objects = pick_objects(g.n, 0.05, seed=1)
+    bn = build_bngraph(g)
+    shards = min(4, len(jax.devices()))
+    engine = knn.build_sharded_engine(bn, objects, k, shards=shards)
+    rt = engine.routing
+
+    # the exp16 traffic model: zipf over the EQUAL-WIDTH shard ranges,
+    # uniform within a range (the skew the splitter has to undo)
+    rng = np.random.default_rng(2)
+    w = (1.0 + np.arange(shards)) ** -theta
+    owner = rng.choice(shards, size=batch, p=w / w.sum())
+    lo = np.minimum(owner * rt.shard_rows, g.n - 1)
+    hi = np.minimum((owner + 1) * rt.shard_rows, g.n)
+    us = lo + rng.integers(0, hi - lo)
+
+    def balance() -> float:
+        # max per-shard traffic share x shards: 1.0 = perfectly balanced,
+        # S = everything on one shard
+        counts = np.bincount(engine.routing.owner(us), minlength=engine.num_shards)
+        return float(counts.max() / max(counts.sum(), 1) * engine.num_shards)
+
+    def measure() -> float:
+        # best of 3 windows, compile off-clock (same shape as exp16)
+        jax.block_until_ready(engine.query_batch(us)[0])
+        best = 0.0
+        for _ in range(3):
+            t0 = time.perf_counter()
+            served = 0
+            while time.perf_counter() - t0 < 0.3:
+                ids, _ = engine.query_batch(us)
+                jax.block_until_ready(ids)
+                served += batch
+            best = max(best, served / (time.perf_counter() - t0))
+        return best
+
+    bal_equal = balance()
+    ids0, d0 = engine.query_batch(us)
+    qps_equal = measure()
+
+    starts = propose_starts(np.bincount(us, minlength=g.n), shards)
+    engine.repartition(starts)
+    bal_uneven = balance()
+
+    ids1, d1 = engine.query_batch(us)
+    identical = bool(
+        np.array_equal(np.asarray(ids0), np.asarray(ids1))
+        and np.array_equal(np.asarray(d0), np.asarray(d1))
+    )
+    assert identical, "repartitioned results diverged from equal-width"
+    oracle = knn.QueryEngine.from_index(engine.to_index(), engine.objects, bn=bn)
+    oi, od = oracle.query_batch(us)
+    identical = identical and bool(
+        np.array_equal(np.asarray(ids1), np.asarray(oi))
+        and np.array_equal(np.asarray(d1), np.asarray(od))
+    )
+    assert identical, "uneven-range results diverged from the scalar oracle"
+    del oracle
+    qps_uneven = measure()
+    speedup = qps_uneven / max(qps_equal, 1e-9)
+
+    row("exp17.ranges.equal", 1e6 * batch / qps_equal,
+        f"{qps_equal:.0f}q/s;bal={bal_equal:.2f};S={shards}")
+    row("exp17.ranges.uneven", 1e6 * batch / qps_uneven,
+        f"{qps_uneven:.0f}q/s;x{speedup:.2f}equal;bal={bal_uneven:.2f}")
+
+    stats = engine.stats()
+    meta("exp17.grid", grid)
+    meta("exp17.k", k)
+    meta("exp17.query_batch_size", batch)
+    meta("exp17.devices", len(jax.devices()))
+    meta("exp17.shards", shards)
+    meta("exp17.zipf_theta", theta)
+    meta("exp17.replicas", 0)
+    meta("exp17.boundaries", [int(s) for s in engine.routing.starts])
+    meta("exp17.balance.equal", round(bal_equal, 3))
+    meta("exp17.balance.uneven", round(bal_uneven, 3))
+    meta("exp17.identical_results", identical)
+    meta("exp17.qps.equal", round(qps_equal, 1))
+    meta("exp17.qps.uneven", round(qps_uneven, 1))
+    meta("exp17.speedup", round(speedup, 2))
+    meta("exp17.engine.repartitions", stats.get("repartitions", 0))
+    meta("exp17.engine.uneven_ranges", stats.get("uneven_ranges"))
+
+
 def exp10_vertex_orders() -> None:
     k = 20
     g, objects = dataset(grid=28)  # static orders blow up fast; small grid
@@ -884,4 +991,5 @@ ALL = [
     exp14_frontier_scaling,
     exp15_mixed_rw,
     exp16_hot_shard,
+    exp17_uneven_ranges,
 ]

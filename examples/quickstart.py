@@ -214,6 +214,46 @@ def main():
               f"XLA_FLAGS=--xla_force_host_platform_device_count=8 to see "
               f"the fan-out")
 
+    print("\n== 12. uneven shard ranges (traffic-aware repartition) ==")
+    # The other answer to skew: instead of paying replica copies for a hot
+    # range, move the range *boundaries* so every shard owns an equal share
+    # of the observed traffic. knn.PartitionPlan is the one layout surface —
+    # shards, ranges (explicit boundary vector or "auto"), replication and
+    # routing policy in a single value accepted by build_sharded_engine,
+    # load_engine and serve.py --partition; the old shards=/replication=
+    # kwargs survive as deprecation shims. propose_starts turns a per-vertex
+    # query histogram into balanced boundaries, and repartition() stages
+    # them for the next flush: the tables are re-laid on device and
+    # published with the layout in ONE atomic epoch step, so pinned reads
+    # on older epochs keep serving under their OLD boundaries, and a flush
+    # killed mid-repartition rolls back whole (never a torn layout, the
+    # repartition stays staged for the retry — tests/core/test_repartition
+    # drives every checkpoint). Prefer ranges over replicas when the skew is
+    # broad (a hot *region*, zipf-ish traffic: exp17 holds >= 1.3x q/s over
+    # equal-width with ZERO extra devices); prefer replicas when one range
+    # is hot beyond what any boundary move can dilute. serve.py
+    # --partition shards=4,ranges=auto does this live from the query stream.
+    if sharded.num_shards > 1:
+        hist = np.bincount(np.repeat(us, 3), minlength=g.n).astype(np.float64)
+        starts = knn.propose_starts(hist, sharded.num_shards)
+        pinned = sharded.epoch
+        sharded.repartition(starts)                   # stage + flush in one
+        u_ids, _ = sharded.query_batch(us)
+        pst = sharded.stats()
+        print(f"boundaries {pst['shard_starts']} (uneven={pst['uneven_ranges']}, "
+              f"repartitions={pst['repartitions']})")
+        old_ids = np.asarray(sharded.query_batch(us, epoch=pinned)[0])
+        print(f"bit-identical after repartition: "
+              f"{bool(np.array_equal(np.asarray(u_ids), np.asarray(ids)))}; "
+              f"pinned epoch {pinned} still serves the old layout: "
+              f"{bool(np.array_equal(old_ids, np.asarray(ids)))}")
+        plan = knn.PartitionPlan.parse(f"shards={sharded.num_shards}")
+        print(f"plan surface: {sharded.partition_plan().describe()} "
+              f"(parse('shards=N') == legacy shards=N: "
+              f"{plan.shards == sharded.num_shards})")
+    else:
+        print("single shard - boundaries have nowhere to move")
+
 
 if __name__ == "__main__":
     main()

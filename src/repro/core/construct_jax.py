@@ -296,6 +296,7 @@ def build_knn_tables_jax(
     use_pallas: bool = True,
     plans: tuple[SweepPlan, SweepPlan] | None = None,
     mesh=None,
+    shard_starts=None,
 ) -> tuple[jax.Array, jax.Array]:
     """Algorithm 3, fused device sweeps: V_k^< up, then V_k down, no host sync.
 
@@ -308,9 +309,10 @@ def build_knn_tables_jax(
 
     With ``mesh`` (a 1-D ``jax.sharding.Mesh``), the result is re-laid into
     the vertex-sharded layout ``ShardedQueryEngine`` serves from — contiguous
-    vertex ranges per device, padded to equal shard rows, one dummy gather
-    row per shard — still without reading the tables back to the host (see
-    ``repro.core.sharded.shard_tables``).
+    vertex ranges per device (equal-width, or the ``shard_starts`` boundary
+    vector of an uneven ``PartitionPlan``), padded to the max range width,
+    one dummy gather row per shard — still without reading the tables back
+    to the host (see ``repro.core.sharded.shard_tables``).
     """
     ex_ids, ex_d = object_extras(bn.n, objects, k)
     plan_up, plan_down = plans or (prepare_sweep(bn, "up"), prepare_sweep(bn, "down"))
@@ -323,7 +325,7 @@ def build_knn_tables_jax(
         return vk_ids, vk_d
     from repro.core.sharded import shard_tables
 
-    return shard_tables(vk_ids, vk_d, bn.n, mesh)
+    return shard_tables(vk_ids, vk_d, bn.n, mesh, starts=shard_starts)
 
 
 def build_knn_index_jax(

@@ -387,13 +387,23 @@ class EngineCore:
         an epoch becomes visible."""
         self._epochs.publish(epoch, self._table_snapshot())
 
+    def _prepare_publish(self) -> None:
+        """Last hook inside the flush's fallible region, right before the
+        pre-swap checkpoint. Subclasses that stage *layout* changes (the
+        sharded engine's repartition-on-flush) re-lay the working tables
+        here, so the subsequent ``_publish_epoch`` makes the new tables and
+        the new layout visible in the same atomic step — and a failure
+        anywhere in here still rolls back through ``_restore_tables``."""
+
     def _checkpoint(self, phase: str) -> None:
         """Fault-injection seam: no-op unless ``checkpoint_hook`` is set.
 
         The chaos tests install a hook that raises (simulated
         kill-at-this-point) or issues queries (snapshot-isolation probes).
         Phases fired: ``post-journal-append``, ``mid-repair-round``,
-        ``pre-swap``, ``post-swap``.
+        ``pre-swap``, ``post-swap`` — plus ``pre-repartition`` /
+        ``mid-repartition`` when the sharded engine has a staged
+        repartition riding the flush.
         """
         hook = self.checkpoint_hook
         if hook is not None:
@@ -1024,6 +1034,11 @@ class EngineCore:
                         t0 = time.perf_counter()
                         rounds = self._repair(purged_rows)
                         t_repair = time.perf_counter() - t0
+
+                # -- staged layout changes (repartition-on-flush) ride the
+                # same epoch: the hook re-lays the working tables so the
+                # publish below swaps tables AND layout atomically
+                self._prepare_publish()
             self._checkpoint("pre-swap")
         except BaseException:
             self._restore_tables(base)

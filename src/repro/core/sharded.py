@@ -12,15 +12,30 @@ the layout-independent logic, so the two engines cannot drift.
 
 Layout
 ------
-Shard ``s`` of ``S`` owns the contiguous vertex range ``[s*R, (s+1)*R)`` with
-``R = ceil(n / S)`` rows per shard, plus one local dummy gather row — a local
+Shard ``s`` of ``S`` owns the contiguous vertex range
+``[starts[s], starts[s+1])`` — a ``ShardLayout`` of arbitrary sorted start
+boundaries, equal-width (``starts[s] = s * ceil(n/S)``) by default and
+traffic-driven uneven under a ``PartitionPlan`` with explicit or ``auto``
+ranges. Every shard's local block is padded to the same
+``R = max range width`` rows plus one local dummy gather row — a local
 ``(R+1, k)`` block per device, stored as one global ``(S*(R+1), k)`` array
 with ``NamedSharding(mesh, P("shard"))``. Vertex ``v`` lives at global padded
-row ``(v // R) * (R + 1) + v % R``. Rows past ``n`` in the last shard and the
-per-shard dummy rows hold the pad sentinel (-1, +inf); they cost
-``S*(R+1) - n`` wasted rows (reported as ``row_padding_overhead`` in
+row ``owner(v) * (R+1) + (v - starts[owner(v)])``. Rows past a shard's range
+width and the per-shard dummy rows hold the pad sentinel (-1, +inf); they
+cost ``S*(R+1) - n`` wasted rows (reported as ``row_padding_overhead`` in
 ``stats()`` and the exp13 benchmark, so scaling numbers stay honest about the
-memory cost).
+memory cost — uneven ranges trade extra pad rows on the cold shards for a
+smaller max per-shard query batch on the hot one, the exp17 win).
+
+Repartition-on-flush: ``stage_repartition(starts)`` (or
+``repartition(starts)``, which also flushes) records pending boundaries;
+the next flush re-lays the working tables under them on device — inside the
+flush's fallible region, so a crash rolls back to the old boundaries with
+the staged queue intact — and the same atomic ``_publish_epoch`` step then
+makes the new tables and the new layout visible together. The routing table
+versions its layout per epoch, so pinned reads on old epochs keep routing
+by the OLD boundaries (bit-identical time travel) while new queries route
+by the new ``_starts``.
 
 Execution model
 ---------------
@@ -87,6 +102,7 @@ staged-update API, same artifact format. Artifacts always store the logical
 """
 from __future__ import annotations
 
+import dataclasses
 from collections import OrderedDict
 
 import numpy as np
@@ -104,8 +120,9 @@ from jax.sharding import (
 from repro.core.bngraph import BNGraph
 from repro.core.construct_jax import build_knn_tables_jax
 from repro.core.engine import EngineCore, _pow2_pad, load_artifact
-from repro.core.errors import EpochError, QueryError
+from repro.core.errors import EngineConfigError, EpochError, QueryError
 from repro.core.index import KNNIndex
+from repro.core.partition import PartitionPlan, propose_starts
 from repro.kernels import ops
 
 
@@ -128,19 +145,24 @@ def make_mesh(shards: int | None = None) -> Mesh:
 
 
 def shard_tables(
-    vk_ids: jax.Array, vk_d: jax.Array, n: int, mesh: Mesh
+    vk_ids: jax.Array, vk_d: jax.Array, n: int, mesh: Mesh, *, starts=None
 ) -> tuple[jax.Array, jax.Array]:
     """Re-lay single-device (n+1, k) tables into the sharded global layout.
 
     Stays on device: one gather through the padded-row -> source-row index
     map, then a resharding ``device_put`` — the construction sweeps' result
-    feeds the sharded engine with no host readback.
+    feeds the sharded engine with no host readback. ``starts=None`` is the
+    equal-width split; an explicit boundary vector lays the tables under
+    uneven ranges (every shard still padded to the max range width).
     """
     shards = mesh.devices.size
-    rows = -(-n // shards)  # ceil
-    src = np.full(shards * (rows + 1), n, np.int64)  # pads read the dummy row
+    layout = (
+        ShardLayout.equal(n, shards) if starts is None
+        else ShardLayout.from_starts(n, starts)
+    )
+    src = np.full(shards * layout.block, n, np.int64)  # pads read the dummy row
     v = np.arange(n, dtype=np.int64)
-    src[(v // rows) * (rows + 1) + v % rows] = v
+    src[layout.padded_rows(v)] = v
     spec = NamedSharding(mesh, P("shard", None))
     src_dev = jnp.asarray(src)
     return (
@@ -149,18 +171,136 @@ def shard_tables(
     )
 
 
+class ShardLayout:
+    """Immutable row layout of one epoch: boundaries + uniform block size.
+
+    ``starts`` is the sorted shard-start vector (first entry 0); shard ``s``
+    owns ``[starts[s], starts[s+1])`` and every shard's local block is
+    padded to ``shard_rows = max range width`` rows plus one dummy gather
+    row, so one ``(devices, block, k)`` shard_map program serves any
+    boundary vector with the same max width. The routing table versions one
+    ``ShardLayout`` per published epoch — pinned reads on old epochs keep
+    resolving addresses under the boundaries they were published with.
+    """
+
+    __slots__ = ("n", "num_shards", "starts", "shard_rows")
+
+    def __init__(self, n: int, starts: np.ndarray, shard_rows: int):
+        self.n = int(n)
+        self.starts = np.asarray(starts, np.int64)
+        self.num_shards = len(self.starts)
+        self.shard_rows = int(shard_rows)
+
+    @classmethod
+    def equal(cls, n: int, num_shards: int) -> "ShardLayout":
+        """The default split: ``starts[s] = s * ceil(n/S)`` (trailing shards
+        may be empty when S nearly divides n — seed-identical layout)."""
+        rows = -(-int(n) // int(num_shards))  # ceil
+        return cls(n, np.arange(num_shards, dtype=np.int64) * rows, rows)
+
+    @classmethod
+    def from_starts(cls, n: int, starts) -> "ShardLayout":
+        """An explicit (possibly uneven) boundary vector, validated: first
+        boundary 0, strictly increasing, every shard's range non-empty."""
+        arr = np.asarray(starts, np.int64).reshape(-1)
+        if not arr.size or arr[0] != 0:
+            raise EngineConfigError(
+                f"shard range boundaries must start at vertex 0, got "
+                f"{arr.tolist()!r}"
+            )
+        if arr.size > 1 and not np.all(np.diff(arr) > 0):
+            raise EngineConfigError(
+                f"shard range boundaries must be strictly increasing, got "
+                f"{arr.tolist()!r}"
+            )
+        if int(arr[-1]) > max(int(n) - 1, 0):
+            raise EngineConfigError(
+                f"shard range boundary {int(arr[-1])} leaves an empty range "
+                f"(vertices end at {int(n) - 1})"
+            )
+        widths = np.diff(np.append(arr, int(n)))
+        return cls(n, arr, int(widths.max()))
+
+    @property
+    def block(self) -> int:
+        """Local rows per shard including the dummy gather row."""
+        return self.shard_rows + 1
+
+    @property
+    def widths(self) -> np.ndarray:
+        """Owned vertices per shard (0 for an empty trailing shard)."""
+        return np.maximum(np.diff(np.append(self.starts, self.n)), 0)
+
+    @property
+    def is_equal(self) -> bool:
+        rows = -(-self.n // self.num_shards)
+        return self.shard_rows == rows and bool(
+            np.array_equal(
+                self.starts, np.arange(self.num_shards, dtype=np.int64) * rows
+            )
+        )
+
+    def same_as(self, other: "ShardLayout") -> bool:
+        return (
+            self is other
+            or (
+                self.shard_rows == other.shard_rows
+                and np.array_equal(self.starts, other.starts)
+            )
+        )
+
+    def owner(self, vs: np.ndarray) -> np.ndarray:
+        """Owner shard per vertex. ``vs`` must lie in [0, n] — n is the
+        shared dummy/pad address; anything outside raises ``QueryError``
+        instead of silently resolving (a negative id used to underflow
+        ``searchsorted - 1`` into a plausible-but-wrong row of the LAST
+        shard)."""
+        vs = np.asarray(vs, np.int64)
+        if vs.size and (int(vs.min()) < 0 or int(vs.max()) > self.n):
+            bad = vs[(vs < 0) | (vs > self.n)]
+            raise QueryError(
+                f"vertex id {int(bad[0])} is outside [0, {self.n}] and "
+                f"cannot be routed to a shard"
+            )
+        return np.minimum(
+            np.searchsorted(self.starts, vs, side="right") - 1,
+            self.num_shards - 1,
+        )
+
+    def padded_rows(
+        self, vs: np.ndarray, own: np.ndarray | None = None
+    ) -> np.ndarray:
+        """Global padded-row address of each vertex: the owner's block base
+        plus the vertex's offset from the owner's start boundary."""
+        vs = np.asarray(vs, np.int64)
+        if own is None:
+            own = self.owner(vs)
+        return own * self.block + (vs - self.starts[own])
+
+    def serving_rows(
+        self, vs: np.ndarray, own: np.ndarray, slots: np.ndarray
+    ) -> np.ndarray:
+        """Serving-layout padded-row address: the chosen slot's block base
+        plus the vertex's offset from its *owner's* start boundary (every
+        slot of a shard holds a copy of the same local block)."""
+        return slots * self.block + (np.asarray(vs, np.int64) - self.starts[own])
+
+
 class ShardRoutingTable:
     """The single shard indirection: vertex -> owner shard -> buffers per epoch.
 
     Two jobs, one table:
 
     * **Ownership.** ``owner(vs)`` is a ``searchsorted`` against the stored
-      shard-start vertex boundaries, and ``padded_rows(vs)`` is the vertex's
-      global padded-row address derived from the owner's stored start.
-      Every routing decision in the engine reads THIS table instead of
-      inlining ``v // R`` — so moving to uneven ranges or replicated hot
-      shards (the ROADMAP follow-on) means editing the table, not hunting
-      down arithmetic.
+      shard-start vertex boundaries — arbitrary sorted ``ShardLayout``
+      boundaries, equal-width by default and traffic-driven uneven after a
+      repartition — and ``padded_rows(vs)`` is the vertex's global
+      padded-row address derived from the owner's stored start. Every
+      routing decision in the engine reads THIS table instead of inlining
+      ``v // R``. The layout is versioned per epoch: ``publish`` records
+      the current ``ShardLayout`` alongside the buffers and
+      ``layout(epoch)`` resolves it back, so a pinned read on an epoch
+      published before a repartition still routes by the OLD boundaries.
     * **Epoch resolution.** ``publish(epoch, buffers)`` records the sharded
       global id/dist arrays serving an epoch, in the same atomic step the
       core's ``EpochStore`` swap runs; ``buffers(epoch)`` resolves a
@@ -182,11 +322,19 @@ class ShardRoutingTable:
       slot.
     """
 
-    def __init__(self, n: int, num_shards: int):
+    def __init__(self, n: int, num_shards: int, starts=None):
         self.n = int(n)
         self.num_shards = int(num_shards)
-        self.shard_rows = -(-self.n // self.num_shards)  # ceil
-        self._starts = np.arange(self.num_shards, dtype=np.int64) * self.shard_rows
+        if starts is None:
+            self._layout = ShardLayout.equal(self.n, self.num_shards)
+        else:
+            self._layout = ShardLayout.from_starts(self.n, starts)
+            if self._layout.num_shards != self.num_shards:
+                raise EngineConfigError(
+                    f"boundary vector names {self._layout.num_shards} shards, "
+                    f"table has {self.num_shards}"
+                )
+        self._layout_by_epoch: dict[int, ShardLayout] = {}
         self._by_epoch: OrderedDict[int, tuple] = OrderedDict()
         self._serving_by_epoch: dict[int, tuple | None] = {}
         self.replication: dict[int, int] = {}
@@ -195,43 +343,54 @@ class ShardRoutingTable:
         self._rr: dict[int, int] = {}
         self.outstanding = np.zeros(self.num_shards, np.int64)
 
-    # -- ownership ------------------------------------------------------
+    # -- ownership (delegated to the CURRENT layout; per-epoch resolution
+    # goes through ``layout(epoch)`` so pinned reads survive a repartition) -
+
+    @property
+    def current_layout(self) -> ShardLayout:
+        return self._layout
+
+    def set_layout(self, layout: ShardLayout) -> None:
+        """Swap the CURRENT layout (repartition-on-flush applies the new
+        boundaries here, in the same step it swaps the working tables);
+        already-published epochs keep the layout they were published with."""
+        if layout.n != self.n or layout.num_shards != self.num_shards:
+            raise EngineConfigError(
+                f"layout is for n={layout.n} x {layout.num_shards} shards, "
+                f"table is n={self.n} x {self.num_shards}"
+            )
+        self._layout = layout
+
+    @property
+    def shard_rows(self) -> int:
+        return self._layout.shard_rows
+
+    @property
+    def starts(self) -> np.ndarray:
+        """The current layout's shard-start boundary vector (copy)."""
+        return self._layout.starts.copy()
+
+    @property
+    def _starts(self) -> np.ndarray:
+        # legacy spelling, kept because callers predate ShardLayout
+        return self._layout.starts
 
     def owner(self, vs: np.ndarray) -> np.ndarray:
-        """Owner shard per vertex. ``vs`` must lie in [0, n] — n is the
-        shared dummy/pad address, owned by the last shard; anything outside
-        raises ``QueryError`` instead of silently resolving (a negative id
-        used to underflow ``searchsorted - 1`` into a plausible-but-wrong
-        row of the LAST shard)."""
-        vs = np.asarray(vs, np.int64)
-        if vs.size and (int(vs.min()) < 0 or int(vs.max()) > self.n):
-            bad = vs[(vs < 0) | (vs > self.n)]
-            raise QueryError(
-                f"vertex id {int(bad[0])} is outside [0, {self.n}] and "
-                f"cannot be routed to a shard"
-            )
-        return np.minimum(
-            np.searchsorted(self._starts, vs, side="right") - 1,
-            self.num_shards - 1,
-        )
+        """Owner shard per vertex under the CURRENT layout (see
+        ``ShardLayout.owner`` for the [0, n] validation contract)."""
+        return self._layout.owner(vs)
 
     def padded_rows(
         self, vs: np.ndarray, own: np.ndarray | None = None
     ) -> np.ndarray:
-        """Global padded-row address of each vertex: the owner's block base
-        plus the vertex's offset from the owner's start boundary."""
-        vs = np.asarray(vs, np.int64)
-        if own is None:
-            own = self.owner(vs)
-        return own * (self.shard_rows + 1) + (vs - self._starts[own])
+        """Global padded-row address per vertex under the CURRENT layout."""
+        return self._layout.padded_rows(vs, own)
 
     def serving_rows(
         self, vs: np.ndarray, own: np.ndarray, slots: np.ndarray
     ) -> np.ndarray:
-        """Serving-layout padded-row address: the chosen slot's block base
-        plus the vertex's offset from its *owner's* start boundary (every
-        slot of a shard holds a copy of the same local block)."""
-        return slots * (self.shard_rows + 1) + (np.asarray(vs, np.int64) - self._starts[own])
+        """Serving-layout padded-row address under the CURRENT layout."""
+        return self._layout.serving_rows(vs, own, slots)
 
     @property
     def num_slots(self) -> int:
@@ -246,11 +405,13 @@ class ShardRoutingTable:
         for s, r in (plan or {}).items():
             s, r = int(s), int(r)
             if not 0 <= s < self.num_shards:
-                raise ValueError(
+                raise EngineConfigError(
                     f"replication plan names shard {s}, have {self.num_shards}"
                 )
             if r < 0:
-                raise ValueError(f"replica count for shard {s} must be >= 0, got {r}")
+                raise EngineConfigError(
+                    f"replica count for shard {s} must be >= 0, got {r}"
+                )
             if r:
                 clean[s] = r
         self.replication = clean
@@ -330,10 +491,14 @@ class ShardRoutingTable:
         """Swap in an epoch's buffers — and, when a replication plan is
         active, the matching replica (serving-layout) buffers — as one
         step, so a query can never resolve an epoch to another epoch's
-        replicas."""
+        replicas. The CURRENT layout is recorded as the epoch's layout in
+        the same step: after a repartition, pinned reads on older epochs
+        keep resolving addresses under the boundaries they were published
+        with."""
         epoch = int(epoch)
         self._by_epoch[epoch] = buffers
         self._serving_by_epoch[epoch] = serving
+        self._layout_by_epoch.setdefault(epoch, self._layout)
         if keep is not None:
             self.trim(keep)
 
@@ -343,6 +508,9 @@ class ShardRoutingTable:
             del self._by_epoch[e]
         self._serving_by_epoch = {
             e: s for e, s in self._serving_by_epoch.items() if e in kept
+        }
+        self._layout_by_epoch = {
+            e: lay for e, lay in self._layout_by_epoch.items() if e in kept
         }
 
     def epochs(self) -> list[int]:
@@ -357,12 +525,23 @@ class ShardRoutingTable:
             )
         return self._by_epoch[epoch]
 
+    def layout(self, epoch: int) -> ShardLayout:
+        """The ``ShardLayout`` a retained epoch was published under."""
+        epoch = int(epoch)
+        if epoch not in self._layout_by_epoch:
+            raise EpochError(
+                f"epoch {epoch} has no retained layout "
+                f"(have {sorted(self._layout_by_epoch)})"
+            )
+        return self._layout_by_epoch[epoch]
+
     def shard_buffers(self, epoch: int) -> dict[int, tuple]:
         """shard id -> (device, local ids buffer, local dists buffer)."""
         ids_g, d_g = self.buffers(epoch)
+        block = self.layout(epoch).block
         out: dict[int, tuple] = {}
         for si, sd in zip(ids_g.addressable_shards, d_g.addressable_shards):
-            s = (si.index[0].start or 0) // (self.shard_rows + 1)
+            s = (si.index[0].start or 0) // block
             out[s] = (si.device, si.data, sd.data)
         return out
 
@@ -379,9 +558,10 @@ class ShardRoutingTable:
         if serving is None:
             return {}
         s_ids, s_d = serving
+        block = self.layout(epoch).block
         out: dict[int, tuple] = {}
         for si, sd in zip(s_ids.addressable_shards, s_d.addressable_shards):
-            slot = (si.index[0].start or 0) // (self.shard_rows + 1)
+            slot = (si.index[0].start or 0) // block
             out[slot] = (int(self.slot_shard[slot]), si.device, si.data, sd.data)
         return out
 
@@ -570,26 +750,73 @@ class ShardedQueryEngine(EngineCore):
         shards: int | None = None,
         mesh: Mesh | None = None,
         use_pallas: bool = False,
+        plan: PartitionPlan | None = None,
     ):
-        self.mesh = mesh if mesh is not None else make_mesh(shards)
+        plan = PartitionPlan.resolve(plan, shards=shards)
+        self.mesh = mesh if mesh is not None else make_mesh(plan.shards)
         self.num_shards = int(self.mesh.devices.size)
         self.n, ids, dists = EngineCore.normalize_tables(ids, dists, k, bn)
-        self._init_layout(int(k))
-        self._ids_g, self._d_g = shard_tables(ids, dists, self.n, self.mesh)
+        starts = self._plan_starts(plan, objects=objects)
+        self._init_layout(int(k), starts=starts)
+        self._ids_g, self._d_g = shard_tables(
+            ids, dists, self.n, self.mesh, starts=starts
+        )
         super().__init__(k, objects, bn=bn, use_pallas=use_pallas)
+        self._apply_plan_replication(plan)
 
-    def _init_layout(self, k: int) -> None:
+    def _plan_starts(self, plan: PartitionPlan, *, objects=None, saved=None):
+        """Resolve a plan's ``ranges`` field to a boundary vector (or None
+        for equal-width). Explicit ranges are used as given; ``auto`` asks
+        the splitter for object-density-balanced boundaries (the build-time
+        histogram; serve.py feeds the query histogram at runtime); None
+        reuses a loader's ``saved`` boundaries when they still fit the
+        shard count, else falls back to equal-width."""
+        if isinstance(plan.ranges, tuple):
+            starts = np.asarray(plan.ranges, np.int64)
+            if len(starts) != self.num_shards:
+                raise EngineConfigError(
+                    f"plan names {len(starts)} range boundaries but the mesh "
+                    f"has {self.num_shards} shards"
+                )
+            return starts
+        if (
+            saved is not None
+            and len(saved) == self.num_shards
+            and not ShardLayout.from_starts(self.n, saved).is_equal
+        ):
+            return np.asarray(saved, np.int64)
+        if plan.ranges == "auto" and objects is not None and len(objects):
+            if self.num_shards == 1:
+                return None
+            w = np.full(self.n, 1e-3)
+            w[np.asarray(objects, np.int64)] += 1.0
+            return propose_starts(w, self.num_shards)
+        return None
+
+    def _apply_plan_replication(self, plan: PartitionPlan) -> None:
+        rep = plan.replication_dict()
+        if rep:
+            self.set_replication(rep, policy=plan.policy)
+        elif plan.policy != self.replica_policy:
+            self.replica_policy = plan.policy
+
+    def _init_layout(self, k: int, starts=None) -> None:
         """Derive the host side of the partitioned layout (the routing
         table, shard_rows, the vertex -> global-padded-row map) and bind
         the shared device programs. Requires ``self.mesh``,
         ``self.num_shards`` and ``self.n`` to be set; the single source of
         the layout arithmetic for every constructor."""
         if self.num_shards > max(self.n, 1):
-            raise ValueError(f"cannot split n={self.n} rows into {self.num_shards} shards")
-        self.routing = ShardRoutingTable(self.n, self.num_shards)
+            raise EngineConfigError(
+                f"cannot split n={self.n} rows into {self.num_shards} shards"
+            )
+        self.routing = ShardRoutingTable(self.n, self.num_shards, starts=starts)
         self.shard_rows = self.routing.shard_rows
         self._g_of_v = self.routing.padded_rows(np.arange(self.n, dtype=np.int64))
         self._make_device_fns(k)
+        # repartition-on-flush state: boundaries staged for the next flush
+        self._pending_layout: ShardLayout | None = None
+        self._partition_stats = {"repartitions": 0}
         # replica serving state (inactive until set_replication installs a
         # plan): the serving mesh spans primaries + extra replica devices
         self.replica_policy = "round_robin"
@@ -616,19 +843,26 @@ class ShardedQueryEngine(EngineCore):
         *,
         shards: int | None = None,
         use_pallas: bool = False,
+        plan: PartitionPlan | None = None,
     ) -> "ShardedQueryEngine":
         """Construct on device (Algorithm 3 fused sweeps) and serve sharded:
         the sweep result tables are re-laid into the partitioned layout with
-        no host readback (``build_knn_tables_jax(..., mesh=)``)."""
+        no host readback (``build_knn_tables_jax(..., mesh=)``). ``plan``
+        is the unified ``PartitionPlan`` surface (``shards=`` is the legacy
+        shim); ``ranges="auto"`` splits by object density at build time."""
+        plan = PartitionPlan.resolve(plan, shards=shards)
         eng = cls.__new__(cls)  # skip __init__: the tables are born sharded
-        eng.mesh = make_mesh(shards)
+        eng.mesh = make_mesh(plan.shards)
         eng.num_shards = int(eng.mesh.devices.size)
         eng.n = bn.n
-        eng._init_layout(int(k))
+        starts = eng._plan_starts(plan, objects=objects)
+        eng._init_layout(int(k), starts=starts)
         eng._ids_g, eng._d_g = build_knn_tables_jax(
-            bn, objects, k, use_pallas=use_pallas, mesh=eng.mesh
+            bn, objects, k, use_pallas=use_pallas, mesh=eng.mesh,
+            shard_starts=starts,
         )
         EngineCore.__init__(eng, k, objects, bn=bn, use_pallas=use_pallas)
+        eng._apply_plan_replication(plan)
         return eng
 
     @classmethod
@@ -640,12 +874,13 @@ class ShardedQueryEngine(EngineCore):
         bn: BNGraph | None = None,
         shards: int | None = None,
         use_pallas: bool = False,
+        plan: PartitionPlan | None = None,
     ) -> "ShardedQueryEngine":
         """Upload a host ``KNNIndex`` (e.g. an oracle-built one), sharded."""
         dists = np.where(index.ids >= 0, index.dists, np.inf).astype(np.float32)
         return cls(
             index.ids, dists, index.k, objects,
-            bn=bn, shards=shards, use_pallas=use_pallas,
+            bn=bn, shards=shards, use_pallas=use_pallas, plan=plan,
         )
 
     @classmethod
@@ -658,6 +893,7 @@ class ShardedQueryEngine(EngineCore):
         use_pallas: bool = False,
         journal=None,
         replication: dict[int, int] | None = None,
+        plan: PartitionPlan | None = None,
     ) -> "ShardedQueryEngine":
         """Load a ``save`` artifact into a sharded engine — reshard-on-load.
 
@@ -679,16 +915,31 @@ class ShardedQueryEngine(EngineCore):
         ``QueryEngine.load`` — the journal records logical object updates,
         so a journal written by a scalar (or differently-sharded) engine
         replays here and recovers the same logical tables.
+
+        Saved uneven range boundaries (``meta["starts"]``) are re-applied
+        when the reader keeps the writer's shard count and the plan does
+        not name explicit ranges; a reshard drops them (boundaries are
+        keyed by shard count, and the loaded tables re-lay either way).
         """
+        plan = PartitionPlan.resolve(plan, shards=shards, replication=replication)
         ids, dists, k, objects, meta = load_artifact(path)
+        shards = plan.shards
         if shards is None:
             shards = min(int(meta.get("shards", 1)), len(jax.devices()))
+        ranges = plan.ranges
+        if not isinstance(ranges, tuple):
+            saved_starts = meta.get("starts")
+            if saved_starts is not None and len(saved_starts) == shards:
+                ranges = tuple(int(s) for s in saved_starts)
         eng = cls(
             ids, dists.astype(np.float32), k, objects,
-            bn=bn, shards=shards, use_pallas=use_pallas,
+            bn=bn, use_pallas=use_pallas,
+            plan=dataclasses.replace(
+                plan, shards=shards, ranges=ranges, replication=None
+            ),
         )
-        plan = replication
-        if plan is None:
+        rep = plan.replication_dict()
+        if rep is None and not plan.auto_replicas():
             saved = {
                 int(s): int(r)
                 for s, r in (meta.get("replication") or {}).items()
@@ -699,9 +950,9 @@ class ShardedQueryEngine(EngineCore):
                 and shards == int(meta.get("shards", 1))
                 and shards + extras <= len(jax.devices())
             ):
-                plan = saved
-        if plan:
-            eng.set_replication(plan)
+                rep = saved
+        if rep:
+            eng.set_replication(rep, policy=plan.policy)
         if journal is not None:
             eng.attach_journal(journal)
         return eng
@@ -730,13 +981,21 @@ class ShardedQueryEngine(EngineCore):
 
     def _restore_tables(self, snap: tuple) -> None:
         self._ids_g, self._d_g = snap
+        # a failed flush may have died mid-repartition, AFTER the working
+        # layout swapped: re-sync to the published epoch's layout (the
+        # current epoch is untouched by a failed flush). The pending
+        # boundaries stay staged, so a retry re-applies the repartition.
+        lay = self.routing.layout(self.epoch)
+        if not lay.same_as(self.routing.current_layout):
+            self._apply_layout(lay)
 
     def _publish_epoch(self, epoch: int) -> None:
         # one atomic step: the EpochStore swap, the routing table's
-        # epoch -> buffers entry AND the epoch's replica buffers (when a
-        # plan is active) move together, so the indirection can never
-        # resolve an epoch to another epoch's shards — and every replica
-        # of a shard serves exactly the epoch the primary serves
+        # epoch -> buffers entry, the epoch's layout (boundaries) AND the
+        # epoch's replica buffers (when a plan is active) move together, so
+        # the indirection can never resolve an epoch to another epoch's
+        # shards or boundaries — and every replica of a shard serves
+        # exactly the epoch the primary serves
         super()._publish_epoch(epoch)
         buffers = self._epochs.snapshot(epoch)
         serving = (
@@ -745,6 +1004,7 @@ class ShardedQueryEngine(EngineCore):
         self.routing.publish(
             epoch, buffers, keep=self._epochs.epochs(), serving=serving
         )
+        self._pending_layout = None  # a staged repartition is now live
 
     def _trim_epoch_stats(self) -> None:
         super()._trim_epoch_stats()
@@ -753,6 +1013,97 @@ class ShardedQueryEngine(EngineCore):
     def _table_bytes(self) -> int:
         # the sharded layout pays for the padded rows, count them honestly
         return self.num_shards * (self.shard_rows + 1) * self.k * 8
+
+    # ------------------------------------------------------------------
+    # repartition-on-flush: stage new boundaries, apply them inside the
+    # next flush's fallible region (the _prepare_publish hook), publish
+    # tables + layout in the same atomic _publish_epoch step
+    # ------------------------------------------------------------------
+
+    def stage_repartition(self, starts) -> None:
+        """Stage new shard-range boundaries for the next flush.
+
+        ``starts`` is a sorted boundary vector (one entry per shard, first
+        0, strictly increasing — e.g. from ``propose_starts`` over a query
+        histogram). Nothing changes until ``flush_updates``: the flush
+        re-lays the working tables under the new boundaries on device and
+        publishes tables + layout in one atomic epoch step, so pinned
+        reads on older epochs stay bit-identical under their OLD
+        boundaries. A flush that fails (or is killed) rolls back to the
+        old boundaries with the repartition still staged for the retry.
+        """
+        lay = ShardLayout.from_starts(self.n, starts)
+        if lay.num_shards != self.num_shards:
+            raise EngineConfigError(
+                f"boundary vector names {lay.num_shards} shards, engine "
+                f"has {self.num_shards}"
+            )
+        self._pending_layout = lay
+
+    def repartition(self, starts) -> dict:
+        """``stage_repartition`` + ``flush_updates`` in one call; returns
+        the flush stats (any staged object updates ride the same epoch)."""
+        self.stage_repartition(starts)
+        return self.flush_updates()
+
+    @property
+    def pending_repartition(self) -> np.ndarray | None:
+        """The staged boundary vector, or None."""
+        lay = self._pending_layout
+        return None if lay is None else lay.starts.copy()
+
+    def _prepare_publish(self) -> None:
+        """Re-lay the working tables under the staged boundaries, on
+        device: one gather through the new-layout -> old-layout row map
+        (the same move ``shard_tables`` does at build) plus a resharding
+        ``device_put``, then swap the host-side layout. Runs inside the
+        flush's fallible region — the chaos seam fires ``pre-repartition``
+        and ``mid-repartition`` checkpoints, and any failure rolls back
+        through ``_restore_tables`` to the old boundaries."""
+        lay = self._pending_layout
+        if lay is None:
+            return
+        old = self.routing.current_layout
+        if old.same_as(lay):
+            self._pending_layout = None
+            return
+        self._checkpoint("pre-repartition")
+        # old-layout source row per new-layout row; pad rows read the old
+        # address of the shared dummy vertex n (a pad sentinel row)
+        pad_row = int(old.padded_rows(np.array([self.n], np.int64))[0])
+        src = np.full(self.num_shards * lay.block, pad_row, np.int64)
+        v = np.arange(self.n, dtype=np.int64)
+        src[lay.padded_rows(v)] = old.padded_rows(v)
+        spec = NamedSharding(self.mesh, P("shard", None))
+        src_dev = self._put_repl(src)
+        new_ids = jax.device_put(jnp.take(self._ids_g, src_dev, axis=0), spec)
+        new_d = jax.device_put(jnp.take(self._d_g, src_dev, axis=0), spec)
+        self._checkpoint("mid-repartition")
+        self._ids_g, self._d_g = new_ids, new_d
+        self._apply_layout(lay)
+        self._partition_stats["repartitions"] += 1
+
+    def _apply_layout(self, lay: ShardLayout) -> None:
+        """Swap the CURRENT layout: routing boundaries, the vertex ->
+        padded-row map, and the device programs for the (possibly new)
+        block size. Published epochs keep their own layouts."""
+        self.routing.set_layout(lay)
+        self.shard_rows = lay.shard_rows
+        self._g_of_v = lay.padded_rows(np.arange(self.n, dtype=np.int64))
+        self._make_device_fns(self.k)
+        if self._serving_mesh is not None:
+            self._serving_fns = _device_fns(self._serving_mesh, lay.block, self.k)
+
+    def partition_plan(self) -> PartitionPlan:
+        """The active layout as a ``PartitionPlan`` (stats/introspection)."""
+        lay = self.routing.current_layout
+        rep = tuple(sorted(self.routing.replication.items()))
+        return PartitionPlan(
+            shards=self.num_shards,
+            ranges=None if lay.is_equal else tuple(int(s) for s in lay.starts),
+            replication=rep or None,
+            policy=self.replica_policy,
+        )
 
     # ------------------------------------------------------------------
     # replicated hot shards: a shard -> extra-replica plan expands the
@@ -769,11 +1120,13 @@ class ShardedQueryEngine(EngineCore):
         """Install (or with ``None``/``{}`` drop) a shard -> extra-replica
         plan and immediately re-publish every retained epoch's replica
         buffers, so pinned reads on any retained epoch can be served from
-        replicas too. Raises ``ValueError`` when the visible device pool
-        cannot seat ``num_shards + total extras`` slots."""
+        replicas too. Raises ``EngineConfigError`` when the visible device
+        pool cannot seat ``num_shards + total extras`` slots."""
         if policy is not None:
             if policy not in ("round_robin", "least_outstanding"):
-                raise ValueError(f"unknown replica routing policy {policy!r}")
+                raise EngineConfigError(
+                    f"unknown replica routing policy {policy!r}"
+                )
             self.replica_policy = policy
         plan = {int(s): int(r) for s, r in (plan or {}).items() if int(r) > 0}
         if not plan:
@@ -789,7 +1142,7 @@ class ShardedQueryEngine(EngineCore):
         extras_needed = len(slot_shard) - self.num_shards
         if extras_needed > len(extra_pool):
             self.routing.set_replication({})
-            raise ValueError(
+            raise EngineConfigError(
                 f"replication plan needs {extras_needed} extra devices beyond "
                 f"the {self.num_shards} shard primaries, but only "
                 f"{len(extra_pool)} are free (set "
@@ -807,9 +1160,11 @@ class ShardedQueryEngine(EngineCore):
         """Expand primary-layout global tables into the serving (slot)
         layout: each slot's device gets its logical shard's local (R+1, k)
         block — a no-op reuse for primary slots (the buffer already lives
-        there) and one explicit ``jax.device_put`` per replica slot."""
+        there) and one explicit ``jax.device_put`` per replica slot. The
+        block size is read off the buffers themselves, so re-publishing an
+        epoch that predates a repartition expands under ITS layout."""
         mesh = self._serving_mesh
-        block = self.shard_rows + 1
+        block = ids_g.shape[0] // self.num_shards
         slot_shard = self.routing.slot_shard
         spec = NamedSharding(mesh, P("shard", None))
         devs = list(mesh.devices.flat)
@@ -882,9 +1237,13 @@ class ShardedQueryEngine(EngineCore):
         slot = np.arange(len(owner)) - starts[o_sorted]
         return order, o_sorted, slot, int(counts.max()) if len(owner) else 1
 
-    def _route(self, vs: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    def _route(
+        self, vs: np.ndarray, layout: ShardLayout | None = None
+    ) -> tuple[np.ndarray, np.ndarray]:
         """Group vertices by owner shard: ((S, Bmax) global padded rows with
         -1 padding, (B,) flat result positions restoring the input order).
+        ``layout`` defaults to the CURRENT boundaries; a pinned read on an
+        epoch published before a repartition passes that epoch's layout.
 
         Out-of-range ids get the scalar gather's jnp indexing semantics, so
         the bit-identical contract holds even for garbage queries: negative
@@ -892,22 +1251,26 @@ class ShardedQueryEngine(EngineCore):
         dummy row -> pad sentinel), everything still outside clamps into
         [0, n], and ids >= n read a dummy row -> pad sentinel (-1, +inf).
         """
+        if layout is None:
+            layout = self.routing.current_layout
         vs = np.asarray(vs, np.int64)
         vs = np.where(vs < 0, vs + self.n + 1, vs)  # jnp negative wraparound
         vs = np.clip(vs, 0, self.n)                 # then the XLA gather clamp
         oob = vs >= self.n
-        owner = self.routing.owner(vs)
+        owner = layout.owner(vs)
         order, o_sorted, slot, bmax = self._group_by_owner(owner)
         bmax = _pow2_pad(bmax, lo=8)
         qglob = np.full((self.num_shards, bmax), -1, np.int32)
         qglob[o_sorted, slot] = np.where(
-            oob[order], -1, self.routing.padded_rows(vs[order], o_sorted)
+            oob[order], -1, layout.padded_rows(vs[order], o_sorted)
         )
         fidx = np.empty(len(vs), dtype=np.int64)
         fidx[order] = o_sorted * bmax + slot
         return qglob, fidx
 
-    def _route_slots(self, vs: np.ndarray) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    def _route_slots(
+        self, vs: np.ndarray, layout: ShardLayout | None = None
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Replicated-path analogue of ``_route``: group vertices by
         serving *slot* (shard or replica, per the routing policy) into the
         ((V, Bmax) serving-layout padded rows, (B,) flat result positions,
@@ -915,15 +1278,18 @@ class ShardedQueryEngine(EngineCore):
         ``_route``, and every slot serves byte-identical buffers — so the
         results stay bit-identical to the unreplicated gather no matter
         which replica each query lands on."""
+        if layout is None:
+            layout = self.routing.current_layout
         vs = np.asarray(vs, np.int64)
         vs = np.where(vs < 0, vs + self.n + 1, vs)  # jnp negative wraparound
         vs = np.clip(vs, 0, self.n)                 # then the XLA gather clamp
         oob = vs >= self.n
-        own, slots = self.routing.route(vs, policy=self.replica_policy)
+        own = layout.owner(vs)
+        slots = self.routing.assign_slots(own, self.replica_policy)
         nslots = self.routing.num_slots
         order, s_sorted, pos, bmax = self._group_by_owner(slots, groups=nslots)
         bmax = _pow2_pad(bmax, lo=8)
-        rows = self.routing.serving_rows(vs, own, slots)
+        rows = layout.serving_rows(vs, own, slots)
         qglob = np.full((nslots, bmax), -1, np.int32)
         qglob[s_sorted, pos] = np.where(oob[order], -1, rows[order])
         fidx = np.empty(len(vs), dtype=np.int64)
@@ -952,7 +1318,10 @@ class ShardedQueryEngine(EngineCore):
             np.copyto(buf[j], np.from_dlpack(sh.data)[0])
         return buf
 
-    def _gather_replicated(self, us: np.ndarray, ks: jax.Array, serving: tuple):
+    def _gather_replicated(
+        self, us: np.ndarray, ks: jax.Array, serving: tuple,
+        layout: ShardLayout | None = None,
+    ):
         """Two-phase gather over the serving (slot) layout: the shard_map
         tile program on the wider replica mesh (hot shard's queries fanned
         out across its slot set), then one explicit consolidation onto the
@@ -961,13 +1330,20 @@ class ShardedQueryEngine(EngineCore):
         with every replica added."""
         if self.replica_fault_hook is not None:
             self.replica_fault_hook(self)  # chaos seam: simulated replica loss
+        if layout is None:
+            layout = self.routing.current_layout
         s_ids, s_d = serving
-        qglob, fidx, slots = self._route_slots(us)
+        qglob, fidx, slots = self._route_slots(us, layout)
         mesh = self._serving_mesh
+        fns = (
+            self._serving_fns
+            if layout.same_as(self.routing.current_layout)
+            else _device_fns(mesh, layout.block, self.k)
+        )
         lead = SingleDeviceSharding(mesh.devices.flat[0])
         self.routing.record_dispatch(slots)
         try:
-            gi, gd = self._serving_fns["gather_tile"](
+            gi, gd = fns["gather_tile"](
                 s_ids, s_d,
                 jax.device_put(qglob, NamedSharding(mesh, P("shard", None))),
             )
@@ -976,7 +1352,7 @@ class ShardedQueryEngine(EngineCore):
             # direct sharded->single-device device_put of a multi-MB tile
             # lands on a slow generic copy often enough to flap the exp16
             # floor
-            out = self._serving_fns["gather_epi"](
+            out = fns["gather_epi"](
                 jax.device_put(self._consolidate(gi), lead),
                 jax.device_put(self._consolidate(gd), lead),
                 jax.device_put(fidx, lead), jax.device_put(ks, lead),
@@ -988,10 +1364,14 @@ class ShardedQueryEngine(EngineCore):
         return out
 
     def _gather_batch(self, us: np.ndarray, ks: jax.Array, snap: tuple, epoch: int):
+        # resolve the epoch's OWN layout: after a repartition, a pinned
+        # read on an old epoch routes by the boundaries it was published
+        # with (and runs the matching block-size gather program)
+        layout = self.routing.layout(epoch)
         serving = self.routing.serving(epoch)
         if serving is not None and self._serving_fns is not None:
             try:
-                return self._gather_replicated(us, ks, serving)
+                return self._gather_replicated(us, ks, serving, layout)
             except QueryError:
                 raise  # routing misuse, not a replica fault
             except Exception as e:  # noqa: BLE001 — degrade, don't die
@@ -1003,8 +1383,27 @@ class ShardedQueryEngine(EngineCore):
             # routing is the identity, so serve through the scalar gather
             # (same jitted program the plain engine runs — 1-shard parity)
             return ops.serve_gather(ids_g, d_g, jnp.asarray(us), ks)
-        qglob, fidx = self._route(us)
-        return self._gather_fn(
+        qglob, fidx = self._route(us, layout)
+        fns = _device_fns(self.mesh, layout.block, self.k)
+        if len(us) >= 4096 and qglob.size <= 2 * len(us):
+            # Balanced tile (Bmax ~ B/S, e.g. traffic-balanced uneven
+            # ranges, or equal-width under uniform traffic): consolidate
+            # the sharded tile onto the lead device and run the
+            # batch-order epilogue exactly once — the same two-phase split
+            # the replica fan-out path uses. The one-jit form below pays
+            # its epilogue per device, which swamps the tile savings. A
+            # skew-padded tile (Bmax -> B, so S*Bmax >> B) flips the
+            # trade: consolidating S*Bmax rows costs more than the
+            # replicated epilogue, so the rectangle stays on the one-jit
+            # path.
+            lead = SingleDeviceSharding(self.mesh.devices.flat[0])
+            gi, gd = fns["gather_tile"](ids_g, d_g, self._put_shard(qglob))
+            return fns["gather_epi"](
+                jax.device_put(self._consolidate(gi), lead),
+                jax.device_put(self._consolidate(gd), lead),
+                jax.device_put(fidx, lead), jax.device_put(ks, lead),
+            )
+        return fns["gather"](
             ids_g, d_g, self._put_shard(qglob), self._put_repl(fidx),
             self._put_repl(ks),
         )
@@ -1033,9 +1432,16 @@ class ShardedQueryEngine(EngineCore):
 
     def _scan_delete_rows(self, deletes: list[int]) -> np.ndarray:
         del_arr = self._put_repl(self._padded_deletes(deletes))
-        hits = np.asarray(self._scan_fn(self._ids_g, del_arr)).reshape(-1)
-        rows = np.flatnonzero(hits).astype(np.int32)
-        return rows[rows < self.n]  # guard: pad rows are all-pad, never hit
+        # (S, shard_rows) per-shard hit masks: local row j of shard s is
+        # vertex starts[s] + j while j < widths[s] (rows past a shard's
+        # range width are all-pad under uneven ranges, never hit — but the
+        # map back to vertex ids must still go through the boundaries)
+        hits = np.asarray(self._scan_fn(self._ids_g, del_arr))
+        hits = hits.reshape(self.num_shards, -1)
+        lay = self.routing.current_layout
+        s_idx, j_idx = np.nonzero(hits)
+        valid = j_idx < lay.widths[s_idx]
+        return (lay.starts[s_idx] + j_idx)[valid].astype(np.int32)
 
     def _table_kth(self) -> np.ndarray:
         kth = np.asarray(self._kth_fn(self._d_g))
@@ -1241,6 +1647,11 @@ class ShardedQueryEngine(EngineCore):
 
     def _save_meta(self) -> dict:
         meta = {"shards": self.num_shards, "shard_rows": self.shard_rows}
+        lay = self.routing.current_layout
+        if not lay.is_equal:
+            # uneven boundaries persist with the artifact; load re-applies
+            # them when the reader keeps the writer's shard count
+            meta["starts"] = [int(s) for s in lay.starts]
         if self.routing.replication:
             # the plan is keyed by shard id, so it only transfers to a
             # reader at the same shard count (load re-applies or drops it)
@@ -1251,11 +1662,16 @@ class ShardedQueryEngine(EngineCore):
 
     def _extra_stats(self) -> dict:
         padded = self.num_shards * (self.shard_rows + 1)
+        lay = self.routing.current_layout
         return {
             "num_shards": self.num_shards,
             "shard_rows": self.shard_rows,
             "padded_rows": padded,
             "row_padding_overhead": round((padded - self.n) / max(self.n, 1), 4),
+            "shard_starts": [int(s) for s in lay.starts],
+            "range_rows": [int(w) for w in lay.widths],
+            "uneven_ranges": not lay.is_equal,
+            "repartitions": self._partition_stats["repartitions"],
             "replication": dict(self.routing.replication),
             "replica_slots": self.routing.num_slots,
             "replica_policy": self.replica_policy,

@@ -52,6 +52,7 @@ from repro.core.errors import (
 )
 from repro.core.index import KNNIndex, indices_equivalent
 from repro.core.journal import UpdateJournal
+from repro.core.partition import PartitionPlan, propose_starts
 from repro.core.reference import knn_index_cons_plus
 from repro.core.sharded import ShardedQueryEngine, ShardRoutingTable, make_mesh
 from repro.core.updates import delete_object, insert_object, move_object
@@ -68,6 +69,7 @@ __all__ = [
     "Graph",
     "JournalError",
     "KNNIndex",
+    "PartitionPlan",
     "QueryEngine",
     "QueryError",
     "RepError",
@@ -89,6 +91,7 @@ __all__ = [
     "make_mesh",
     "move_object",
     "pick_objects",
+    "propose_starts",
     "road_network",
     "stage_random_updates",
 ]
@@ -123,33 +126,37 @@ def build_sharded_engine(
     objects: np.ndarray,
     k: int,
     *,
+    plan: PartitionPlan | str | None = None,
     shards: int | None = None,
     use_pallas: bool = False,
     replication: dict[int, int] | None = None,
 ) -> ShardedQueryEngine:
     """Road network -> vertex-sharded multi-device serving engine.
 
-    ``shards=None`` spans every visible device (on CPU, set
-    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before process
-    start). The sharded engine serves the exact same results as the scalar
-    one; see ``repro.core.sharded`` for the partitioned layout.
+    ``plan`` — a ``PartitionPlan`` (or its ``parse`` spec string, e.g.
+    ``"shards=4,ranges=auto"``) — is the one place the whole partition
+    layout is specified: shard count, range boundaries (equal-width,
+    explicit, or object-density ``auto``), replication and routing policy.
+    The sharded engine serves the exact same results as the scalar one
+    under every layout; see ``repro.core.sharded``.
 
-    ``replication={shard: R}`` replicates a hot shard's buffers onto R
-    extra devices beyond the shard primaries and fans its queries out
-    across the replica set (``engine.set_replication`` after the fact does
-    the same) — same results, more query throughput under skew.
+    ``shards=`` and ``replication=`` are the legacy pre-plan kwargs, kept
+    as thin deprecation shims that construct the equivalent plan (passing
+    them alongside ``plan`` raises ``EngineConfigError``). ``shards=None``
+    with no plan spans every visible device (on CPU, set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before process
+    start).
     """
+    plan = PartitionPlan.resolve(plan, shards=shards, replication=replication)
     bn = graph if isinstance(graph, BNGraph) else build_bngraph(graph)
-    eng = ShardedQueryEngine.build(bn, objects, k, shards=shards, use_pallas=use_pallas)
-    if replication:
-        eng.set_replication(replication)
-    return eng
+    return ShardedQueryEngine.build(bn, objects, k, plan=plan, use_pallas=use_pallas)
 
 
 def load_engine(
     path,
     *,
     bn: BNGraph | None = None,
+    plan: PartitionPlan | str | None = None,
     shards: int | None = None,
     use_pallas: bool = False,
     journal=None,
@@ -157,12 +164,18 @@ def load_engine(
 ) -> QueryEngine | ShardedQueryEngine:
     """Load a ``QueryEngine.save`` / ``knn_build --out`` artifact.
 
-    ``shards=N`` loads into a ``ShardedQueryEngine`` at N shards regardless
-    of how many shards wrote the artifact (reshard-on-load: the artifact
-    stores the logical vertex-order tables). ``shards=None`` keeps the
-    scalar engine. A replication plan saved in the artifact is re-applied
-    when compatible (same shard count, enough devices) and dropped
-    otherwise; ``replication={...}`` overrides it, ``{}`` force-drops it.
+    ``plan`` (a ``PartitionPlan`` or spec string) naming a shard count
+    loads into a ``ShardedQueryEngine`` under that layout regardless of how
+    many shards wrote the artifact (reshard-on-load: the artifact stores
+    the logical vertex-order tables, plus any uneven range boundaries the
+    writer was serving under, which are reused when the shard count
+    matches). No plan and ``shards=None`` keeps the scalar engine.
+
+    ``shards=`` / ``replication=`` are the legacy deprecation-shim kwargs
+    (mixing them with ``plan`` raises ``EngineConfigError``). A replication
+    plan saved in the artifact is re-applied when compatible (same shard
+    count, enough devices) and dropped otherwise; an explicit plan or
+    ``replication={...}`` overrides it, ``{}`` force-drops it.
 
     ``journal`` (a path or ``UpdateJournal``) attaches the write-ahead
     journal and replays whatever a killed process left in it — committed
@@ -170,10 +183,10 @@ def load_engine(
     that process was serving. Requires ``bn`` when the journal is
     non-empty (replay runs real updates).
     """
-    if shards is not None:
+    plan = PartitionPlan.resolve(plan, shards=shards, replication=replication)
+    if plan.shards is not None or plan.ranges is not None or plan.replication is not None:
         return ShardedQueryEngine.load(
-            path, bn=bn, shards=shards, use_pallas=use_pallas, journal=journal,
-            replication=replication,
+            path, bn=bn, plan=plan, use_pallas=use_pallas, journal=journal,
         )
     return QueryEngine.load(path, bn=bn, use_pallas=use_pallas, journal=journal)
 

@@ -52,6 +52,22 @@ instead of failing the run:
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
   PYTHONPATH=src python -m repro.launch.serve --arch knn-index --smoke \
       --shards 4 --hot-shard 0 --hot-frac 0.8 --replicate auto:3
+
+``--partition SPEC`` is the unified layout surface that replaces
+``--shards``/``--replicate`` (both kept as deprecation shims; mixing them
+with --partition is an error). One spec names the whole partition layout —
+shard count, range boundaries, replication and routing policy:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python -m repro.launch.serve --arch knn-index --smoke \
+      --partition shards=4,ranges=auto --hot-shard 0 --hot-frac 0.9
+
+``ranges=auto`` watches the same sliding query histogram the auto-replica
+watcher uses, but per *vertex*: after the warmup rounds it proposes
+traffic-balanced boundaries (``propose_starts``) and repartitions on the
+next flush — pinned readers on old epochs keep their old boundaries, new
+queries route by the new ones. The JSON stats report the active plan under
+``"partition"``.
 """
 from __future__ import annotations
 
@@ -117,26 +133,59 @@ def serve_lm(args) -> np.ndarray:  # replint: disable=REP003(one-shot setup at p
     return out
 
 
-def _build_knn_engine(args, bn, objects, k: int):
-    """Scalar or sharded engine, per ``--shards`` (the serving loops are
-    engine-agnostic: both expose the same query/stage/flush surface)."""
+def _knn_partition_plan(args):
+    """Resolve ``--partition`` vs the legacy ``--shards``/``--replicate``
+    flags into one ``PartitionPlan`` (None = scalar engine)."""
     from repro import knn
 
-    if args.shards:
+    if args.partition:
+        if args.shards or args.replicate:
+            raise SystemExit(
+                "--partition replaces --shards/--replicate: name the whole "
+                "layout in one spec, e.g. --partition shards=4,replicate=auto:2"
+            )
+        try:
+            plan = knn.PartitionPlan.parse(args.partition)
+        except knn.EngineConfigError as e:
+            raise SystemExit(f"--partition: {e}")
+        if plan.shards is None:
+            raise SystemExit("--partition must name shards=N")
+        return plan
+    if not args.shards:
+        if args.replicate:
+            raise SystemExit(
+                "--replicate / --partition replication need the sharded "
+                "engine (--shards N or --partition shards=N)"
+            )
+        return None
+    rep = _parse_replicate(args.replicate) if args.replicate else None
+    replication = None
+    if rep is not None:
+        replication = rep if rep[0] == "auto" else (rep,)
+    return knn.PartitionPlan(shards=args.shards, replication=replication)
+
+
+def _build_knn_engine(args, bn, objects, k: int, plan=None):
+    """Scalar or sharded engine, per the resolved partition plan (the
+    serving loops are engine-agnostic: both expose the same
+    query/stage/flush surface)."""
+    from repro import knn
+
+    if plan is not None:
         return knn.build_sharded_engine(
-            bn, objects, k, shards=args.shards, use_pallas=args.use_pallas
+            bn, objects, k, plan=plan, use_pallas=args.use_pallas
         )
     return knn.QueryEngine.build(bn, objects, k, use_pallas=args.use_pallas)
 
 
-def serve_knn_fleet(args, g, bn, k: int, batch: int, t_bn: float) -> dict:
+def serve_knn_fleet(args, g, bn, k: int, batch: int, t_bn: float, plan=None) -> dict:
     """Moving-fleet serving loop: fused ``stage_move`` flushes per tick."""
     from repro import knn
     from repro.workloads import drive_fleet_ticks
 
     sim = knn.FleetSim(g, fleet_size=args.fleet_size, seed=args.seed)
     t0 = time.perf_counter()
-    engine = _build_knn_engine(args, bn, sim.positions, k)
+    engine = _build_knn_engine(args, bn, sim.positions, k, plan=plan)
     t_build = time.perf_counter() - t0
 
     rng = np.random.default_rng(args.seed + 1)
@@ -163,6 +212,7 @@ def serve_knn_fleet(args, g, bn, k: int, batch: int, t_bn: float) -> dict:
         "queries_per_s": round(args.ticks * batch / max(sum(lat), 1e-9), 1),
         "query_p50_us": round(float(np.percentile(lat, 50)) * 1e6, 1),
         "query_p99_us": round(float(np.percentile(lat, 99)) * 1e6, 1),
+        "partition": engine.partition_plan().describe() if plan is not None else None,
         "sim": sim.stats(),
         "engine": engine.stats(),
     }
@@ -221,20 +271,22 @@ def serve_knn(args) -> dict:
     t0 = time.perf_counter()
     bn = knn.build_bngraph(g)
     t_bn = time.perf_counter() - t0
+    plan = _knn_partition_plan(args)
     if args.workload == "fleet":
         if args.artifact:
             # the fleet engine's object set must equal the sim's vehicle
             # positions, which a saved artifact cannot know about
             raise SystemExit("--artifact cannot be combined with --workload fleet")
-        return serve_knn_fleet(args, g, bn, k, min(batch, 4096), t_bn)
+        return serve_knn_fleet(args, g, bn, k, min(batch, 4096), t_bn, plan=plan)
     t0 = time.perf_counter()
     if args.artifact:
         # The artifact must come from the same (grid, seed) network: the
         # engine stores tables + objects, the BN-Graph supplies adjacency.
-        # --shards reshards it on load (the artifact layout is shard-free).
+        # A plan (or --shards) reshards it on load: the artifact stores the
+        # logical vertex-order tables plus any uneven boundaries the writer
+        # served under, reused when the shard count matches.
         engine = knn.load_engine(
-            args.artifact, bn=bn, shards=args.shards or None,
-            use_pallas=args.use_pallas,
+            args.artifact, bn=bn, plan=plan, use_pallas=args.use_pallas,
         )
         if engine.n != g.n or engine.k != k:
             raise SystemExit(
@@ -242,29 +294,37 @@ def serve_knn(args) -> dict:
                 f"--grid/--k (n={g.n}, k={k})"
             )
     else:
-        engine = _build_knn_engine(args, bn, objects, k)
+        engine = _build_knn_engine(args, bn, objects, k, plan=plan)
     t_build = time.perf_counter() - t0
 
-    replicate = _parse_replicate(args.replicate) if args.replicate else None
-    if (replicate or args.hot_frac) and not args.shards:
+    if args.hot_frac and plan is None:
         raise SystemExit(
-            "--replicate / --hot-frac need the sharded engine (--shards N)"
+            "--hot-frac needs the sharded engine (--shards N or "
+            "--partition shards=N)"
         )
+    auto_reps = plan.auto_replicas() if plan is not None else 0
     replicated_shard = None
-    if replicate and replicate[0] != "auto":
-        engine.set_replication({replicate[0]: replicate[1]})
-        replicated_shard = replicate[0]
+    if plan is not None and engine.routing.replication:
+        # explicit plan replication was applied at build/load time
+        replicated_shard = min(engine.routing.replication)
     hot_range = None
-    if args.shards and args.hot_frac:
-        # the hot shard's vertex range, read from the routing table
-        rt = engine.routing
-        hot_range = (
-            args.hot_shard * rt.shard_rows,
-            min(g.n, (args.hot_shard + 1) * rt.shard_rows),
+    if plan is not None and args.hot_frac:
+        # the hot shard's vertex range, read from the routing boundaries
+        # (under uneven ranges the shards are not equal-width slices)
+        starts = engine.routing.starts
+        lo = int(starts[args.hot_shard % len(starts)])
+        hi = (
+            int(starts[args.hot_shard + 1])
+            if args.hot_shard + 1 < len(starts) else g.n
         )
-    # sliding per-shard query histogram for --replicate auto: the last W
-    # rounds of owner counts decide which shard is hot
+        hot_range = (min(lo, g.n - 1), min(max(hi, lo + 1), g.n))
+    # sliding query histograms: per-shard owner counts pick the hot shard
+    # for --replicate auto; the per-vertex counts feed propose_starts for
+    # ranges=auto (repartition-on-flush once the warmup rounds trust it)
     hist: deque = deque(maxlen=16)
+    auto_ranges = plan is not None and plan.ranges == "auto" and engine.num_shards > 1
+    vhist = np.zeros(g.n, np.int64) if auto_ranges else None
+    repartitioned_at = None
 
     rng = np.random.default_rng(args.seed + 1)
     mset = set(engine.objects.tolist())
@@ -293,11 +353,22 @@ def serve_knn(args) -> dict:
         t_query += time.perf_counter() - t0
         queries += batch
 
-        if replicate and replicate[0] == "auto" and replicated_shard is None:
-            hist.append(np.bincount(engine.routing.owner(us), minlength=args.shards))
+        if auto_ranges and repartitioned_at is None:
+            vhist += np.bincount(us, minlength=g.n)
             if rnd + 1 >= 3:  # enough warmup traffic to trust the histogram
+                starts = knn.propose_starts(vhist, engine.num_shards)
+                engine.repartition(starts)  # rides a fresh epoch; old epochs
+                repartitioned_at = rnd + 1  # keep their old boundaries
+                hist.clear()  # owner counts below reflect the new boundaries
+
+        if auto_reps and replicated_shard is None:
+            hist.append(
+                np.bincount(engine.routing.owner(us), minlength=engine.num_shards)
+            )
+            warmup = 3 if not auto_ranges else 6  # let ranges settle first
+            if rnd + 1 >= warmup and hist:
                 hot = int(np.argmax(np.sum(hist, axis=0)))
-                engine.set_replication({hot: replicate[1]})
+                engine.set_replication({hot: auto_reps}, policy=plan.policy)
                 replicated_shard = hot
 
         if n_upd_round:
@@ -333,6 +404,8 @@ def serve_knn(args) -> dict:
         "last_error": last_error,
         "replicate": args.replicate,
         "replicated_shard": replicated_shard,
+        "partition": engine.partition_plan().describe() if plan is not None else None,
+        "repartitioned_at_round": repartitioned_at,
         "hot_frac": args.hot_frac,
         "queries_per_s": round(queries / max(t_query, 1e-9), 1),
         "updates_per_s": round(updates / max(t_update, 1e-9), 1) if updates else 0.0,
@@ -383,13 +456,22 @@ def main():
                     help="knn: make the flush of round ROUND fail just "
                          "before its epoch swap (fault-injection smoke for "
                          "the graceful-degradation path)")
+    ap.add_argument("--partition", default=None, metavar="SPEC",
+                    help="knn: the whole partition layout as one spec, e.g. "
+                         "'shards=4,replicate=auto:2,ranges=auto' (keys: "
+                         "shards, ranges [equal | auto | 0:B1:B2...], "
+                         "replicate [SHARD:R | auto:R], policy). ranges=auto "
+                         "repartitions on flush from the sliding query "
+                         "histogram. Replaces --shards/--replicate")
     ap.add_argument("--shards", type=int, default=0,
-                    help="serve from the vertex-sharded multi-device engine "
-                         "with this many shards (0 = scalar engine); needs "
-                         ">= N visible devices, e.g. "
+                    help="[deprecated: use --partition shards=N] serve from "
+                         "the vertex-sharded multi-device engine with this "
+                         "many shards (0 = scalar engine); needs >= N "
+                         "visible devices, e.g. "
                          "XLA_FLAGS=--xla_force_host_platform_device_count=N")
     ap.add_argument("--replicate", default=None, metavar="SHARD:R",
-                    help="knn sharded: replicate shard SHARD onto R extra "
+                    help="[deprecated: use --partition replicate=...] knn "
+                         "sharded: replicate shard SHARD onto R extra "
                          "devices and fan its queries across the replica "
                          "set; 'auto:R' picks the hottest shard from a "
                          "sliding query histogram after a short warmup")

@@ -1,0 +1,252 @@
+"""PartitionPlan — the one partition-layout surface — and the argument audit.
+
+Covers the unified value object end to end: spec-string parsing, constructor
+validation, the legacy shards=/replication= shim (``resolve``) with
+plan-vs-legacy mixing rejected, the histogram splitter ``propose_starts``,
+and the typed-error audit ISSUE 9 demands — misuse raises ``QueryError`` /
+``EngineConfigError`` / ``EpochError`` (never a bare TypeError/KeyError), and
+``EngineConfigError`` stays a ``ValueError`` subclass so pre-plan callers
+that caught ValueError keep working (that compatibility is pinned here).
+"""
+import numpy as np
+import pytest
+
+from repro import knn
+from repro.core.errors import EngineConfigError, EpochError, QueryError
+from repro.core.partition import PartitionPlan, propose_starts
+from repro.core.sharded import ShardLayout, ShardRoutingTable
+
+# ---------------------------------------------------------------------------
+# spec parsing (the serve.py --partition surface)
+# ---------------------------------------------------------------------------
+
+PARSE_OK = [
+    ("shards=4", dict(shards=4, ranges=None, replication=None,
+                      policy="round_robin")),
+    ("shards=4,replicate=auto:2,ranges=auto",
+     dict(shards=4, ranges="auto", replication=("auto", 2),
+          policy="round_robin")),
+    ("shards=3,ranges=0:100:700",
+     dict(shards=3, ranges=(0, 100, 700), replication=None,
+          policy="round_robin")),
+    ("ranges=0:10:20,policy=least_outstanding",
+     dict(shards=3, ranges=(0, 10, 20), replication=None,
+          policy="least_outstanding")),
+    ("shards=2,replicate=0:3",
+     dict(shards=2, ranges=None, replication=((0, 3),),
+          policy="round_robin")),
+    ("shards=2,ranges=equal",
+     dict(shards=2, ranges=None, replication=None, policy="round_robin")),
+    ("", dict(shards=None, ranges=None, replication=None,
+              policy="round_robin")),
+]
+
+
+@pytest.mark.parametrize("spec,want", PARSE_OK, ids=[s or "<empty>" for s, _ in PARSE_OK])
+def test_parse_ok(spec, want):
+    plan = PartitionPlan.parse(spec)
+    for field, value in want.items():
+        assert getattr(plan, field) == value, (spec, field)
+
+
+PARSE_BAD = [
+    "shards",                      # not key=value
+    "shard=4",                     # unknown key
+    "shards=4,shards=8",           # duplicate key
+    "shards=x",                    # not an int
+    "shards=0",                    # non-positive
+    "ranges=5:10",                 # must start at 0
+    "ranges=0:10:10",              # not strictly increasing
+    "ranges=0:a",                  # not ints
+    "replicate=auto:0",            # auto wants >= 1 extras
+    "replicate=3",                 # missing :R
+    "replicate=0:-1",              # negative count
+    "policy=fastest",              # unknown policy
+    "shards=2,ranges=0:10:20",     # shard count vs boundary count mismatch
+]
+
+
+@pytest.mark.parametrize("spec", PARSE_BAD)
+def test_parse_bad_is_typed(spec):
+    with pytest.raises(EngineConfigError):
+        PartitionPlan.parse(spec)
+
+
+def test_engine_config_error_is_value_error():
+    # pre-plan callers caught ValueError; the typed error must stay one
+    assert issubclass(EngineConfigError, ValueError)
+    with pytest.raises(ValueError):
+        PartitionPlan.parse("shards=0")
+
+
+# ---------------------------------------------------------------------------
+# constructor + legacy-shim resolve
+# ---------------------------------------------------------------------------
+
+def test_plan_infers_shards_from_ranges():
+    plan = PartitionPlan(ranges=(0, 5, 11))
+    assert plan.shards == 3
+    assert plan.describe()["ranges"] == [0, 5, 11]
+
+
+def test_plan_replication_dict_and_auto():
+    assert PartitionPlan(replication={1: 2, 0: 1}).replication_dict() == {0: 1, 1: 2}
+    auto = PartitionPlan(replication=("auto", 2))
+    assert auto.replication_dict() is None  # deferred to the serve watcher
+    assert auto.auto_replicas() == 2
+    assert PartitionPlan().auto_replicas() == 0
+    # explicit empty plan = force-drop, distinct from "no opinion"
+    assert PartitionPlan.resolve(None, replication={}).replication == ()
+    assert PartitionPlan.resolve(None).replication is None
+
+
+def test_resolve_rejects_plan_plus_legacy_kwargs():
+    plan = PartitionPlan(shards=2)
+    with pytest.raises(EngineConfigError):
+        PartitionPlan.resolve(plan, shards=2)
+    with pytest.raises(EngineConfigError):
+        PartitionPlan.resolve("shards=2", replication={0: 1})
+    # legacy-only and plan-only both fine
+    assert PartitionPlan.resolve(None, shards=2).shards == 2
+    assert PartitionPlan.resolve("shards=2").shards == 2
+
+
+@pytest.mark.parametrize("bad", [
+    dict(shards=-1), dict(shards=1.5), dict(ranges="fastest"),
+    dict(ranges=(1, 2)), dict(ranges=(0, 0)), dict(policy="nope"),
+    dict(replication={-1: 1}), dict(replication={0: -2}),
+    dict(shards=2, ranges=(0, 1, 2)),
+])
+def test_plan_constructor_bad_is_typed(bad):
+    with pytest.raises(EngineConfigError):
+        PartitionPlan(**bad)
+
+
+# ---------------------------------------------------------------------------
+# propose_starts (the histogram-driven splitter)
+# ---------------------------------------------------------------------------
+
+def test_propose_starts_balances_weight():
+    w = np.zeros(100)
+    w[:10] = 9.0   # 90 weight in the first 10 vertices
+    w[10:] = 0.1   # 9 in the tail
+    starts = propose_starts(w, 4)
+    assert starts[0] == 0 and np.all(np.diff(starts) > 0)
+    # each range's share close to 1/4 of the total
+    bounds = np.append(starts, 100)
+    shares = np.add.reduceat(w, starts) / w.sum()
+    assert shares.max() < 0.5, (starts, shares)
+    assert np.all(bounds[1:] > bounds[:-1])
+
+
+def test_propose_starts_zero_histogram_is_equal_width():
+    assert propose_starts(np.zeros(100), 4).tolist() == [0, 25, 50, 75]
+    assert propose_starts(np.zeros(9), 8).tolist() == [0, 2, 3, 4, 5, 6, 7, 8]
+
+
+def test_propose_starts_degenerate_spike_stays_strictly_increasing():
+    w = np.zeros(50)
+    w[7] = 1.0  # all the weight on one vertex
+    starts = propose_starts(w, 4)
+    assert starts[0] == 0 and np.all(np.diff(starts) > 0)
+    assert starts[-1] <= 49
+
+
+@pytest.mark.parametrize("w,s", [
+    (np.full(10, -1.0), 2),      # negative weights
+    (np.full(10, np.inf), 2),    # non-finite
+    (np.ones(10), 11),           # more shards than vertices
+    (np.ones(10), 0),            # no shards
+])
+def test_propose_starts_bad_is_typed(w, s):
+    with pytest.raises(EngineConfigError):
+        propose_starts(w, s)
+
+
+def test_propose_starts_length_mismatch():
+    with pytest.raises(EngineConfigError):
+        propose_starts(np.ones(10), 2, n=12)
+
+
+# ---------------------------------------------------------------------------
+# typed-error audit: routing table + layout misuse
+# ---------------------------------------------------------------------------
+
+def test_set_replication_bad_shard_ids_typed():
+    rt = ShardRoutingTable(100, 4)
+    for bad in ({9: 1}, {-1: 1}, {0: -1}):
+        with pytest.raises(EngineConfigError):
+            rt.set_replication(bad)
+        with pytest.raises(ValueError):  # the compatibility pin
+            rt.set_replication(bad)
+
+
+def test_unknown_route_policy_typed():
+    rt = ShardRoutingTable(100, 4)
+    with pytest.raises(QueryError):
+        rt.route(np.array([0, 50]), policy="fastest")
+    with pytest.raises(QueryError):
+        rt.assign_slots(np.array([0]), "no_such_policy")
+
+
+def test_owner_out_of_range_typed():
+    rt = ShardRoutingTable(100, 4)
+    with pytest.raises(QueryError):
+        rt.owner(np.array([200]))
+    with pytest.raises(QueryError):
+        rt.owner(np.array([-1]))
+
+
+def test_layout_validation_typed():
+    for bad in ((5, 10), (0, 10, 10), (0, 99, 150)):
+        with pytest.raises(EngineConfigError):
+            ShardLayout.from_starts(100, np.array(bad))
+    with pytest.raises(EngineConfigError):
+        ShardRoutingTable(100, 2, starts=np.array([0, 10, 20]))  # count mismatch
+
+
+def test_unretained_epoch_layout_typed():
+    rt = ShardRoutingTable(100, 2)
+    with pytest.raises(EpochError):
+        rt.layout(99)
+
+
+# ---------------------------------------------------------------------------
+# the facade shims construct the same engine as an explicit plan
+# ---------------------------------------------------------------------------
+
+def _tiny():
+    g = knn.road_network(6, 6, seed=0)
+    objects = knn.pick_objects(g.n, 0.2, seed=0)
+    bn = knn.build_bngraph(g)
+    return g, objects, bn
+
+
+def test_legacy_shards_kwarg_equals_plan():
+    g, objects, bn = _tiny()
+    legacy = knn.build_sharded_engine(bn, objects, 4, shards=1)
+    planned = knn.build_sharded_engine(bn, objects, 4, plan="shards=1")
+    us = np.arange(g.n)
+    assert np.array_equal(
+        np.asarray(legacy.query_batch(us)[0]),
+        np.asarray(planned.query_batch(us)[0]),
+    )
+    assert legacy.partition_plan() == planned.partition_plan()
+
+
+def test_facade_rejects_plan_plus_legacy():
+    g, objects, bn = _tiny()
+    with pytest.raises(EngineConfigError):
+        knn.build_sharded_engine(bn, objects, 4, plan="shards=1", shards=1)
+    with pytest.raises(EngineConfigError):
+        knn.load_engine("unused.npz", plan="shards=1", shards=1)
+
+
+def test_engine_stats_report_partition_layout():
+    g, objects, bn = _tiny()
+    eng = knn.build_sharded_engine(bn, objects, 4, plan="shards=1")
+    stats = eng.stats()
+    assert stats["shard_starts"] == [0]
+    assert stats["uneven_ranges"] is False
+    assert stats["repartitions"] == 0
+    assert eng.partition_plan().describe()["shards"] == 1

@@ -12,6 +12,10 @@ the same math, only partitioned by vertex owner), and a third engine replay
 runs the flush pipeline with ``frontier = "host"`` — pinning the batched
 device checkIns frontier (``ops.frontier_relax`` rounds) byte-for-byte
 against the per-object ``insert_affected_set`` pipeline on every flush.
+When the device pool allows two shards, a sixth replay runs the sharded
+engine under an uneven ``PartitionPlan(ranges=...)`` boundary layout and is
+held to the same exact table equality — partition boundaries may never
+change results.
 """
 import jax
 import numpy as np
@@ -22,6 +26,7 @@ from hypothesis import strategies as st
 from repro.core.bngraph import build_bngraph
 from repro.core.engine import QueryEngine
 from repro.core.index import indices_equivalent
+from repro.core.partition import PartitionPlan
 from repro.core.reference import knn_index_cons_plus
 from repro.core.sharded import ShardedQueryEngine
 from repro.core.updates import delete_object, insert_object, move_object
@@ -57,6 +62,14 @@ def test_mixed_updates_match_rebuild(p):
     # insert_affected_set) — must stay byte-identical to the device frontier
     hostf = QueryEngine.from_index(idx, obj0, bn=bn)
     hostf.frontier = "host"
+    # the sixth party: the sharded engine under UNEVEN range boundaries (a
+    # deliberately lopsided split) — layout may never leak into results
+    engines = [engine, sharded, hostf]
+    if shards == 2:
+        uneven = ShardedQueryEngine.from_index(
+            idx, obj0, bn=bn, plan=PartitionPlan(ranges=(0, max(1, n // 3)))
+        )
+        engines.append(uneven)
     for _ in range(n_updates):
         u = int(rng.integers(0, n))
         r = rng.random()
@@ -66,48 +79,43 @@ def test_mixed_updates_match_rebuild(p):
             src = int(rng.choice(sorted(objects)))
             dst = int(rng.choice(outside))
             move_object(bn, idx, src, dst)
-            engine.stage_move(src, dst)
-            sharded.stage_move(src, dst)
-            hostf.stage_move(src, dst)
+            for e in engines:
+                e.stage_move(src, dst)
             objects.discard(src)
             objects.add(dst)
         elif u in objects:
             if len(objects) <= k + 1:
                 continue
             delete_object(bn, idx, u)
-            engine.stage_delete(u)
-            sharded.stage_delete(u)
-            hostf.stage_delete(u)
+            for e in engines:
+                e.stage_delete(u)
             objects.discard(u)
         else:
             insert_object(bn, idx, u)
-            engine.stage_insert(u)
-            sharded.stage_insert(u)
-            hostf.stage_insert(u)
+            for e in engines:
+                e.stage_insert(u)
             objects.add(u)
         if rng.random() < 0.3:  # flush at random interleaving points
             assert engine.flush_updates() == sharded.flush_updates()
-            hostf.flush_updates()
-            a, b = engine.to_index(), sharded.to_index()
-            assert np.array_equal(a.ids, b.ids)  # exact, not just equivalent
-            assert np.array_equal(a.dists, b.dists)
-            h = hostf.to_index()  # device frontier == host frontier, exactly
-            assert np.array_equal(a.ids, h.ids)
-            assert np.array_equal(a.dists, h.dists)
-    engine.flush_updates()
-    sharded.flush_updates()
-    hostf.flush_updates()
+            for e in engines[2:]:
+                e.flush_updates()
+            a = engine.to_index()
+            for e in engines[1:]:  # exact tables, not just equivalent:
+                b = e.to_index()  # sharded == scalar, host == device
+                assert np.array_equal(a.ids, b.ids)  # frontier, uneven ==
+                assert np.array_equal(a.dists, b.dists)  # equal-width
+    for e in engines:
+        e.flush_updates()
     fresh = knn_index_cons_plus(bn, np.array(sorted(objects)), k)
     assert indices_equivalent(fresh, idx)
     assert indices_equivalent(fresh, engine.to_index())
     assert indices_equivalent(idx, engine.to_index())
     assert indices_equivalent(fresh, sharded.to_index())
-    a, b = engine.to_index(), sharded.to_index()
-    assert np.array_equal(a.ids, b.ids)
-    assert np.array_equal(a.dists, b.dists)
-    h = hostf.to_index()
-    assert np.array_equal(a.ids, h.ids)
-    assert np.array_equal(a.dists, h.dists)
+    a = engine.to_index()
+    for e in engines[1:]:
+        b = e.to_index()
+        assert np.array_equal(a.ids, b.ids)
+        assert np.array_equal(a.dists, b.dists)
 
 
 def test_insert_then_delete_roundtrip():
