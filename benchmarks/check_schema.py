@@ -37,6 +37,12 @@ experiment's acceptance floor:
   a valid boundary vector (starts at 0, strictly increasing, one per
   shard) and an improved balance ratio. ``--min-devices 8`` holds the
   uneven layout >= 1.3x equal-width queries/s.
+* exp18 — collective halo exchange: host-halo vs collective-halo flush
+  throughput present for every (shard count, staged batch) cell,
+  bit-identical tables against the scalar oracle, collective rounds
+  actually exchanged with zero capacity-overflow fallbacks.
+  ``--min-devices 8`` demands the sweep reached 8 shards and holds the
+  collective halo >= 1.2x the routed host halo at 8 shards, batch 512.
 """
 from __future__ import annotations
 
@@ -50,6 +56,7 @@ EXP14_DEVICE_FLOOR = 1.3
 EXP15_P99_CEILING = 5.0
 EXP16_SPEEDUP_FLOOR = 1.5
 EXP17_SPEEDUP_FLOOR = 1.3
+EXP18_SPEEDUP_FLOOR = 1.2
 
 
 def _need(meta: dict, key: str):
@@ -347,12 +354,59 @@ def check_exp17(data: dict, min_devices: int | None) -> str:
             f"0 replicas)")
 
 
+def check_exp18(data: dict, min_devices: int | None) -> str:
+    meta = data["meta"]
+    for key in ("exp18.grid", "exp18.k", "exp18.mu", "exp18.batch_sizes",
+                "exp18.devices", "exp18.shard_counts", "exp18.inserts_per_s",
+                "exp18.collective_rounds", "exp18.identical_results",
+                "exp18.speedup_b512"):
+        _need(meta, key)
+    batches = meta["exp18.batch_sizes"]
+    assert batches == [64, 512], f"exp18 batch grid {batches} != [64, 512]"
+    counts = meta["exp18.shard_counts"]
+    assert counts, "exp18 measured no multi-shard counts"
+    names = {r["name"] for r in data["rows"]}
+    per_s = meta["exp18.inserts_per_s"]
+    rounds = meta["exp18.collective_rounds"]
+    for d in counts:
+        for mode in ("host", "collective"):
+            table = per_s[str(d)][mode]
+            for b in batches:
+                assert str(b) in table and table[str(b)] > 0, (
+                    f"exp18 d={d}/{mode} missing b={b}"
+                )
+                assert f"exp18.halo.d{d}.{mode}.b{b}" in names
+        for b in batches:
+            # the collective leg really exchanged halos on device (a run
+            # that silently fell back to the routed path measures nothing)
+            assert rounds[f"d{d}.b{b}"] > 0, (
+                f"exp18 d={d} b={b} ran zero collective halo rounds"
+            )
+    assert meta["exp18.identical_results"] is True, (
+        "exp18 halo tables were not bit-identical to the scalar oracle"
+    )
+    if min_devices and min_devices >= 8:
+        assert meta["exp18.devices"] >= 8, (
+            f"exp18 saw only {meta['exp18.devices']} devices; the "
+            f"multi-device job requires 8 (is XLA_FLAGS/--devices set?)"
+        )
+        assert 8 in counts, f"exp18 sweep {counts} never reached 8 shards"
+        sp = meta["exp18.speedup_b512"]
+        assert sp >= EXP18_SPEEDUP_FLOOR, (
+            f"exp18 collective halo speedup {sp}x < "
+            f"{EXP18_SPEEDUP_FLOOR}x floor at 8 shards/b512"
+        )
+    return (f"exp18 OK: x{meta['exp18.speedup_b512']} collective vs host "
+            f"halo at d{counts[-1]}/b512, shard counts {counts}, "
+            f"bit-identical")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("json_path")
     ap.add_argument("--require", nargs="+", required=True,
                     choices=("exp11", "exp12", "exp13", "exp14", "exp15",
-                             "exp16", "exp17"))
+                             "exp16", "exp17", "exp18"))
     ap.add_argument("--min-devices", type=int, default=None,
                     help="exp13: demand the sweep reached this device count")
     ap.add_argument("--exp12-floor", type=float, default=1.2,
@@ -378,8 +432,10 @@ def main() -> None:
             print(check_exp15(data, args.exp15_ceiling))
         elif exp == "exp16":
             print(check_exp16(data, args.min_devices))
-        else:
+        elif exp == "exp17":
             print(check_exp17(data, args.min_devices))
+        else:
+            print(check_exp18(data, args.min_devices))
     print(f"schema OK: {args.json_path} ({', '.join(args.require)})",
           file=sys.stderr)
 

@@ -254,6 +254,44 @@ def main():
     else:
         print("single shard - boundaries have nowhere to move")
 
+    print("\n== 13. collective halo exchange (device-resident flush repair) ==")
+    # Multi-shard flushes need a halo: when a repair round changes rows on
+    # one shard, the BNS neighborhoods of those rows — wherever they live —
+    # become the next round's candidates, and the frontier's gated rows
+    # cross boundaries the same way. halo="host" (the original seam) routes
+    # those rows through host readbacks + numpy set algebra; the default
+    # halo="collective" keeps every row device-resident: receiver sets
+    # expand as a psum'd presence mask over the sharded BNS CSR, and the
+    # rows themselves move shard-to-shard as capacity-padded
+    # all_gather multicasts — only the integer routing plans go up and one
+    # changed-mask comes back per round. Both modes are bit-identical to
+    # the scalar oracle (tests/core/test_halo.py pins this, and the traffic
+    # guard proves collective flushes never touch the routed host
+    # fetchers); exp18 holds collective >= 1.2x host flush throughput at
+    # 8 shards, batch 512. engine.halo_capacity bounds the padded
+    # per-shard-pair slot count (default 4096, rounded up to powers of
+    # two): a repair round too wide to fit falls back to the routed host
+    # path for that round only — counted in stats()['halo_fallbacks'],
+    # never visible in results. Raise it if fallbacks show up under heavy
+    # churn; lower it to cap exchange buffer memory on wide fan-outs.
+    if sharded.num_shards > 1:
+        sharded.stage_insert(int(np.setdiff1d(np.arange(g.n), sharded.objects)[0]))
+        sharded.flush_updates()
+        hst = sharded.stats()
+        print(f"halo={hst['halo']}: {hst['halo_rounds_collective']} collective "
+              f"rounds, {hst['halo_fallbacks']} overflow fallbacks")
+    else:
+        print("single shard - nothing crosses a boundary")
+    # Cold boots recompile every serving program; a persistent compilation
+    # cache makes the SECOND process boot warm. serve.py --compile-cache DIR
+    # (or the REPRO_COMPILE_CACHE env var) configures it before anything
+    # compiles; programmatically it is one call, safe to leave on:
+    #     from repro.analysis import sanitize
+    #     sanitize.enable_compile_cache("~/.cache/repro-xla")
+    # sanitize.count_compiles() splits real compiles from cache hits
+    # (counter.uncached), which is how the cold-boot budget test holds a
+    # warm-cache boot to the *warm* serving budgets.
+
 
 if __name__ == "__main__":
     main()

@@ -46,6 +46,7 @@ import jax._src.monitoring as _monitoring
 from repro.core.errors import SanitizerError
 
 _COMPILE_EVENT = "backend_compile"
+_CACHE_HIT_EVENT = "/jax/compilation_cache/cache_hits"
 
 
 def enabled() -> bool:
@@ -81,24 +82,64 @@ def guard(tag: str = ""):
 
 
 class CompileCounter:
-    """Number of XLA backend compiles observed while the context was live."""
+    """Number of XLA backend compiles observed while the context was live.
+
+    ``count`` is every backend compile — including ones served from the
+    persistent compilation cache (jax still emits the backend_compile
+    duration event on a cache hit, it is just ~ms instead of ~s).
+    ``cache_hits`` counts the hits, so ``uncached`` (= count - cache_hits)
+    is what a process actually paid to compile from scratch — the number
+    the cold-boot budget pins.
+    """
 
     def __init__(self):
         self.count = 0
+        self.cache_hits = 0
+
+    @property
+    def uncached(self) -> int:
+        return self.count - self.cache_hits
 
     def _listen(self, name: str, duration: float, **kw) -> None:
         if _COMPILE_EVENT in name:
             self.count += 1
+
+    def _listen_event(self, name: str, **kw) -> None:
+        if name == _CACHE_HIT_EVENT:
+            self.cache_hits += 1
 
 
 @contextlib.contextmanager
 def count_compiles():
     counter = CompileCounter()
     _monitoring.register_event_duration_secs_listener(counter._listen)
+    _monitoring.register_event_listener(counter._listen_event)
     try:
         yield counter
     finally:
         _monitoring._unregister_event_duration_listener_by_callback(counter._listen)
+        _monitoring._unregister_event_listener_by_callback(counter._listen_event)
+
+
+def enable_compile_cache(path: str | os.PathLike | None = None) -> Path | None:
+    """Turn on jax's persistent compilation cache at ``path``.
+
+    ``path`` defaults to the ``REPRO_COMPILE_CACHE`` env var; returns the
+    cache directory (created if missing), or None when neither is set (the
+    call is then a no-op, so serve.py can wire it unconditionally). The
+    min-compile-time/min-entry-size floors are zeroed so even the CPU
+    backend's fast compiles persist — the point is cold-boot serving, and
+    a second boot should pay the *warm* budget, not the 28->2 win again.
+    """
+    path = path or os.environ.get("REPRO_COMPILE_CACHE") or None
+    if not path:
+        return None
+    path = Path(path)
+    path.mkdir(parents=True, exist_ok=True)
+    jax.config.update("jax_compilation_cache_dir", str(path))
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0)
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    return path
 
 
 def budgets_path() -> Path:

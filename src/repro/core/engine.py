@@ -282,6 +282,7 @@ class EngineCore:
         self.use_pallas = bool(use_pallas)
         self.bn = bn
         self.frontier = "device"  # validated setter, see the property below
+        self.halo = "collective"  # validated setter, see the property below
         obj = {int(o) for o in np.asarray(objects).ravel()}
         self._objects = obj
         self._pending = set(obj)
@@ -336,6 +337,29 @@ class EngineCore:
                 f"frontier must be 'device' or 'host', got {mode!r}"
             )
         self._frontier = mode
+
+    @property
+    def halo(self) -> str:
+        """How cross-shard state moves during repair/frontier rounds:
+        ``"collective"`` (default) exchanges neighbor rows and gated send
+        rows as capacity-padded ``all_gather`` multicasts inside the
+        shard_map programs, and runs the receiver-set expansion on device;
+        ``"host"`` replays the routed-gather halo (host-mediated fetches,
+        kept as the measurable baseline — see benchmarks exp18 — and as
+        the collective path's bit-identity twin). Same seam pattern as
+        ``frontier``: a plain attribute, safe to flip mid-life (both modes
+        produce identical tables), unknown modes raise. The scalar engine
+        and the 1-shard layout have no shard boundary to exchange across,
+        so the setting is inert there."""
+        return self._halo
+
+    @halo.setter
+    def halo(self, mode: str) -> None:
+        if mode not in ("collective", "host"):
+            raise EngineConfigError(
+                f"halo must be 'collective' or 'host', got {mode!r}"
+            )
+        self._halo = mode
 
     # ------------------------------------------------------------------
     # epochs / durability / fault injection
@@ -724,6 +748,23 @@ class EngineCore:
     def _frontier_part(self, state, part: np.ndarray):
         raise NotImplementedError
 
+    def _frontier_round(self, state, nbrs: np.ndarray):
+        """One frontier round over receiver set ``nbrs``: bucket by BNS
+        degree, run each part, resolve the changed masks once the whole
+        round is queued. A mask may be a deferred readback (the sharded
+        collective halo returns a thunk): resolving after the loop lets
+        the later buckets' plan/upload work overlap the earlier buckets'
+        device compute. The sharded engine overrides this wholesale on
+        the collective path to fuse the round into one program."""
+        pending = []
+        for part in self._bucket_parts(nbrs):
+            state, changed_mask = self._frontier_part(state, part)
+            pending.append((part, changed_mask))
+        changed_parts = [
+            p[(m() if callable(m) else m)[: p.size]] for p, m in pending
+        ]
+        return state, changed_parts
+
     def _frontier_extract(self, state, rows: np.ndarray, src: np.ndarray):
         raise NotImplementedError
 
@@ -773,13 +814,7 @@ class EngineCore:
             )
             if changed_rows.size == 0:
                 break
-            nbrs = np.unique(
-                np.concatenate(
-                    [self.bn.lo_ids[changed_rows].ravel(),
-                     self.bn.hi_ids[changed_rows].ravel()]
-                )
-            )
-            active = np.intersect1d(nbrs[nbrs >= 0], rows).astype(np.int32)
+            active = self._repair_receivers(changed_rows, rows)
         else:
             if active.size:
                 raise RuntimeError(
@@ -827,10 +862,7 @@ class EngineCore:
         rounds = 0
         while active.size and rounds < _MAX_REPAIR_ROUNDS:
             nbrs = self._expand_receivers(active)
-            changed_parts = []
-            for part in self._bucket_parts(nbrs):
-                state, changed_mask = self._frontier_part(state, part)
-                changed_parts.append(part[changed_mask[: part.size]])
+            state, changed_parts = self._frontier_round(state, nbrs)
             rounds += 1
             active = (
                 np.concatenate(changed_parts)
@@ -847,6 +879,24 @@ class EngineCore:
         rows = np.unique(np.concatenate(touched)).astype(np.int32)
         aff, dvals = self._frontier_extract(state, rows, src)
         return (*self._compact_candidates(rows, aff, dvals, src), rounds)
+
+    def _repair_receivers(
+        self, changed: np.ndarray, rows: np.ndarray
+    ) -> np.ndarray:
+        """Next repair round's active set: the BNS neighborhoods of the
+        rows that changed, narrowed to the purged batch. BN adjacency is
+        symmetric, so BNS(changed) IS the set of rows that can improve.
+        The sharded engine overrides this to expand the neighborhood on
+        device when ``halo == "collective"`` — the set is identical (the
+        packed BNS adjacency is exactly lo ∪ hi), only where the set
+        algebra runs moves."""
+        nbrs = np.unique(
+            np.concatenate(
+                [self.bn.lo_ids[changed].ravel(),
+                 self.bn.hi_ids[changed].ravel()]
+            )
+        )
+        return np.intersect1d(nbrs[nbrs >= 0], rows).astype(np.int32)
 
     def _expand_receivers(self, active: np.ndarray) -> np.ndarray:
         """Next round's receiver set: the union of BNS neighborhoods of the

@@ -54,14 +54,21 @@ Execution model
   distance row by its own k-th column (the checkIns test) before the row is
   exchanged, so the pruning bound never leaves its shard and only frontier
   *vertex ids + tentative distances* cross shard boundaries between rounds,
-  through the same routed halo path the repair rounds use.
+  through the same halo path the repair rounds use.
 * Repair rounds: each round, the rows under repair re-merge against their
   bridge neighbors' rows. Neighbor rows may live on other shards, so each
-  round first fetches the (unique) neighbor rows through the same routed
-  gather — the boundary-vertex exchange of distributed moving-object kNN
-  serving (arXiv 2512.23399) — then applies a per-shard merge. Between
-  rounds only the changed-row frontier's *vertex ids* cross shard
-  boundaries (host-side), never row data.
+  round first exchanges the (unique) neighbor rows — the boundary-vertex
+  exchange of distributed moving-object kNN serving (arXiv 2512.23399) —
+  then applies a per-shard merge.
+* Halo modes: under ``halo = "collective"`` (the default) those cross-shard
+  rows move as capacity-padded ``all_gather`` multicasts inside the
+  shard_map programs and the receiver-set expansion runs on device as a
+  psum'd presence mask, so per round only the integer index plans go up
+  and one changed-row mask comes back; a plan that overflows
+  ``halo_capacity`` falls back for that round. ``halo = "host"`` replays
+  the routed-gather baseline (host-fetched unique rows, numpy set
+  algebra) — kept as the exp18 measurable baseline and the collective
+  path's bit-identity twin.
 
 Epochs and routing
 ------------------
@@ -91,7 +98,7 @@ serving mesh; flushes keep writing only the primary layout, and each
 ``_publish_epoch`` ``jax.device_put``s the replicated shards' fresh local
 blocks onto their replica devices in the same atomic swap — so every
 replica serves exactly the primary's epoch snapshot (pinned reads stay
-bit-identical mid-flush) and the five-way oracle equality is untouched. A
+bit-identical mid-flush) and the seven-way oracle equality is untouched. A
 replica fault degrades that batch to the primary-only path and counts a
 ``replica_errors`` stat instead of failing the query.
 
@@ -694,6 +701,154 @@ def _device_fns(mesh: Mesh, block: int, k: int) -> dict:  # replint: disable=REP
         b = dist_g.shape[1]
         return affs.reshape(-1, b)[fidx], ds.reshape(-1, b)[fidx]
 
+    # -- collective halo (device-resident cross-shard rounds) -----------
+    # The host-routed halo above round-trips every cross-shard row through
+    # the host (_fetch_rows / _fetch_send + numpy set algebra). These
+    # programs keep the whole round on device: the host only computes the
+    # *index bookkeeping* (who serves which row — see _halo_plan) and the
+    # rows themselves move shard-to-shard as one tiled all_gather per
+    # round. serve is (S, Umax): serve[src] holds the global padded row
+    # ids shard src must serve (-1 pads) — each unique neighbor of the
+    # round's receivers exactly once, at its owner. After the tiled
+    # all_gather every shard's (S*Umax, ...) receive buffer holds block
+    # src = the rows shard src served, in serve[src] order — which is
+    # exactly how _halo_plan numbers the slot matrix (slot S*Umax = miss).
+    # A multicast layout, not a per-(src, dst)-pair all_to_all split: a
+    # row needed by several receiver shards occupies ONE slot instead of
+    # one per pair, which keeps the padded exchange near the halo's true
+    # size (per-pair padding measured under 10% utilization on skewed
+    # grid boundaries). Candidate construction (ops.halo_candidates /
+    # halo_fold_min) and the local merge are the same trace-level math as
+    # the routed path, so the tables stay bit-identical across halo modes.
+    size = mesh.devices.size * block  # >= n: every vertex id fits
+
+    def expand(nbr_g, aglob):
+        """Device receiver-set expansion: each shard scatters the neighbor
+        ids of its own routed active rows into a shared presence mask (the
+        last slot absorbs -1 pads) and one psum unions the shards — O(E)
+        scatter work instead of sorting an all_gather'd id tensor. The
+        host's flatnonzero of the mask readback is the ascending unique
+        set, exactly ``np.unique`` of the valid neighbor ids."""
+        def blk(na, aq):
+            off = jax.lax.axis_index("shard") * block
+            loc = ops.shard_local_rows(block, aq[0], off)
+            ids = na[loc].ravel()
+            idx = jnp.where(ids < 0, size, ids)
+            mask = jnp.zeros((size + 1,), jnp.int32).at[idx].set(1, mode="drop")
+            return jax.lax.psum(mask, "shard")
+
+        return shard_map(
+            blk, mesh=mesh, in_specs=(spec2, spec2), out_specs=P(None),
+        )(nbr_g, aglob)
+
+    def rhalo(ids_g, d_g, serve, slot, wmat, rglob, del_arr):
+        """One collective repair round: owners serve their slice of the
+        round's unique neighbor rows, one tiled all_gather moves them,
+        purge+merge at the receivers."""
+        def blk(ti, td, sv, sl, wm, rg, dl):
+            off = jax.lax.axis_index("shard") * block
+            loc = ops.shard_local_rows(block, sv[0], off)  # (U,) to serve
+            ri = jax.lax.all_gather(ti[loc], "shard", tiled=True)  # (S*U, k)
+            rd = jax.lax.all_gather(td[loc], "shard", tiled=True)
+            ci, cd = ops.halo_candidates(ri, rd, sl[0], wm[0], k)
+            ni, nd, ch = ops.shard_rows_purge_merge(
+                ti, td, rg[0], off, dl, ci, cd, k,
+                use_pallas=False,  # XLA merge form inside shard_map
+            )
+            return ni, nd, ch[None]
+
+        return shard_map(
+            blk, mesh=mesh,
+            in_specs=(spec2, spec2, spec2, P("shard", None, None),
+                      P("shard", None, None), spec2, P(None)),
+            out_specs=(spec2, spec2, spec2),
+        )(ids_g, d_g, serve, slot, wmat, rglob, del_arr)
+
+    def fhalo(nbr_g, d_g, dist_g, serve, slot, wmat, rglob, src_grow):
+        """One collective frontier round: owners gate their slice of the
+        round's unique tentative-distance rows (the checkIns test — the
+        k-th column never leaves its shard), one tiled all_gather moves
+        the gated rows, and the receivers min-fold + min-update shard-
+        locally. Also psums the NEXT round's receiver-set presence mask
+        from the changed receivers' BNS rows, so the round-to-round
+        expansion costs no extra program dispatch."""
+        def blk(ng, td, fd, sv, sl, wm, rg, sg):
+            off = jax.lax.axis_index("shard") * block
+            loc = ops.shard_local_rows(block, sv[0], off)  # (U,) to serve
+            own = fd[loc]                                  # (U, B)
+            kth = td[:, -1][loc]                           # (U,)
+            gate = (own < kth[:, None]) | (sv[0][:, None] == sg[None, :])
+            recv = jax.lax.all_gather(                     # (S*U, B)
+                jnp.where(gate, own, jnp.inf), "shard", tiled=True
+            )
+            cand = ops.halo_fold_min(recv, sl[0], wm[0])   # (R, B)
+            lr = ops.shard_local_rows(block, rg[0], off)
+            ownr = fd[lr]
+            new = jnp.minimum(ownr, cand)
+            ch = jnp.any(new < ownr, axis=1)
+            # front-packed adjacency: a degree-t bucket's mask scatter
+            # only needs the first t columns of the receivers' rows
+            nb = jnp.where(ch[:, None], ng[lr][:, : sl.shape[-1]], -1)
+            idx = jnp.where(nb < 0, size, nb).ravel()
+            nmask = jnp.zeros((size + 1,), jnp.int32).at[idx].set(1, mode="drop")
+            return fd.at[lr].set(new), ch[None], jax.lax.psum(nmask, "shard")
+
+        return shard_map(
+            blk, mesh=mesh,
+            in_specs=(spec2, spec2, spec2, spec2, P("shard", None, None),
+                      P("shard", None, None), spec2, P(None)),
+            out_specs=(spec2, spec2, P(None)),
+        )(nbr_g, d_g, dist_g, serve, slot, wmat, rglob, src_grow)
+
+    def fhalo_round(nbr_g, d_g, dist_g, src_grow, serves, slots, wmats, rglobs):
+        """One fused collective frontier ROUND: every degree bucket's
+        gate + all_gather + min-fold + min-update runs inside a single
+        program, each bucket over its OWN serve slab (so the exchange
+        volume equals the per-bucket fhalo calls it replaces). The
+        tentative-distance state threads bucket-to-bucket — bucket b+1
+        gates and gathers rows bucket b just improved — which is exactly
+        the sequential per-part schedule the scalar and host-routed
+        pipelines run, so not only the fixpoint but the whole ROUND
+        TRAJECTORY matches them (test_sharded pins round counts
+        engine-to-engine). Fusing the round into one dispatch (plus the
+        psum'd next-round receiver mask) is what cuts the per-round
+        overhead ~3x against per-bucket fhalo calls."""
+        def blk(ng, td, fd, sg, svs, sls, wms, rgs):
+            off = jax.lax.axis_index("shard") * block
+            chs = []
+            nmask = jnp.zeros((size + 1,), jnp.int32)
+            for sv, sl, wm, rg in zip(svs, sls, wms, rgs):
+                loc = ops.shard_local_rows(block, sv[0], off)
+                own = fd[loc]                              # (U, B)
+                kth = td[:, -1][loc]                       # (U,)
+                gate = (own < kth[:, None]) | (sv[0][:, None] == sg[None, :])
+                recv = jax.lax.all_gather(                 # (S*U, B)
+                    jnp.where(gate, own, jnp.inf), "shard", tiled=True
+                )
+                cand = ops.halo_fold_min(recv, sl[0], wm[0])
+                lr = ops.shard_local_rows(block, rg[0], off)
+                ownr = fd[lr]
+                new = jnp.minimum(ownr, cand)
+                ch = jnp.any(new < ownr, axis=1)
+                fd = fd.at[lr].set(new)
+                chs.append(ch[None])
+                # receivers in a degree-t bucket have <= t live neighbors
+                # and the packed adjacency is front-packed, so the mask
+                # scatter only needs the first t columns of their rows
+                nb = jnp.where(ch[:, None], ng[lr][:, : sl.shape[-1]], -1)
+                idx = jnp.where(nb < 0, size, nb).ravel()
+                nmask = nmask.at[idx].set(1, mode="drop")
+            return fd, tuple(chs), jax.lax.psum(nmask, "shard")
+
+        nb_ = len(slots)
+        return shard_map(
+            blk, mesh=mesh,
+            in_specs=(spec2, spec2, spec2, P(None), [spec2] * nb_,
+                      [P("shard", None, None)] * nb_,
+                      [P("shard", None, None)] * nb_, [spec2] * nb_),
+            out_specs=(spec2, (spec2,) * nb_, P(None)),
+        )(nbr_g, d_g, dist_g, src_grow, serves, slots, wmats, rglobs)
+
     # -- replica fan-out gather, two-phase ------------------------------
     # The serving mesh is wider than the shard mesh (primaries + replica
     # slots), so the one-jit gather's epilogue — reshape + [fidx] on a
@@ -732,6 +887,10 @@ def _device_fns(mesh: Mesh, block: int, k: int) -> dict:  # replint: disable=REP
         "fsend": jax.jit(fsend),
         "fmin": jax.jit(fmin),
         "faff": jax.jit(faff),
+        "expand": jax.jit(expand),
+        "rhalo": jax.jit(rhalo),
+        "fhalo": jax.jit(fhalo),
+        "fhalo_round": jax.jit(fhalo_round, static_argnames=()),
     }
     return _DEVICE_FN_CACHE[key]
 
@@ -817,6 +976,22 @@ class ShardedQueryEngine(EngineCore):
         # repartition-on-flush state: boundaries staged for the next flush
         self._pending_layout: ShardLayout | None = None
         self._partition_stats = {"repartitions": 0}
+        # collective halo state: the sharded BNS adjacency in the CURRENT
+        # row layout (built lazily, dropped on every layout change so halo
+        # row maps can never outlive their boundaries), plus the per-round
+        # all_gather capacity cap — a round whose padded per-owner served-
+        # row count exceeds it falls back to the routed host halo
+        self._nbr_glob_g: jax.Array | None = None
+        self.halo_capacity = 4096
+        self._halo_stats = {
+            "halo_rounds_collective": 0,
+            "halo_fallbacks": 0,
+        }
+        # fused receiver-set expansion: collective frontier rounds psum
+        # the next round's presence mask as a side output; None = not
+        # armed (first round / host parts seen — expand runs standalone)
+        self._fmask: list | None = None
+        self._fmask_ok = True
         # replica serving state (inactive until set_replication installs a
         # plan): the serving mesh spans primaries + extra replica devices
         self.replica_policy = "round_robin"
@@ -1091,6 +1266,10 @@ class ShardedQueryEngine(EngineCore):
         self.shard_rows = lay.shard_rows
         self._g_of_v = lay.padded_rows(np.arange(self.n, dtype=np.int64))
         self._make_device_fns(self.k)
+        # the sharded BNS adjacency is laid out by vertex -> padded-row,
+        # so a boundary change invalidates it (rebuilt lazily on the next
+        # collective round — under the NEW layout's row map)
+        self._nbr_glob_g = None
         if self._serving_mesh is not None:
             self._serving_fns = _device_fns(self._serving_mesh, lay.block, self.k)
 
@@ -1199,6 +1378,10 @@ class ShardedQueryEngine(EngineCore):
         self._fsend_fn = fns["fsend"]
         self._fmin_fn = fns["fmin"]
         self._faff_fn = fns["faff"]
+        self._expand_fn = fns["expand"]
+        self._rhalo_fn = fns["rhalo"]
+        self._fhalo_fn = fns["fhalo"]
+        self._fhalo_round_fn = fns["fhalo_round"]
 
     # ------------------------------------------------------------------
     # explicit host -> mesh uploads. Every operand of the shard_map
@@ -1478,17 +1661,17 @@ class ShardedQueryEngine(EngineCore):
         self._apply_rows(rows, deletes, cand_ids, cand_d)
 
     def _repair_part(self, part: np.ndarray) -> np.ndarray:
-        """One per-shard Jacobi re-merge of ``part`` against its bridge
-        neighborhoods: fetch the unique neighbor rows (cross-shard halo,
-        one routed gather), build the shifted candidate lists on host, and
-        apply the shard-local merge. Identical candidate multisets to the
-        scalar engine's repair round, so the merged rows are bit-identical.
+        """One Jacobi re-merge of ``part`` against its bridge neighborhoods.
 
         At one shard there is no boundary to exchange across — every
         neighbor row is local — so the round degenerates to the scalar
         engine's device-resident repair (the 1-shard global layout IS the
         scalar (n+1, k) layout), sharing its jitted program; that is what
-        keeps the exp13 single-shard parity floor honest.
+        keeps the exp13 single-shard parity floor honest. Multi-shard, the
+        cross-shard halo runs per ``self.halo``: the collective all_gather
+        round (overflow falls back for this round), or the routed-gather
+        baseline. Identical candidate multisets to the scalar engine's
+        repair round either way, so the merged rows are bit-identical.
         """
         if self.num_shards == 1:
             from repro.core.engine import _repair_round
@@ -1498,6 +1681,17 @@ class ShardedQueryEngine(EngineCore):
                 nbr_tab, w_tab, self._pad_rows(part), self._ids_g, self._d_g
             )
             return np.asarray(changed)
+        if self.halo == "collective":
+            out = self._repair_part_collective(part)
+            if out is not None:
+                return out
+            self._halo_stats["halo_fallbacks"] += 1
+        return self._repair_part_host(part)
+
+    def _repair_part_host(self, part: np.ndarray) -> np.ndarray:
+        """Routed-gather repair round: fetch the unique neighbor rows
+        (cross-shard halo, one routed gather through the host), build the
+        shifted candidate lists on host, apply the shard-local merge."""
         k = self.k
         t = self._t_bucket(part)
         nbr = self._nbr_ids[part, :t]
@@ -1516,11 +1710,133 @@ class ShardedQueryEngine(EngineCore):
         cand_d = np.where(cand_ids < 0, np.float32(np.inf), cand_d)
         return self._apply_rows(part, [], cand_ids, cand_d)
 
+    def _repair_part_collective(self, part: np.ndarray) -> np.ndarray | None:
+        """Collective repair round: one fused rhalo program (serve rows,
+        all_gather, purge+merge) — the rows never visit the host. Returns
+        None when the round's halo exceeds ``halo_capacity`` (the caller
+        falls back to the routed path for this round)."""
+        t = self._t_bucket(part)
+        plan = self._halo_plan(part, self._nbr_ids[part, :t], self._nbr_w[part, :t])
+        if plan is None:
+            return None
+        serve, slotm, wm, rglob, order, o_sorted, slot = plan
+        self._ids_g, self._d_g, changed = self._rhalo_fn(
+            self._ids_g, self._d_g, self._put_shard(serve),
+            self._put_shard(slotm), self._put_shard(wm),
+            self._put_shard(rglob), self._put_repl(self._padded_deletes([])),
+        )
+        self._halo_stats["halo_rounds_collective"] += 1
+        changed = np.asarray(changed)
+        out = np.zeros(len(part), dtype=bool)
+        out[order] = changed[o_sorted, slot]
+        return out
+
+    def _halo_plan(self, part: np.ndarray, nbr: np.ndarray, w: np.ndarray):
+        """Index bookkeeping for one collective halo round (repair or
+        frontier): which unique neighbor rows each owner serves, and where
+        each receiver finds its neighbors in the all_gather receive
+        buffer.
+
+        Returns ``(serve, slotm, wm, rglob, order, o_sorted, slot)`` or
+        None when the padded per-owner served-row count exceeds
+        ``halo_capacity``:
+
+        - ``serve`` (S, Umax): global padded rows shard *src* serves
+          (-1 pads) — every unique neighbor of ``part`` appears exactly
+          once, in its owner's slice (multicast: receivers on every shard
+          read the same served copy);
+        - ``slotm`` (S, rmax, t): per-receiver position of each neighbor
+          in the flattened (S*Umax) receive buffer (S*Umax = miss, which
+          the device fold/candidate ops mask to (-1, +inf));
+        - ``wm``    (S, rmax, t) edge weights, ``rglob`` (S, rmax) global
+          receiver rows (-1 pads), both in the grouped-by-owner layout;
+        - ``order/o_sorted/slot``: the group-by-owner permutation that
+          maps the grouped changed-mask back to ``part`` order.
+
+        Every row map goes through the CURRENT epoch's ``ShardLayout``
+        (``owner`` / ``padded_rows``) — never flat ``vertex // block``
+        arithmetic — so uneven ranges and live repartitions route the halo
+        exactly like queries and deletes.
+        """
+        lay = self.routing.current_layout
+        s = self.num_shards
+        t = nbr.shape[1]
+        valid = nbr >= 0
+        uniq, inv = np.unique(nbr[valid], return_inverse=True)
+        own_u = lay.owner(uniq)
+        order_u, src_sorted, within, umax = self._group_by_owner(own_u)
+        umax = _pow2_pad(umax, lo=16)
+        if umax > self.halo_capacity:
+            return None
+        serve = np.full((s, umax), -1, np.int32)
+        serve[src_sorted, within] = lay.padded_rows(uniq[order_u], src_sorted)
+        pos = np.empty(len(uniq), np.int64)
+        pos[order_u] = src_sorted * umax + within
+        sm = np.full(nbr.shape, s * umax, np.int64)
+        sm[valid] = pos[inv]
+        order, o_sorted, slot, rmax = self._group_by_owner(lay.owner(part))
+        rmax = _pow2_pad(rmax, lo=16)
+        slotm = np.full((s, rmax, t), s * umax, np.int32)
+        wm = np.zeros((s, rmax, t), np.float32)
+        rglob = np.full((s, rmax), -1, np.int32)
+        slotm[o_sorted, slot] = sm[order]
+        wm[o_sorted, slot] = w[order]
+        rglob[o_sorted, slot] = lay.padded_rows(part[order], o_sorted)
+        return serve, slotm, wm, rglob, order, o_sorted, slot
+
+    def _nbr_glob(self) -> jax.Array:
+        """The sharded (S*(R+1), cap) BNS adjacency in the CURRENT row
+        layout (vertex v's padded neighbor ids at row ``_g_of_v[v]``, all
+        ``-1`` on pad rows), built lazily and dropped by ``_apply_layout``
+        so the device expansion can never gather through stale boundaries."""
+        if self._nbr_glob_g is None:
+            self._nbr_tables()
+            rows = self.num_shards * (self.shard_rows + 1)
+            self._nbr_glob_g = self._put_shard(
+                self.bn.bns_packed().relayout_rows(rows, self._g_of_v)
+            )
+        return self._nbr_glob_g
+
+    def _expand_receivers(self, active: np.ndarray) -> np.ndarray:
+        if self.num_shards == 1 or self.halo != "collective":
+            return super()._expand_receivers(active)
+        # if the previous frontier round ran fully collective, its fhalo
+        # programs already psum'd this round's presence mask (neighbors of
+        # exactly the changed = active rows) — read those instead of
+        # dispatching a standalone expansion
+        masks, ok = self._fmask, self._fmask_ok
+        self._fmask, self._fmask_ok = [], True  # arm for the coming round
+        if masks and ok:
+            m = np.sum([np.asarray(x)[:-1] for x in masks], axis=0)
+            return np.flatnonzero(m).astype(np.int32)
+        return self._expand_receivers_device(active)
+
+    def _expand_receivers_device(self, active: np.ndarray) -> np.ndarray:
+        """Device receiver-set expansion: route the active vertices to
+        their owners, scatter their padded BNS rows into a psum'd presence
+        mask on device, read back the mask and flatnonzero it — ascending
+        unique. Exactly ``np.unique`` of the host CSR expansion — pinned
+        by test."""
+        aglob, _ = self._route(active)
+        mask = np.asarray(self._expand_fn(self._nbr_glob(), self._put_shard(aglob)))
+        return np.flatnonzero(mask[:-1]).astype(np.int32)
+
+    def _repair_receivers(
+        self, changed: np.ndarray, rows: np.ndarray
+    ) -> np.ndarray:
+        if self.num_shards == 1 or self.halo != "collective":
+            return super()._repair_receivers(changed, rows)
+        self._nbr_tables()
+        return np.intersect1d(
+            self._expand_receivers_device(changed), rows
+        ).astype(np.int32)
+
     # ------------------------------------------------------------------
     # frontier provider (shard-local checkIns)
     # ------------------------------------------------------------------
 
     def _frontier_init(self, src: np.ndarray):
+        self._fmask, self._fmask_ok = None, True  # round 1 expands standalone
         srcp = self._frontier_pad_src(src)
         self._fsrc = jnp.asarray(srcp)  # vertex ids (the 1-shard scalar path)
         grow = np.full(srcp.shape, -1, np.int64)
@@ -1534,18 +1850,17 @@ class ShardedQueryEngine(EngineCore):
         return self._finit_fn(self._fsrc_g)
 
     def _frontier_part(self, state, part: np.ndarray):
-        """One shard-local frontier round over one receiver bucket: fetch
-        the gated neighbor send rows (cross-shard halo, one routed gather —
-        the owner applies the checkIns gate before its tentative distances
-        leave the shard, so the k-th column itself never moves), fold the
-        edge shift + min over neighbors on host, and apply the per-shard
-        min-update. Identical candidate values to the scalar engine's
-        ``ops.frontier_relax`` round, so the dist trajectories — and hence
-        the affected sets and candidate distances — are bit-identical.
+        """One shard-local frontier round over one receiver bucket.
 
         At one shard every neighbor row is local and the global layout IS
         the scalar (n+1, B) layout, so the round degenerates to the scalar
         engine's device-resident program (shared jit cache, exp14 parity).
+        Multi-shard, the cross-shard halo runs per ``self.halo`` — the
+        fused collective fhalo round (overflow falls back for this round)
+        or the routed-gather baseline below. Identical candidate values to
+        the scalar engine's ``ops.frontier_relax`` round either way, so
+        the dist trajectories — and hence the affected sets and candidate
+        distances — are bit-identical.
         """
         if self.num_shards == 1:
             from repro.core.engine import _frontier_round
@@ -1556,6 +1871,108 @@ class ShardedQueryEngine(EngineCore):
                 self._fsrc, self.use_pallas,
             )
             return state, np.asarray(changed)
+        if self.halo == "collective":
+            out = self._frontier_part_collective(state, part)
+            if out is not None:
+                return out
+            self._halo_stats["halo_fallbacks"] += 1
+        # a routed part contributes nothing to the fused presence mask, so
+        # the round's expansion must run standalone
+        self._fmask_ok = False
+        return self._frontier_part_host(state, part)
+
+    def _frontier_part_collective(self, state, part: np.ndarray):
+        """Collective frontier round: one fused fhalo program (gate,
+        all_gather, min-fold, min-update) — gated distance rows move
+        shard-to-shard without visiting the host. Returns None on capacity
+        overflow (the caller falls back to the routed path for this
+        round). The changed mask comes back as a thunk: the device value
+        is only read when the round closes, so the plan/upload work for
+        the round's remaining buckets overlaps the device compute instead
+        of stalling on a per-part readback."""
+        t = self._t_bucket(part)
+        plan = self._halo_plan(part, self._nbr_ids[part, :t], self._nbr_w[part, :t])
+        if plan is None:
+            return None
+        serve, slotm, wm, rglob, order, o_sorted, slot = plan
+        state, changed, nmask = self._fhalo_fn(
+            self._nbr_glob(), self._d_g, state, self._put_shard(serve),
+            self._put_shard(slotm), self._put_shard(wm),
+            self._put_shard(rglob), self._fsrc_g,
+        )
+        if self._fmask is not None:
+            self._fmask.append(nmask)
+        self._halo_stats["halo_rounds_collective"] += 1
+
+        def resolve(changed=changed, order=order, o_sorted=o_sorted, slot=slot):
+            cm = np.asarray(changed)
+            out = np.zeros(len(part), dtype=bool)
+            out[order] = cm[o_sorted, slot]
+            return out
+
+        return state, resolve
+
+    def _frontier_round(self, state, nbrs: np.ndarray):
+        if self.num_shards == 1 or self.halo != "collective":
+            return super()._frontier_round(state, nbrs)
+        out = self._frontier_round_collective(state, nbrs)
+        if out is not None:
+            return out
+        self._halo_stats["halo_fallbacks"] += 1
+        # the fused round overflowed halo_capacity: re-run bucketed (each
+        # part retries the per-part collective program, then the routed
+        # host path), and let the round's expansion run standalone
+        self._fmask_ok = False
+        return super()._frontier_round(state, nbrs)
+
+    def _frontier_round_collective(self, state, nbrs: np.ndarray):
+        """One fused collective frontier round: a single fhalo_round
+        program runs every degree bucket's gate/all_gather/fold/min-update
+        back to back, each bucket over its own ``_halo_plan`` serve slab.
+        Returns None when any bucket's serve set overflows
+        ``halo_capacity`` (the caller falls back to the bucketed path).
+        The state threads bucket-to-bucket inside the program — the same
+        sequential schedule as the per-part paths — so the round
+        trajectories, not just the fixpoint, match the scalar engine."""
+        parts = list(self._bucket_parts(nbrs))
+        if not parts:
+            return state, []
+        serves, slots, wms, rglobs, maps = [], [], [], [], []
+        for part in parts:
+            t = self._t_bucket(part)
+            plan = self._halo_plan(
+                part, self._nbr_ids[part, :t], self._nbr_w[part, :t]
+            )
+            if plan is None:
+                return None
+            serve, slotm, wm, rglob, order, o_sorted, slot = plan
+            serves.append(self._put_shard(serve))
+            slots.append(self._put_shard(slotm))
+            wms.append(self._put_shard(wm))
+            rglobs.append(self._put_shard(rglob))
+            maps.append((part, order, o_sorted, slot))
+        state, chs, nmask = self._fhalo_round_fn(
+            self._nbr_glob(), self._d_g, state, self._fsrc_g,
+            serves, slots, wms, rglobs,
+        )
+        if self._fmask is not None:
+            self._fmask.append(nmask)
+        self._halo_stats["halo_rounds_collective"] += len(parts)
+        changed_parts = []
+        for ch, (part, order, o_sorted, slot) in zip(chs, maps):
+            cm = np.asarray(ch)
+            out = np.zeros(len(part), dtype=bool)
+            out[order] = cm[o_sorted, slot]
+            changed_parts.append(part[out])
+        return state, changed_parts
+
+    def _frontier_part_host(self, state, part: np.ndarray):
+        """Routed-gather frontier round: fetch the gated neighbor send
+        rows (cross-shard halo, one routed gather through the host — the
+        owner applies the checkIns gate before its tentative distances
+        leave the shard, so the k-th column itself never moves), fold the
+        edge shift + min over neighbors on host, apply the per-shard
+        min-update."""
         t = self._t_bucket(part)
         nbr = self._nbr_ids[part, :t]
         w = self._nbr_w[part, :t]
@@ -1672,6 +2089,8 @@ class ShardedQueryEngine(EngineCore):
             "range_rows": [int(w) for w in lay.widths],
             "uneven_ranges": not lay.is_equal,
             "repartitions": self._partition_stats["repartitions"],
+            "halo": self.halo,
+            **self._halo_stats,
             "replication": dict(self.routing.replication),
             "replica_slots": self.routing.num_slots,
             "replica_policy": self.replica_policy,

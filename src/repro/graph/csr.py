@@ -87,6 +87,19 @@ class PaddedCSR:
     w: np.ndarray        # (n+1, t) float32, +inf on pads
     deg: np.ndarray      # (n+1,) int32 per-row valid count (dummy row: 0)
 
+    def relayout_rows(self, padded_rows: int, row_of_v: np.ndarray) -> np.ndarray:
+        """Neighbor-id table re-laid into a partitioned row layout.
+
+        ``row_of_v`` maps vertex v to its row in a ``padded_rows``-row
+        partitioned layout (the sharded engine's vertex -> global-padded-row
+        map); the result holds vertex v's padded neighbor ids at
+        ``row_of_v[v]`` and all ``-1`` on the layout's pad rows — the
+        per-shard CSR slice the device receiver-set expansion gathers from.
+        """
+        out = np.full((padded_rows, self.ids.shape[1]), -1, np.int32)
+        out[np.asarray(row_of_v, np.int64)] = self.ids[: self.n]
+        return out
+
 
 def padded_csr(ids: np.ndarray, w: np.ndarray) -> PaddedCSR:
     """Build a ``PaddedCSR`` from raw padded ``(n, t)`` id/weight tables.

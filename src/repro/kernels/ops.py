@@ -354,6 +354,88 @@ def shard_rows_purge_merge(
     return vk_ids.at[loc].set(m_ids), vk_d.at[loc].set(m_d), changed
 
 
+# ----------------------------------------------------------------------
+# Collective-halo building blocks. The sharded engine's all_gather halo
+# programs (sharded._device_fns: "expand" / "rhalo" / "fhalo") are thin
+# shard_map shells around these trace-level pieces, so the candidate
+# construction stays bit-identical to the host-routed halo (same neighbor-
+# major column order, same pad-sentinel semantics) and unit-testable
+# outside a mesh.
+# ----------------------------------------------------------------------
+
+_I32_SENTINEL = 2**31 - 1  # sorts past every valid vertex id
+
+
+def masked_unique(x: jax.Array) -> jax.Array:
+    """Sorted unique of the non-negative entries of ``x``, -1 padded.
+
+    Fixed-shape (same length as the input) device dedup: invalid entries
+    (< 0) map to an int32 sentinel that sorts last, a sort groups
+    duplicates, the first-of-run mask keeps one representative, and a
+    second sort compacts the survivors to the front. The output is the
+    ascending unique set followed by -1 pads — exactly ``np.unique`` of
+    the valid entries, which is what pins the device receiver-set
+    expansion to the host set-algebra oracle.
+    """
+    s = jnp.sort(jnp.where(x < 0, _I32_SENTINEL, x).astype(jnp.int32).ravel())
+    first = jnp.concatenate([jnp.ones(1, bool), s[1:] != s[:-1]])
+    keep = first & (s < _I32_SENTINEL)
+    compact = jnp.sort(jnp.where(keep, s, _I32_SENTINEL))
+    return jnp.where(compact == _I32_SENTINEL, -1, compact)
+
+
+def halo_candidates(
+    recv_ids: jax.Array,  # (M, k) int32 received neighbor rows
+    recv_d: jax.Array,    # (M, k) float32
+    slot: jax.Array,      # (B, t) int32 recv-buffer row per neighbor (M = miss)
+    w: jax.Array,         # (B, t) float32 edge weights (pad value irrelevant)
+    k: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Received halo rows -> per-receiver (B, t*k) repair candidates.
+
+    The same shift-and-flatten the host-routed repair performs on numpy
+    (``_repair_part``): candidate order is neighbor-major / table-column-
+    minor, pad entries (id < 0, including every miss slot — ``slot == M``
+    reads clamp to the last row and the miss mask forces id -1) carry +inf
+    distances. float32 add on device == float32 add on host, so the
+    merged tables stay bit-identical across halo modes.
+    """
+    b, t = slot.shape
+    m = recv_ids.shape[0]
+    safe = jnp.minimum(slot, m - 1)
+    g_ids = jnp.where((slot < m)[..., None], recv_ids[safe], -1)  # (B, t, k)
+    g_d = w[..., None] + recv_d[safe]
+    cand_ids = g_ids.reshape(b, t * k)
+    cand_d = jnp.where(cand_ids < 0, jnp.inf, g_d.reshape(b, t * k))
+    return cand_ids, cand_d.astype(jnp.float32)
+
+
+def halo_fold_min(
+    recv: jax.Array,  # (M, B) float32 received gated send rows
+    slot: jax.Array,  # (R, t) int32 recv-buffer row per neighbor (M = miss)
+    w: jax.Array,     # (R, t) float32 edge weights
+) -> jax.Array:
+    """Received frontier send rows -> per-receiver (R, B) min-folded cand.
+
+    One neighbor column at a time — (R, B) intermediates, never the
+    (R, t, B) tensor — mirroring both ``ops.frontier_relax``'s fori_loop
+    form and the host-routed fold in ``_frontier_part``. Miss slots
+    (``slot == M``) clamp their gather to the last row and are masked to
+    +inf, so no sentinel row is ever materialized; min is fold-order-
+    insensitive, so the distance trajectories stay bit-identical.
+    """
+    t = slot.shape[1]
+    m = recv.shape[0]
+
+    def body(j, cand):
+        sl = slot[:, j]
+        row = w[:, j, None] + recv[jnp.minimum(sl, m - 1)]
+        return jnp.minimum(cand, jnp.where((sl < m)[:, None], row, jnp.inf))
+
+    init = jnp.full((slot.shape[0], recv.shape[1]), jnp.inf, jnp.float32)
+    return jax.lax.fori_loop(0, t, body, init)
+
+
 @functools.partial(jax.jit, static_argnames=("k", "use_pallas", "interpret"))
 def rows_purge(
     vk_ids: jax.Array,   # (n+1, k) int32 live table

@@ -63,11 +63,18 @@ shard count, range boundaries, replication and routing policy:
       --partition shards=4,ranges=auto --hot-shard 0 --hot-frac 0.9
 
 ``ranges=auto`` watches the same sliding query histogram the auto-replica
-watcher uses, but per *vertex*: after the warmup rounds it proposes
+watcher uses, but per *vertex*, as a continuous drift detector: whenever
+the window's balance ratio decays past ``--rebalance-ratio`` it proposes
 traffic-balanced boundaries (``propose_starts``) and repartitions on the
 next flush — pinned readers on old epochs keep their old boundaries, new
-queries route by the new ones. The JSON stats report the active plan under
-``"partition"``.
+queries route by the new ones — then keeps watching, so a traffic shift
+mid-run (``--hot-flip-round``) triggers a second re-split after the
+cooldown. The JSON stats report the active plan under ``"partition"`` and
+the re-split history under ``"repartition_rounds"``.
+
+``--compile-cache DIR`` (or ``REPRO_COMPILE_CACHE``) persists compiled XLA
+executables across processes, so a cold boot over a warm cache dir skips
+the expensive compiles.
 """
 from __future__ import annotations
 
@@ -232,6 +239,17 @@ def _parse_replicate(spec: str) -> tuple:
         raise SystemExit(f"--replicate wants SHARD:R or auto:R (R >= 1), got {spec!r}")
 
 
+def _hot_range(engine, shard: int, n: int) -> tuple[int, int]:
+    """The hot shard's vertex range, read from the live routing boundaries
+    (under uneven or repartitioned ranges the shards are not equal-width
+    slices — always derive the range from ``engine.routing.starts``)."""
+    starts = engine.routing.starts
+    shard = shard % len(starts)
+    lo = int(starts[shard])
+    hi = int(starts[shard + 1]) if shard + 1 < len(starts) else n
+    return (min(lo, n - 1), min(max(hi, lo + 1), n))
+
+
 def _draw_queries(rng, n: int, batch: int, hot_range, hot_frac: float) -> np.ndarray:
     """Uniform query batch, with ``hot_frac`` of it redirected into
     ``hot_range`` (the skewed-city traffic model exp16 benchmarks)."""
@@ -309,22 +327,24 @@ def serve_knn(args) -> dict:
         replicated_shard = min(engine.routing.replication)
     hot_range = None
     if plan is not None and args.hot_frac:
-        # the hot shard's vertex range, read from the routing boundaries
-        # (under uneven ranges the shards are not equal-width slices)
-        starts = engine.routing.starts
-        lo = int(starts[args.hot_shard % len(starts)])
-        hi = (
-            int(starts[args.hot_shard + 1])
-            if args.hot_shard + 1 < len(starts) else g.n
-        )
-        hot_range = (min(lo, g.n - 1), min(max(hi, lo + 1), g.n))
+        hot_range = _hot_range(engine, args.hot_shard, g.n)
     # sliding query histograms: per-shard owner counts pick the hot shard
-    # for --replicate auto; the per-vertex counts feed propose_starts for
-    # ranges=auto (repartition-on-flush once the warmup rounds trust it)
+    # for --replicate auto; the per-vertex window feeds the ranges=auto
+    # drift detector (continuous re-splits, see below)
     hist: deque = deque(maxlen=16)
     auto_ranges = plan is not None and plan.ranges == "auto" and engine.num_shards > 1
-    vhist = np.zeros(g.n, np.int64) if auto_ranges else None
-    repartitioned_at = None
+    # ranges=auto is a continuous drift detector, not a one-shot warmup
+    # split: a sliding per-vertex histogram window tracks live traffic, and
+    # whenever its balance ratio (the hottest shard's share x S, 1.0 =
+    # perfectly balanced) decays past --rebalance-ratio — the initial
+    # unbalanced boundaries, or the zipf city moving after a traffic flip —
+    # the splitter proposes fresh boundaries and the engine repartitions on
+    # the next flush. --rebalance-cooldown rounds separate re-splits so one
+    # drift doesn't thrash the layout while the window still mixes old and
+    # new traffic.
+    vwin: deque = deque(maxlen=args.rebalance_window)
+    repartition_rounds: list[int] = []
+    balance_ratio = None
 
     rng = np.random.default_rng(args.seed + 1)
     mset = set(engine.objects.tolist())
@@ -346,6 +366,16 @@ def serve_knn(args) -> dict:
     errors = 0
     last_error = None
     for rnd in range(rounds):
+        if args.hot_flip_round and rnd + 1 == args.hot_flip_round:
+            # the zipf city moves: re-aim the skewed traffic at another
+            # shard's vertex range (read from the *current* boundaries,
+            # which a prior re-split may have moved)
+            flip_to = (
+                args.hot_shard2
+                if args.hot_shard2 is not None
+                else (args.hot_shard + engine.num_shards // 2) % engine.num_shards
+            )
+            hot_range = _hot_range(engine, flip_to, g.n)
         us = _draw_queries(rng, g.n, batch, hot_range, args.hot_frac)
         t0 = time.perf_counter()
         ids, dists = engine.query_batch(us)
@@ -353,13 +383,29 @@ def serve_knn(args) -> dict:
         t_query += time.perf_counter() - t0
         queries += batch
 
-        if auto_ranges and repartitioned_at is None:
-            vhist += np.bincount(us, minlength=g.n)
-            if rnd + 1 >= 3:  # enough warmup traffic to trust the histogram
-                starts = knn.propose_starts(vhist, engine.num_shards)
-                engine.repartition(starts)  # rides a fresh epoch; old epochs
-                repartitioned_at = rnd + 1  # keep their old boundaries
-                hist.clear()  # owner counts below reflect the new boundaries
+        if auto_ranges:
+            vwin.append(np.bincount(us, minlength=g.n))
+            wsum = np.sum(vwin, axis=0)
+            starts = engine.routing.starts
+            bounds = np.append(starts, g.n)
+            shares = np.add.reduceat(wsum, bounds[:-1])
+            balance_ratio = float(
+                shares.max() * engine.num_shards / max(wsum.sum(), 1)
+            )
+            cooled = (
+                not repartition_rounds
+                or rnd + 1 - repartition_rounds[-1] >= args.rebalance_cooldown
+            )
+            if (
+                rnd + 1 >= 3  # enough warmup traffic to trust the window
+                and cooled
+                and balance_ratio > args.rebalance_ratio
+            ):
+                proposed = knn.propose_starts(wsum, engine.num_shards)
+                if not np.array_equal(proposed, starts):
+                    engine.repartition(proposed)  # rides a fresh epoch; old
+                    repartition_rounds.append(rnd + 1)  # epochs keep theirs
+                    hist.clear()  # owner counts now track the new boundaries
 
         if auto_reps and replicated_shard is None:
             hist.append(
@@ -405,7 +451,11 @@ def serve_knn(args) -> dict:
         "replicate": args.replicate,
         "replicated_shard": replicated_shard,
         "partition": engine.partition_plan().describe() if plan is not None else None,
-        "repartitioned_at_round": repartitioned_at,
+        "repartitioned_at_round": (
+            repartition_rounds[0] if repartition_rounds else None
+        ),
+        "repartition_rounds": repartition_rounds,
+        "balance_ratio": round(balance_ratio, 4) if balance_ratio else None,
         "hot_frac": args.hot_frac,
         "queries_per_s": round(queries / max(t_query, 1e-9), 1),
         "updates_per_s": round(updates / max(t_update, 1e-9), 1) if updates else 0.0,
@@ -482,8 +532,37 @@ def main():
                     help="knn sharded: fraction of each query batch drawn "
                          "from the hot shard's vertex range (skewed-city "
                          "traffic; 0 = uniform)")
+    ap.add_argument("--hot-flip-round", type=int, default=0, metavar="ROUND",
+                    help="knn sharded: at round ROUND re-aim --hot-frac "
+                         "traffic at another shard's range (the zipf city "
+                         "moving mid-run; exercises the ranges=auto drift "
+                         "detector's second re-split)")
+    ap.add_argument("--hot-shard2", type=int, default=None,
+                    help="knn sharded: the shard --hot-flip-round re-aims "
+                         "traffic at (default: the shard opposite "
+                         "--hot-shard)")
+    ap.add_argument("--rebalance-ratio", type=float, default=1.25,
+                    help="knn ranges=auto: re-split when the sliding "
+                         "window's balance ratio (hottest shard share x S, "
+                         "1.0 = balanced) exceeds this")
+    ap.add_argument("--rebalance-window", type=int, default=16,
+                    help="knn ranges=auto: rounds of per-vertex query "
+                         "history the drift detector slides over")
+    ap.add_argument("--rebalance-cooldown", type=int, default=4,
+                    help="knn ranges=auto: minimum rounds between re-splits")
+    ap.add_argument("--compile-cache", default=None, metavar="DIR",
+                    help="persistent XLA compilation cache directory "
+                         "(REPRO_COMPILE_CACHE env var is the fallback); a "
+                         "second process over the same dir skips cold "
+                         "compiles")
     ap.add_argument("--use-pallas", action="store_true")
     args = ap.parse_args()
+
+    from repro.analysis import sanitize
+
+    # must run before anything compiles: the cache dir only helps programs
+    # compiled after it is configured
+    sanitize.enable_compile_cache(args.compile_cache)
 
     arch = get_arch(args.arch)
     if arch.family == "lm":

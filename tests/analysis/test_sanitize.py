@@ -5,6 +5,10 @@ checked-in ``tools/compile_budgets.json``: the warm counts must EQUAL the
 budget (a warm compile is a recompile regression; a loose budget is
 stale), the cold counts must fit under ``cold_max``.
 """
+import json
+import os
+from pathlib import Path
+
 import numpy as np
 import pytest
 
@@ -187,3 +191,77 @@ def test_flush_updates_compile_budget(small_engine):
     with sanitize.count_compiles() as warm:
         engine.flush_updates()
     sanitize.assert_compiles_within("flush_updates", cold=cold.count, warm=warm.count)
+
+
+# ---------------------------------------------------------------------------
+# persistent compilation cache (cold-boot budget)
+# ---------------------------------------------------------------------------
+
+_COLD_BOOT = """
+import json
+import os
+
+os.environ.setdefault("REPRO_COMPILE_CACHE", {cache!r})
+import numpy as np
+from repro.analysis import sanitize
+
+# {how}: the dir flag and the env fallback are the same surface serve.py
+# exposes via --compile-cache / REPRO_COMPILE_CACHE
+assert sanitize.enable_compile_cache({arg}) is not None
+
+from repro import knn
+from repro.core.reference import knn_index_cons_plus
+from repro.graph.generators import pick_objects, road_network
+
+g = road_network(8, 8, seed=3)
+objects = pick_objects(g.n, 0.2, seed=3)
+bn = knn.build_bngraph(g)
+idx = knn_index_cons_plus(bn, objects, k=4)
+engine = knn.QueryEngine.from_index(idx, objects, bn=bn)
+obj_set = set(int(v) for v in np.asarray(objects).ravel())
+ins = [v for v in range(g.n) if v not in obj_set][:4]
+with sanitize.count_compiles() as c:
+    engine.query_batch(np.arange(32, dtype=np.int32))
+    for v in ins:
+        engine.stage_insert(v)
+    engine.flush_updates()
+print(json.dumps({{"count": c.count, "uncached": c.uncached}}))
+"""
+
+
+def test_compile_cache_cold_boot_budget(tmp_path, devices_subprocess):
+    """A second process booting over a warm persistent cache dir must do
+    no real compiles: its uncached count (backend compiles minus cache
+    hits) must fit the *warm* serving budgets — a cold boot that recompiles
+    is exactly the regression the cache exists to prevent."""
+    cache = str(tmp_path / "xla-cache")
+    first = json.loads(
+        devices_subprocess(
+            _COLD_BOOT.format(cache=cache, arg=repr(cache), how="dir flag"),
+            n_devices=1,
+        )
+    )
+    # the cold process really compiled, and every program landed in the dir
+    assert first["uncached"] > 0
+    assert any(os.scandir(cache))
+    second = json.loads(
+        devices_subprocess(
+            _COLD_BOOT.format(cache=cache, arg=None, how="env fallback"),
+            n_devices=1,
+        )
+    )
+    budgets = json.loads(
+        (Path(__file__).parents[2] / "tools" / "compile_budgets.json").read_text()
+    )
+    warm_budget = (
+        budgets["query_batch"]["warm"] + budgets["flush_updates"]["warm"]
+    )
+    assert second["uncached"] <= warm_budget, (
+        f"cold boot over a warm cache recompiled "
+        f"{second['uncached']} programs (budget {warm_budget})"
+    )
+
+
+def test_enable_compile_cache_noop_without_path(monkeypatch):
+    monkeypatch.delenv("REPRO_COMPILE_CACHE", raising=False)
+    assert sanitize.enable_compile_cache(None) is None

@@ -1,0 +1,259 @@
+"""Collective halo exchange: device-resident cross-shard repair/frontier.
+
+The sharded engine's multi-shard flush can run its halo two ways —
+``halo = "host"`` routes neighbor rows through host set algebra and
+``_fetch_rows``/``_fetch_send`` readbacks, ``halo = "collective"`` (the
+default) moves the same rows shard-to-shard with capacity-padded
+``all_gather`` multicasts and expands receiver sets on device. The contract
+is *exact*: both modes (and the scalar oracle) land bit-identical tables at
+every flush, the device receiver-set expansion equals the host CSR set
+algebra as sets, and the collective path never calls the routed host
+fetchers (monkeypatch-enforced) nor scales its host<->device transfer count
+with the halo size (transfer-guard). Overflow past ``halo_capacity`` must
+degrade to the routed path, not to wrong answers.
+"""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro import knn
+from repro.analysis import sanitize
+from repro.core.reference import knn_index_cons_plus
+from repro.core.sharded import ShardedQueryEngine
+from repro.graph.generators import pick_objects, road_network
+
+DEVICES = len(jax.devices())
+SHARD_COUNTS = [s for s in (1, 2, 4, 8) if s <= DEVICES]
+
+
+def _setup(grid=12, mu=0.15, k=6, seed=0, shards=1):
+    g = road_network(grid, grid, seed=seed)
+    objects = pick_objects(g.n, mu, seed=seed)
+    bn = knn.build_bngraph(g)
+    idx = knn_index_cons_plus(bn, objects, k)
+    plain = knn.QueryEngine.from_index(idx, objects, bn=bn)
+    sharded = ShardedQueryEngine.from_index(idx, objects, bn=bn, shards=shards)
+    return g, objects, bn, idx, plain, sharded
+
+
+def _tables_equal(a, b) -> bool:
+    ia, ib = a.to_index(), b.to_index()
+    return np.array_equal(ia.ids, ib.ids) and np.array_equal(ia.dists, ib.dists)
+
+
+def _boundary_actives(engine, n: int, rng, extra: int = 24) -> np.ndarray:
+    """Active sets the expansion tests use: every shard-boundary vertex
+    (first/last of each shard's range) plus random fill — the vertices
+    whose BNS neighborhoods straddle owners."""
+    starts = np.asarray(engine.routing.starts)
+    edges = np.concatenate([starts, starts - 1, [n - 1]])
+    edges = edges[(edges >= 0) & (edges < n)]
+    return np.unique(
+        np.concatenate([edges, rng.integers(0, n, extra)])
+    ).astype(np.int32)
+
+
+def _host_expand(engine, active: np.ndarray) -> np.ndarray:
+    """The host CSR set-algebra oracle, via the base-class expansion."""
+    engine._nbr_tables()
+    return knn.QueryEngine._expand_receivers(engine, active)
+
+
+@pytest.mark.parametrize("shards", SHARD_COUNTS)
+def test_device_expansion_matches_host_oracle(shards):
+    """Device receiver-set expansion == host set algebra, exactly, for
+    boundary-heavy active sets at every shard count."""
+    g, objects, bn, idx, plain, sharded = _setup(shards=shards)
+    rng = np.random.default_rng(7)
+    sharded._nbr_tables()
+    for _ in range(4):
+        active = _boundary_actives(sharded, g.n, rng)
+        got = sharded._expand_receivers_device(active)
+        want = _host_expand(sharded, active)
+        assert np.array_equal(got, want)
+        # single vertices too (the degenerate receiver set)
+        v = np.array([int(rng.integers(0, g.n))], np.int32)
+        assert np.array_equal(
+            sharded._expand_receivers_device(v), _host_expand(sharded, v)
+        )
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.tuples(
+    st.integers(min_value=6, max_value=13),
+    st.integers(min_value=0, max_value=10_000),
+    st.integers(min_value=1, max_value=5),
+))
+def test_device_expansion_property(p):
+    """Property: on continuous-weight road networks the device expansion is
+    set-identical to the host oracle for arbitrary active sets — including
+    shard-boundary sources — at a drawn shard count."""
+    grid, seed, k = p
+    rng = np.random.default_rng(seed)
+    shards = SHARD_COUNTS[int(rng.integers(0, len(SHARD_COUNTS)))]
+    g, objects, bn, idx, plain, sharded = _setup(
+        grid=grid, k=k, seed=seed, shards=shards
+    )
+    sharded._nbr_tables()
+    active = _boundary_actives(sharded, g.n, rng, extra=int(rng.integers(1, 48)))
+    assert np.array_equal(
+        sharded._expand_receivers_device(active), _host_expand(sharded, active)
+    )
+
+
+def _staged_script(engines, bn, idx, rng, steps, flush_p=0.3):
+    """Replay one random insert/delete script through every engine (and the
+    host oracle index), flushing at random points; yields after each flush.
+    The live object set is read off the first engine, so repeated scripts
+    (and boundary churn in between) compose."""
+    from repro.core.updates import delete_object, insert_object
+
+    mset = set(np.asarray(engines[0].objects).tolist())
+    n = engines[0].n
+    k = engines[0].k
+    for _ in range(steps):
+        u = int(rng.integers(0, n))
+        if u in mset:
+            if len(mset) <= k + 1:
+                continue
+            delete_object(bn, idx, u)
+            for e in engines:
+                e.stage_delete(u)
+            mset.discard(u)
+        else:
+            insert_object(bn, idx, u)
+            for e in engines:
+                e.stage_insert(u)
+            mset.add(u)
+        if rng.random() < flush_p:
+            for e in engines:
+                e.flush_updates()
+            yield
+    for e in engines:
+        e.flush_updates()
+    yield
+
+
+@pytest.mark.skipif(DEVICES < 2, reason="collective halo needs >= 2 devices")
+@pytest.mark.parametrize("shards", [s for s in SHARD_COUNTS if s > 1])
+def test_halo_three_way_bit_identical(shards):
+    """Scalar oracle, collective halo and host halo land bit-identical
+    tables at every flush of a shared staged script."""
+    g, objects, bn, idx, plain, coll = _setup(shards=shards, seed=2)
+    hosth = ShardedQueryEngine.from_index(idx, objects, bn=bn, shards=shards)
+    hosth.halo = "host"
+    assert coll.halo == "collective"
+    rng = np.random.default_rng(11)
+    for _ in _staged_script([plain, coll, hosth], bn, idx, rng, 30):
+        assert _tables_equal(plain, coll)
+        assert _tables_equal(plain, hosth)
+    assert coll.stats()["halo_rounds_collective"] > 0
+    assert coll.stats()["halo_fallbacks"] == 0
+
+
+@pytest.mark.skipif(DEVICES < 2, reason="collective halo needs >= 2 devices")
+def test_collective_flush_never_calls_host_fetchers():
+    """Traffic guard: with the routed fetchers booby-trapped, collective
+    flushes still complete — no host-mediated row exchange on this path."""
+    g, objects, bn, idx, plain, coll = _setup(shards=2, seed=3)
+
+    def boom(*a, **k):
+        raise AssertionError("routed host fetcher called on collective path")
+
+    coll._fetch_rows = boom
+    coll._fetch_send = boom
+    rng = np.random.default_rng(5)
+    for _ in _staged_script([plain, coll], bn, idx, rng, 24):
+        assert _tables_equal(plain, coll)
+    assert coll.stats()["halo_rounds_collective"] > 0
+    assert coll.stats()["halo_fallbacks"] == 0
+
+
+@pytest.mark.skipif(DEVICES < 2, reason="collective halo needs >= 2 devices")
+def test_halo_overflow_falls_back_to_routed_path():
+    """A capacity the halo cannot fit under must degrade to the routed host
+    path — counted in halo_fallbacks, never visible in the tables."""
+    g, objects, bn, idx, plain, coll = _setup(shards=2, seed=4)
+    coll.halo_capacity = 1  # below the 16-slot floor: every round overflows
+    rng = np.random.default_rng(6)
+    for _ in _staged_script([plain, coll], bn, idx, rng, 16):
+        assert _tables_equal(plain, coll)
+    assert coll.stats()["halo_fallbacks"] > 0
+    assert coll.stats()["halo_rounds_collective"] == 0
+
+
+@pytest.mark.skipif(DEVICES < 2, reason="collective halo needs >= 2 devices")
+def test_collective_transfer_count_flat_in_halo_size():
+    """Transfer guard: the collective flush's host<->device transfer count
+    is a small constant per exchange round (plan uploads + one changed-mask
+    readback) — it must not scale with the number of rows exchanged."""
+    g, objects, bn, idx, plain, coll = _setup(grid=14, shards=4, seed=8)
+    rng = np.random.default_rng(9)
+    per_flush = []
+    for steps in (4, 40):  # ~10x the staged rows -> ~same per-round count
+        before = coll.stats()
+        for u in rng.choice(
+            np.setdiff1d(np.arange(g.n), coll.objects), steps, replace=False
+        ):
+            coll.stage_insert(int(u))
+        with sanitize.count_transfers() as t:
+            coll.flush_updates()
+        after = coll.stats()
+        rounds = max(
+            1,
+            after["halo_rounds_collective"] - before["halo_rounds_collective"],
+        )
+        assert after["halo_fallbacks"] == before["halo_fallbacks"]
+        per_flush.append((t.h2d + t.d2h) / rounds)
+    # flat: the big batch may not cost more transfers per round (allow one
+    # extra for flush-constant overhead amortized over fewer rounds)
+    assert per_flush[1] <= per_flush[0] + 1.0
+
+
+@pytest.mark.skipif(DEVICES < 2, reason="collective halo needs >= 2 devices")
+@pytest.mark.parametrize("halo", ["collective", "host"])
+def test_updates_across_repartitioned_boundary(halo):
+    """Regression (flat-index audit): after a mid-script repartition moves a
+    shard boundary, deletes+inserts AT the moved boundary vertices must
+    still localize through the new epoch's ShardLayout row map — a stale
+    vertex->row cache would corrupt exactly these rows."""
+    from repro.core.updates import delete_object, insert_object
+
+    g, objects, bn, idx, plain, coll = _setup(shards=2, seed=12)
+    coll.halo = halo
+    rng = np.random.default_rng(13)
+    for _ in _staged_script([plain, coll], bn, idx, rng, 8):
+        pass
+    # move the boundary to a deliberately lopsided split
+    new_starts = (0, max(1, g.n // 3))
+    coll.repartition(np.asarray(new_starts, np.int64))
+    assert _tables_equal(plain, coll)
+    # churn exactly at the moved boundary: the vertex on each side
+    mset = set(int(v) for v in np.asarray(coll.objects))
+    for v in (new_starts[1] - 1, new_starts[1], new_starts[1] + 1):
+        if v in mset:
+            delete_object(bn, idx, v)
+            plain.stage_delete(v)
+            coll.stage_delete(v)
+            mset.discard(v)
+        else:
+            insert_object(bn, idx, v)
+            plain.stage_insert(v)
+            coll.stage_insert(v)
+            mset.add(v)
+    plain.flush_updates()
+    coll.flush_updates()
+    assert _tables_equal(plain, coll)
+    # and a trailing random script on the new layout stays exact
+    for _ in _staged_script([plain, coll], bn, idx, rng, 10):
+        assert _tables_equal(plain, coll)
+
+
+def test_halo_mode_validation():
+    g, objects, bn, idx, plain, sharded = _setup(shards=1)
+    with pytest.raises(knn.EngineConfigError):
+        sharded.halo = "quantum"
+    sharded.halo = "host"
+    assert sharded.halo == "host"

@@ -15,7 +15,10 @@ against the per-object ``insert_affected_set`` pipeline on every flush.
 When the device pool allows two shards, a sixth replay runs the sharded
 engine under an uneven ``PartitionPlan(ranges=...)`` boundary layout and is
 held to the same exact table equality — partition boundaries may never
-change results.
+change results — and a seventh runs the sharded engine with
+``halo = "host"``, pinning the collective all_gather halo exchange (the
+multi-shard default) byte-for-byte against the routed host-fetch halo on
+every flush.
 """
 import jax
 import numpy as np
@@ -70,6 +73,12 @@ def test_mixed_updates_match_rebuild(p):
             idx, obj0, bn=bn, plan=PartitionPlan(ranges=(0, max(1, n // 3)))
         )
         engines.append(uneven)
+        # the seventh party: the sharded engine with the routed host halo —
+        # the collective exchange (the multi-shard default above) and the
+        # host fetch path must stay byte-identical at every flush
+        hosth = ShardedQueryEngine.from_index(idx, obj0, bn=bn, shards=shards)
+        hosth.halo = "host"
+        engines.append(hosth)
     for _ in range(n_updates):
         u = int(rng.integers(0, n))
         r = rng.random()

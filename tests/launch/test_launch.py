@@ -121,3 +121,38 @@ def test_train_driver_resume(tmp_path):
     p2 = subprocess.run(env_cmd, capture_output=True, text=True, env=env, timeout=600)
     assert p2.returncode == 0, p2.stderr
     assert "resumed from step 6" in p2.stdout
+
+
+def test_serve_auto_ranges_drift_resplit():
+    """ranges=auto is a continuous drift detector: the initial skew triggers
+    a first re-split, then --hot-flip-round moves the zipf city to another
+    shard's range and the detector must fire a *second* repartition after
+    the cooldown — plus the collective halo serves every multi-shard flush
+    without falling back."""
+    import json
+    import os
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"{REPO}/src"
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    flip = 8
+    p = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve",
+         "--arch", "knn-index", "--smoke", "--grid", "10", "--k", "4",
+         "--batch", "128", "--ops", "2500", "--seed", "3",
+         "--partition", "shards=4,ranges=auto",
+         "--hot-shard", "0", "--hot-frac", "0.9",
+         "--hot-flip-round", str(flip)],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert p.returncode == 0, p.stderr
+    out = json.loads(p.stdout)
+    resplits = out["repartition_rounds"]
+    assert len(resplits) >= 2, resplits
+    assert resplits[0] < flip  # warmup skew caught before the flip
+    assert any(r >= flip for r in resplits)  # the moved city caught after
+    assert out["repartitioned_at_round"] == resplits[0]
+    assert out["errors"] == 0
+    assert out["engine"]["halo"] == "collective"
+    assert out["engine"]["halo_rounds_collective"] > 0
+    assert out["engine"]["halo_fallbacks"] == 0
